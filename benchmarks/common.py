@@ -1,0 +1,130 @@
+"""Shared benchmark machinery: the generate → decompose → sketch → join →
+estimate pipeline with timing, mirroring the paper's experimental setup."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import estimators, synthetic
+from repro.core.join import full_left_join, sketch_join
+from repro.core.sketch import build_sketch
+
+
+@dataclass
+class Trial:
+    true_mi: float
+    full_mi: float
+    sketch_mi: float
+    join_size: int
+    estimator: str
+
+
+def estimate(x, y, mask, x_disc, y_disc, method="auto", k=3) -> float:
+    return float(
+        estimators.estimate_mi(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+            x_discrete=x_disc, y_discrete=y_disc, method=method, k=k,
+        )
+    )
+
+
+# Tie-breaking perturbation (paper Section V-A): must survive float32 —
+# 1e-3 is well below inter-value gaps (>= 1 for integer-valued marginals)
+# yet far above f32 ulp at the data's magnitude.
+_PERTURB = 1e-3
+
+
+def run_sketch_trial(
+    pair: synthetic.GeneratedPair,
+    scheme: str,
+    sketch_method: str,
+    n: int,
+    rng: np.random.Generator,
+    estimator: str = "auto",
+    treat_x_cont: bool = False,
+    treat_y_cont: bool = False,
+    agg: str = "first",
+    compute_full: bool = False,
+) -> Trial:
+    """One end-to-end trial: decompose, sketch both sides, join, estimate.
+
+    ``treat_*_cont`` perturbs a discrete marginal with low-magnitude
+    gaussian noise (the paper's tie-breaking trick) so KSG-type
+    estimators apply.  ``compute_full`` additionally estimates MI on the
+    materialized join (O(N²) for KSG — only Table II needs it).
+    """
+    train, cand = synthetic.decompose(pair, scheme, rng)
+    x_disc = pair.x_is_discrete and not treat_x_cont
+    y_disc = pair.y_is_discrete and not treat_y_cont
+
+    yv = train["values"].astype(np.float64)
+    xv = cand["values"].astype(np.float64)
+    if treat_y_cont:
+        yv = yv + rng.normal(scale=_PERTURB, size=len(yv))
+    if treat_x_cont:
+        xv = xv + rng.normal(scale=_PERTURB, size=len(xv))
+    yv = yv.astype(np.float32) if not y_disc else train["values"]
+    xv = xv.astype(np.float32) if not x_disc else cand["values"]
+
+    st = build_sketch(train["key_hashes"], yv, n=n, method=sketch_method,
+                      side="train", value_is_discrete=y_disc, table_seed=1)
+    sc = build_sketch(cand["key_hashes"], xv, n=n, method=sketch_method,
+                      side="cand", agg=agg, value_is_discrete=x_disc,
+                      table_seed=2)
+    js = sketch_join(st, sc)
+    sketch_mi = estimate(
+        js.x.astype(np.float32) if not x_disc else js.x,
+        js.y.astype(np.float32) if not y_disc else js.y,
+        js.mask, x_disc, y_disc, estimator,
+    )
+
+    full_mi = float("nan")
+    if compute_full:
+        fj = full_left_join(train["key_hashes"], yv, cand["key_hashes"], xv,
+                            agg=agg)
+        full_mi = estimate(
+            fj.x.astype(np.float32) if not x_disc else fj.x,
+            fj.y.astype(np.float32) if not y_disc else fj.y,
+            fj.mask, x_disc, y_disc, estimator,
+        )
+    return Trial(pair.true_mi, full_mi, sketch_mi, js.size, estimator)
+
+
+def timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+def metrics(trials: list[Trial], target: str = "true") -> dict:
+    ref = np.array([t.true_mi if target == "true" else t.full_mi
+                    for t in trials])
+    est = np.array([t.sketch_mi for t in trials])
+    err = est - ref
+    out = {
+        "rmse": float(np.sqrt(np.mean(err**2))),
+        "bias": float(np.mean(err)),
+        "mse": float(np.mean(err**2)),
+        "avg_join": float(np.mean([t.join_size for t in trials])),
+    }
+    if len(trials) >= 5:
+        rho = _spearman(ref, est)
+        out["spearman"] = float(rho)
+    return out
+
+
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra**2).sum() * (rb**2).sum())
+    return float((ra * rb).sum() / denom) if denom else 0.0

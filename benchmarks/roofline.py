@@ -1,0 +1,316 @@
+"""Roofline analysis (deliverable g): per (arch × shape × mesh) terms.
+
+    compute term    = FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory term     = HBM bytes_per_device / 819 GB/s
+    collective term = ICI traffic_per_device / 50 GB/s/link
+
+Methodology (documented in EXPERIMENTS.md §Roofline):
+
+  * FLOPs / bytes come from an ANALYTIC cost model over the published
+    configs — XLA's ``cost_analysis()`` counts every while-loop body
+    exactly once (scan-over-layers, KV-chunk scans, SSD chunk scans all
+    undercount by their trip counts), so static HLO numbers are only a
+    structural cross-check.  The model below is per-device, assumes the
+    dry-run's sharding layout, and its formulas are in-line.
+  * Collective traffic uses ring formulas (all-gather / reduce-scatter
+    move (n-1)/n of the tensor per device; all-reduce twice that) on the
+    axes the dry-run actually shards over, cross-checked against the
+    collective census parsed from the compiled HLO.
+  * MODEL_FLOPS = 6·N_active·T (train) or 2·N_active·T (inference) plus
+    the causal-attention term; the ratio MODEL_FLOPS / HLO_FLOPs
+    captures remat overhead (full remat => ≈ 6/8) and dead compute.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import layer_layout
+from repro.models import model as M
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9       # B/s / chip
+ICI_BW = 50e9        # B/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer analytic FLOP/byte counts (forward, per token unless noted)
+# ---------------------------------------------------------------------------
+
+def _attn_dims(cfg):
+    if cfg.use_mla:
+        dqk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        dv = cfg.v_head_dim
+        qkv_params = (
+            cfg.d_model * cfg.num_heads * dqk              # wq
+            + cfg.d_model * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+            + cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_head_dim + dv)
+            + cfg.num_heads * dv * cfg.d_model             # wo
+        )
+        kv_bytes_per_tok = (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2
+    else:
+        dqk = dv = cfg.head_dim
+        qkv_params = cfg.d_model * cfg.head_dim * (
+            cfg.num_heads * 2 + cfg.num_kv_heads * 2
+        )
+        kv_bytes_per_tok = 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    return dqk, dv, qkv_params, kv_bytes_per_tok
+
+
+def _layer_linear_params(cfg, spec) -> tuple[float, float]:
+    """(total_params, active_params) of one layer's matmuls."""
+    if spec.mixer == "mamba":
+        mix = cfg.d_model * (2 * cfg.d_inner + 2 * cfg.ssm_groups
+                             * cfg.ssm_state + cfg.ssm_heads) \
+            + cfg.d_inner * cfg.d_model
+    else:
+        _, _, mix, _ = _attn_dims(cfg)
+    if spec.ffn == "moe":
+        e_params = 3 * cfg.d_model * cfg.moe_d_ff
+        total_ffn = cfg.num_experts * e_params \
+            + cfg.num_shared_experts * e_params \
+            + cfg.d_model * cfg.num_experts  # router
+        active_ffn = (cfg.top_k + cfg.num_shared_experts) * e_params \
+            + cfg.d_model * cfg.num_experts
+    else:
+        d_ff = cfg.d_ff
+        total_ffn = active_ffn = 3 * cfg.d_model * d_ff
+    return mix + total_ffn, mix + active_ffn
+
+
+def _attn_fwd_flops_per_seq(cfg, S: int, causal: bool = True) -> float:
+    """Score+value matmuls for ONE sequence through one attention layer."""
+    dqk, dv, _, _ = _attn_dims(cfg)
+    full = 2.0 * cfg.num_heads * S * S * (dqk + dv)
+    return full / 2 if causal else full
+
+
+def _ssd_fwd_flops_per_seq(cfg, S: int) -> float:
+    """SSD: intra-chunk quadratic + state path, one sequence, one layer."""
+    h, p, n, cl = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    intra = 2.0 * S * cl * h * (n + p)          # (C Bᵀ ⊙ L) and ·X
+    states = 4.0 * S * h * p * n                # B X accumulation + C·S_prev
+    return intra + states
+
+
+def cell_model(arch: str, shape: str, mesh: dict, *,
+               remat: bool = True, compression: bool = False,
+               policy: str = "tp") -> dict:
+    """Analytic per-device roofline terms for one cell under a sharding
+    policy ('tp' | 'zero3_dp' | 'ddp_zero1', see parallel/sharding.py)."""
+    cfg = M.get_config(arch)
+    info = M.SHAPES[shape]
+    kind, B, S = info["kind"], info["batch"], info["seq"]
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    data_ax = mesh.get("data", 1) * mesh.get("pod", 1)
+    model_ax = mesh.get("model", 1)
+    if policy != "tp" and kind == "train" and B % chips == 0:
+        data_ax, model_ax = chips, 1  # batch over every axis, no TP acts
+
+    layout = layer_layout(cfg)
+    n_attn = sum(1 for s in layout if s.mixer in ("attn", "mla"))
+    n_mamba = sum(1 for s in layout if s.mixer == "mamba")
+
+    N_total = M.count_params_analytic(cfg)
+    N_active = M.count_params_analytic(cfg, active_only=True)
+    Vp, D = cfg.padded_vocab_size, cfg.d_model
+
+    # ---------------- token / step geometry ----------------
+    if kind == "train":
+        T = B * S                      # tokens per step (global)
+        fwd_passes, bwd_passes = (2, 1) if remat else (1, 1)
+    elif kind == "prefill":
+        T = B * S
+        fwd_passes, bwd_passes = 1, 0
+    else:  # decode: one token per sequence
+        T = B
+        fwd_passes, bwd_passes = 1, 0
+
+    # ---------------- FLOPs ----------------
+    linear_fwd = 2.0 * N_active * T
+    attn_fwd = 0.0
+    ssd_fwd = 0.0
+    if kind in ("train", "prefill"):
+        attn_fwd = n_attn * B * _attn_fwd_flops_per_seq(cfg, S)
+        ssd_fwd = n_mamba * B * _ssd_fwd_flops_per_seq(cfg, S)
+    else:
+        # decode: scores against the S-token cache
+        dqk, dv, _, _ = _attn_dims(cfg)
+        attn_fwd = n_attn * B * 2.0 * cfg.num_heads * S * (dqk + dv)
+        ssd_fwd = n_mamba * B * 4.0 * cfg.ssm_heads * cfg.ssm_head_dim \
+            * cfg.ssm_state
+
+    fwd = linear_fwd + attn_fwd + ssd_fwd
+    model_flops = (6.0 * N_active * T + 3 * (attn_fwd + ssd_fwd)) \
+        if kind == "train" else fwd
+    hlo_flops = fwd * fwd_passes + 2 * fwd * bwd_passes  # replay + bwd
+    compute_s = hlo_flops / chips / PEAK_FLOPS
+
+    # ---------------- HBM bytes (per device) ----------------
+    B_loc = max(B // data_ax, 1)
+    if kind == "train":
+        # master params rw (f32) + int8 moments rw + gathered bf16 weights
+        # read on each of fwd/replay/bwd + remat stack w+r + residual
+        # stream (~4 rw per layer boundary).
+        state_div = 1 if policy == "ddp_zero1" else chips
+        opt_traffic = (8.0 + 4.0) * N_total / state_div
+        weight_reads = 3 * 2.0 * N_total / (1 if policy == "ddp_zero1"
+                                            else chips)
+        stack = 2.0 * len(layout) * B_loc * S * D * 2
+        act_stream = 8.0 * len(layout) * B_loc * S * D * 2 / model_ax \
+            + 6.0 * B_loc * S * Vp * 2 / model_ax
+        hbm = opt_traffic + weight_reads + stack + act_stream
+    elif kind == "prefill":
+        weight_reads = 2.0 * N_active / chips
+        act_stream = 6.0 * len(layout) * B_loc * S * D * 2 / model_ax
+        _, _, _, kvb = _attn_dims(cfg)
+        cache_write = n_attn * B_loc * S * kvb / model_ax
+        hbm = weight_reads + act_stream + cache_write
+    else:
+        # decode: weights + full cache read per token step
+        dense_frac = 1.0 if not cfg.num_experts else min(
+            1.0, (cfg.top_k + cfg.num_shared_experts) * B_loc
+            / max(cfg.num_experts, 1))
+        weight_reads = 2.0 * (N_active + dense_frac * (N_total - N_active)) \
+            / chips
+        _, _, _, kvb = _attn_dims(cfg)
+        seq_shards = model_ax if B_loc > 1 else chips
+        cache_read = n_attn * max(B // data_ax, 1) * S * kvb / seq_shards
+        ssm_state_rw = n_mamba * B_loc * cfg.ssm_heads * cfg.ssm_head_dim \
+            * cfg.ssm_state * 4 * 2 / model_ax
+        hbm = weight_reads + cache_read + ssm_state_rw
+    memory_s = hbm / HBM_BW
+
+    # ---------------- collective traffic (per device) ----------------
+    coll = 0.0
+    ring = lambda n: (n - 1) / max(n, 1)
+    if kind == "train":
+        if policy == "ddp_zero1":
+            # replicated weights; one bf16 gradient all-reduce per step
+            coll += 2 * 2.0 * N_total * ring(chips)
+        elif policy == "zero3_dp":
+            # ZeRO-3: AG bf16 weights per pass + RS f32 grads, all axes
+            coll += (fwd_passes + bwd_passes) * 2.0 * N_total * ring(chips)
+            coll += 4.0 * N_total * ring(chips)
+        else:
+            # FSDP: all-gather bf16 weights (fwd + replay + bwd) over
+            # data, reduce-scatter f32 grads once.
+            shard_bytes = 2.0 * N_total / chips
+            coll += 3 * shard_bytes * (data_ax - 1)  # AG: recv (n-1)·shard
+            coll += 2 * shard_bytes * (data_ax - 1)  # RS f32 (2× bf16 size)
+            # TP: 2 all-reduces/layer fwd + 2 bwd (+replay) of (B_loc,S,D)
+            ar = 2.0 * B_loc * S * D * 2 * ring(model_ax)
+            coll += (2 * fwd_passes + 2 * bwd_passes) * len(layout) * ar
+        if "pod" in mesh and policy == "tp":
+            grad_bytes = (1.0 if compression else 4.0) * N_total / (
+                mesh["data"] * mesh["model"])
+            coll += 2 * grad_bytes * ring(mesh["pod"])
+    elif kind == "prefill":
+        ar = 2.0 * B_loc * S * D * 2 * ring(model_ax)
+        coll += 2 * len(layout) * ar
+    else:
+        ar = 2.0 * B_loc * 1 * D * 2 * ring(model_ax)
+        coll += 2 * len(layout) * ar
+        # flash-decode merge: 3 psums of (B_loc, H, dh)
+        coll += n_attn * 3 * 2.0 * B_loc * cfg.num_heads \
+            * max(cfg.head_dim, cfg.v_head_dim) * 4 * ring(model_ax)
+    collective_s = coll / ICI_BW
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "kind": kind,
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_analytic": hlo_flops,
+        "useful_ratio": model_flops / hlo_flops,
+        "step_time_s": max(terms.values()),
+        "roofline_fraction": compute_s / max(terms.values()),
+        "hbm_bytes": hbm, "collective_bytes": coll,
+        "params": N_total, "active_params": N_active,
+    }
+
+
+def load_dryrun(arch: str, shape: str, mesh_tag: str, tag: str = "") -> dict | None:
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def full_table(mesh_tag: str = "16x16", tag: str = "") -> list[dict]:
+    mesh = {"data": 16, "model": 16} if mesh_tag == "16x16" else \
+        {"pod": 2, "data": 16, "model": 16}
+    rows = []
+    for arch in M.list_archs():
+        for shape in M.SHAPES:
+            ok, reason = M.shape_applicable(M.get_config(arch), shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "skipped", "reason": reason})
+                continue
+            row = cell_model(arch, shape, mesh)
+            dr = load_dryrun(arch, shape, mesh_tag, tag)
+            if dr and dr.get("status") == "ok":
+                row["dryrun"] = {
+                    "compile_s": dr["compile_s"],
+                    "hlo_flops_raw": dr["cost_analysis"].get("flops"),
+                    "collectives": {k: v["count"]
+                                    for k, v in dr["collectives"].items()},
+                    "census_traffic": sum(
+                        v["traffic_per_device"]
+                        for v in dr["collectives"].values()),
+                    "temp_bytes": dr["memory_analysis"].get(
+                        "temp_corrected_bytes",
+                        dr["memory_analysis"].get("temp_size_in_bytes")),
+                    "param_bytes_per_device": dr["param_bytes_per_device"],
+                }
+            row["status"] = "ok"
+            rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    rows = full_table(args.mesh, args.tag)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'bound':>7s} {'roofline%':>9s} {'useful%':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:24s} {r['shape']:12s} {'—':>8s} {'—':>8s} "
+                  f"{'—':>8s} {'skip':>7s}   ({r['reason'][:40]}...)")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['bottleneck']:>7s} "
+              f"{100*r['roofline_fraction']:8.1f}% "
+              f"{100*r['useful_ratio']:7.1f}%")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness: one function per paper table/figure + the
+beyond-paper scale benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import discovery_scale, paper_tables
+
+BENCHES = [
+    ("v_b1", paper_tables.bench_v_b1_full_join_estimators),
+    ("fig2", paper_tables.bench_fig2_trinomial),
+    ("fig3", paper_tables.bench_fig3_cdunif),
+    ("fig4", paper_tables.bench_fig4_distinct_values),
+    ("table1", paper_tables.bench_table1_sketch_comparison),
+    ("table2", paper_tables.bench_table2_corpus),
+    ("v_d", paper_tables.bench_v_d_performance),
+    ("discovery", discovery_scale.bench_discovery_throughput),
+    ("kernels", discovery_scale.bench_kernel_hot_spots),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced trial counts (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by prefix")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # keep the harness going, report at end
+            failures.append((name, repr(e)))
+            print(f"{name}/ERROR,0,{type(e).__name__}", flush=True)
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}", flush=True)
+        print(f"# {name} wall={time.time() - t0:.1f}s", flush=True)
+    if failures:
+        for name, err in failures:
+            print(f"# FAILED {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Discovery service example: index a repository, answer top-k MI
+queries, and show the estimator-dispatch behavior on mixed types —
+including a NON-monotone relationship that correlation-based discovery
+(the paper's Section I motivation) cannot see.
+
+    PYTHONPATH=src python examples/discovery_service.py
+"""
+
+import numpy as np
+
+from repro.core.discovery import SketchIndex
+from repro.core.sketch import build_sketch
+from repro.data.tables import Table
+
+rng = np.random.default_rng(3)
+N = 8000
+
+keys = np.array([f"id{i:06d}" for i in range(N)])
+y = rng.normal(size=N).astype(np.float32)
+
+repo = [
+    # numeric, monotone — both correlation and MI find this
+    Table("linear", {"k": keys, "v": (1.5 * y + 0.2 * rng.normal(size=N))
+                     .astype(np.float32)}),
+    # numeric, NON-monotone — Pearson ρ ≈ 0, MI sees it
+    Table("parabola", {"k": keys, "v": (y ** 2).astype(np.float32)}),
+    # categorical (strings) — correlation undefined, MLE/DC-KSG apply
+    Table("category", {"k": keys,
+                       "v": np.where(y > 0.5, "high",
+                                     np.where(y < -0.5, "low", "mid"))}),
+    # independent noise
+    Table("noise", {"k": keys, "v": rng.normal(size=N).astype(np.float32)}),
+    # disjoint keys — never joinable, must be filtered by join size
+    Table("disjoint", {"k": np.array([f"zz{i}" for i in range(N)]),
+                       "v": y.copy()}),
+]
+
+index = SketchIndex(n=512, method="tupsk")
+for t in repo:
+    index.add_table(t, "k")
+print(f"indexed {len(index)} candidate columns from {len(repo)} tables")
+
+base = Table("base", {"k": keys, "target": y})
+train_sk = build_sketch(base["k"].key_codes(), base["target"].value_array(),
+                        n=512, method="tupsk", side="train",
+                        value_is_discrete=False)
+
+print("\ntop matches by estimated MI (no join materialized):")
+for meta, mi, join in index.query(train_sk, top_k=5):
+    pearson = "n/a"
+    for t in repo:
+        if t.name == meta.table and not t[meta.value_column].is_discrete:
+            pearson = f"{np.corrcoef(t[meta.value_column].data[:N], y)[0,1]:+.2f}"
+    print(f"  MI={mi:5.2f}  join={join:4d}  ρ={pearson:>6s}   "
+          f"{meta.table}.{meta.value_column}")
+
+print("\nnote: 'parabola' ranks high on MI with ρ≈0 — the relationship "
+      "correlation-based discovery misses (paper Section I).")

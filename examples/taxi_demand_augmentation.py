@@ -1,0 +1,130 @@
+"""The paper's Example 1, end to end: relational data augmentation for
+taxi-demand prediction.
+
+A base table (date×zone → NumTrips) is enriched by searching a
+repository of candidate tables with MI sketches — weather (joinable on
+date, genuinely predictive), demographics (joinable on zone, predictive,
+NONMONOTONE — correlation-based discovery misses it, Section I), and a
+pile of joinable-but-irrelevant tables.  The discovered features feed a
+small JAX regression model; test MAE with vs without augmentation is
+the payoff the paper promises.
+
+    PYTHONPATH=src python examples/taxi_demand_augmentation.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.discovery import SketchIndex
+from repro.data.pipeline import AugmentedTabularPipeline
+from repro.data.tables import Table
+
+rng = np.random.default_rng(7)
+
+# ---------------------------------------------------------------------------
+# Synthesize the scenario of Figure 1.
+# ---------------------------------------------------------------------------
+N_DAYS, N_ZONES = 400, 60
+days = np.repeat(np.arange(N_DAYS), N_ZONES)
+zones = np.tile(np.arange(N_ZONES), N_DAYS)
+
+temp = 15 + 10 * np.sin(2 * np.pi * np.arange(N_DAYS) / 365) \
+    + rng.normal(0, 3, N_DAYS)                      # daily temperature
+rain = np.maximum(rng.normal(0, 1, N_DAYS), 0)      # daily rainfall
+population = rng.uniform(5_000, 120_000, N_ZONES)   # per-zone population
+
+# Demand: rain suppresses, temperature mildly helps, population acts
+# NON-monotonically (quiet suburbs and gridlocked centers both low).
+pop_effect = -((population - 60_000) / 30_000) ** 2
+trips = (
+    120
+    + 2.0 * temp[days]
+    - 25.0 * rain[days]
+    + 40.0 * pop_effect[zones]
+    + rng.normal(0, 8, N_DAYS * N_ZONES)
+).astype(np.float32)
+
+key = (days.astype(np.int64) * 1000 + zones).astype(np.int64)
+base = Table("taxi", {"trip_key": key.astype(np.float64),
+                      "num_trips": trips})
+
+repo: list[Table] = []
+repo.append(Table("weather", {
+    "trip_key": key.astype(np.float64),
+    "avg_temp": temp[days].astype(np.float32),
+    "rainfall": rain[days].astype(np.float32),
+}))
+repo.append(Table("demographics", {
+    "trip_key": key.astype(np.float64),
+    "population": population[zones].astype(np.float32),
+}))
+for j in range(12):  # joinable but irrelevant tables
+    repo.append(Table(f"opendata_{j:02d}", {
+        "trip_key": key.astype(np.float64),
+        f"col_{j}": rng.normal(size=len(key)).astype(np.float32),
+    }))
+
+# ---------------------------------------------------------------------------
+# 1. Discovery: rank every candidate column by sketch-estimated MI.
+# ---------------------------------------------------------------------------
+index = SketchIndex(n=512, method="tupsk", agg="avg")
+tables = {}
+for t in repo:
+    index.add_table(t, "trip_key")
+    for col in t.column_names():
+        if col != "trip_key":
+            tables[(t.name, col)] = (t["trip_key"].key_codes(),
+                                     t[col].value_array())
+
+pipe = AugmentedTabularPipeline(index=index, tables=tables, top_k=3,
+                                min_join=64)
+x_aug, names = pipe.build(base["trip_key"].key_codes(),
+                          base["num_trips"].value_array())
+print("discovered features (by estimated MI):")
+for n in names:
+    print("   ", n)
+
+# ---------------------------------------------------------------------------
+# 2. Train a small JAX regressor with and without the augmentation.
+# ---------------------------------------------------------------------------
+def train_regressor(x: np.ndarray, y: np.ndarray, steps=400, lr=1e-2):
+    n, d = x.shape
+    split = int(0.8 * n)
+    xtr, ytr = jnp.asarray(x[:split]), jnp.asarray(y[:split])
+    xte, yte = jnp.asarray(x[split:]), jnp.asarray(y[split:])
+    params = {"w1": jnp.zeros((d, 32)), "b1": jnp.zeros(32),
+              "w2": jnp.zeros((32, 1)), "b2": jnp.zeros(1)}
+    params = jax.tree_util.tree_map(
+        lambda p: p + 0.1 * jax.random.normal(
+            jax.random.key(p.size), p.shape), params)
+
+    def pred(p, x):
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        return (h @ p["w2"] + p["b2"])[:, 0]
+
+    def loss(p):
+        return jnp.mean(jnp.abs(pred(p, xtr) - ytr))
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(loss)(p)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return float(jnp.mean(jnp.abs(pred(params, xte) - yte)))
+
+y = trips
+y_std = (y - y.mean()) / y.std()
+baseline_feats = np.stack([days / N_DAYS, zones / N_ZONES], axis=1) \
+    .astype(np.float32)
+mae_base = train_regressor(baseline_feats, y_std)
+mae_aug = train_regressor(
+    np.concatenate([baseline_feats, x_aug], axis=1), y_std)
+
+print(f"\ntest MAE without augmentation : {mae_base:.4f} (standardized)")
+print(f"test MAE with augmentation    : {mae_aug:.4f}")
+print(f"improvement                   : {100 * (1 - mae_aug / mae_base):.1f}%")
+assert mae_aug < mae_base, "augmentation should improve the model"

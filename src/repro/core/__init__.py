@@ -1,0 +1,34 @@
+"""The paper's primary contribution: sketch-based mutual-information
+estimation over joins, for relational data augmentation / discovery.
+
+Layers:
+  hashing     — murmur3 / Fibonacci coordinated-sampling primitives
+  aggregate   — featurization (AGG) for many-to-many join keys
+  sketch      — TUPSK (paper), LV2SK/PRISK baselines, INDSK/CSK baselines
+  join        — sketch join (host + jit) and full-join reference
+  estimators  — MLE / KSG / MixedKSG / DC-KSG, masked + jit-able
+  synthetic   — Trinomial/CDUnif benchmark with analytic true MI
+  discovery   — batched, mesh-sharded discovery queries (top-k by MI)
+"""
+
+from repro.core import aggregate, estimators, hashing, join, sketch, synthetic
+from repro.core.discovery import SketchIndex
+from repro.core.estimators import estimate_mi
+from repro.core.join import full_left_join, sketch_join
+from repro.core.sketch import SKETCH_METHODS, Sketch, build_sketch
+
+__all__ = [
+    "aggregate",
+    "estimators",
+    "hashing",
+    "join",
+    "sketch",
+    "synthetic",
+    "SketchIndex",
+    "estimate_mi",
+    "full_left_join",
+    "sketch_join",
+    "SKETCH_METHODS",
+    "Sketch",
+    "build_sketch",
+]

@@ -1,0 +1,223 @@
+"""Hashing primitives for coordinated sampling sketches.
+
+The paper (Santos, Korn, Freire 2024) prescribes:
+
+  * ``h``  — a collision-free hash mapping arbitrary objects to integers.
+    The paper uses 32-bit MurmurHash3.  We implement MurmurHash3 (x86,
+    32-bit) twice: a pure-Python byte-string version used at ingestion
+    time for string keys, and a vectorized JAX version operating on
+    uint32 words used inside jit-compiled sketch construction and in the
+    Pallas kernel (``repro.kernels.murmur3``).
+  * ``h_u`` — a hash mapping integers uniformly onto the unit range
+    [0, 1).  The paper uses Fibonacci hashing (Knuth multiplicative
+    hashing).  We keep the multiplicative result as a raw uint32 so that
+    min-value selection can be performed in exact integer arithmetic
+    (float conversion would lose the low-order bits and create spurious
+    ties); ``to_unit`` converts to float only when an actual uniform
+    variate is required.
+
+All JAX functions here operate on uint32 and rely on JAX's wrapping
+(modular) unsigned integer arithmetic, so no x64 mode is required.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "murmur3_32",
+    "murmur3_32_np",
+    "fibonacci32_np",
+    "murmur3_bytes",
+    "fibonacci32",
+    "to_unit",
+    "hash_strings",
+    "occurrence_index",
+    "combine_key_occurrence",
+]
+
+# MurmurHash3 x86/32 constants.
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+_MIX1 = np.uint32(0x85EBCA6B)
+_MIX2 = np.uint32(0xC2B2AE35)
+_M5 = np.uint32(5)
+_N = np.uint32(0xE6546B64)
+
+# Knuth's multiplicative constant: floor(2^32 / phi), odd.
+_FIB32 = np.uint32(0x9E3779B9)
+
+
+def _rotl32(x: jax.Array, r: int) -> jax.Array:
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def murmur3_32(key: jax.Array, seed: jax.Array | int = 0) -> jax.Array:
+    """Vectorized MurmurHash3 (x86, 32-bit) of a single uint32 word.
+
+    Matches the reference implementation for a 4-byte little-endian
+    input.  ``key`` may be any integer dtype; it is treated as a uint32
+    word.  ``seed`` may be a scalar or an array broadcastable to ``key``
+    (per-element seeds are how we combine a key hash with an occurrence
+    index, see :func:`combine_key_occurrence`).
+    """
+    k = jnp.asarray(key).astype(jnp.uint32)
+    h = jnp.broadcast_to(jnp.asarray(seed).astype(jnp.uint32), k.shape)
+
+    k = k * _C1
+    k = _rotl32(k, 15)
+    k = k * _C2
+
+    h = h ^ k
+    h = _rotl32(h, 13)
+    h = h * _M5 + _N
+
+    # Finalization (length = 4 bytes).
+    h = h ^ np.uint32(4)
+    h = h ^ (h >> np.uint32(16))
+    h = h * _MIX1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _MIX2
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def fibonacci32(h: jax.Array) -> jax.Array:
+    """Fibonacci (multiplicative) hashing: uint32 -> uint32.
+
+    The result, interpreted as an integer, is order-isomorphic to the
+    unit-range value ``result / 2**32``; sketches select minima directly
+    on the uint32 to avoid float tie artifacts.
+    """
+    return jnp.asarray(h).astype(jnp.uint32) * _FIB32
+
+
+def to_unit(h: jax.Array) -> jax.Array:
+    """Map a uint32 hash to a float32 in [0, 1)."""
+    return jnp.asarray(h).astype(jnp.float32) * np.float32(2.0**-32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy / python) versions used at table-ingestion time.
+# ---------------------------------------------------------------------------
+
+def murmur3_32_np(key: np.ndarray, seed: np.ndarray | int = 0) -> np.ndarray:
+    """Numpy twin of :func:`murmur3_32` (bit-exact) for the ingestion path."""
+    with np.errstate(over="ignore"):
+        k = np.asarray(key).astype(np.uint32)
+        h = np.broadcast_to(np.asarray(seed).astype(np.uint32), k.shape).copy()
+        k = k * _C1
+        k = (k << np.uint32(15)) | (k >> np.uint32(17))
+        k = k * _C2
+        h ^= k
+        h = (h << np.uint32(13)) | (h >> np.uint32(19))
+        h = h * _M5 + _N
+        h ^= np.uint32(4)
+        h ^= h >> np.uint32(16)
+        h = h * _MIX1
+        h ^= h >> np.uint32(13)
+        h = h * _MIX2
+        h ^= h >> np.uint32(16)
+    return h
+
+
+def fibonacci32_np(h: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        return np.asarray(h).astype(np.uint32) * _FIB32
+
+
+def murmur3_bytes(data: bytes, seed: int = 0) -> int:
+    """Reference MurmurHash3 (x86, 32-bit) over a byte string.
+
+    Used to map string join-key values to integers before they enter the
+    JAX pipeline.  Pure Python, but only evaluated once per *distinct*
+    string (see :func:`hash_strings`).
+    """
+    c1, c2 = 0xCC9E2D51, 0x1B873593
+    length = len(data)
+    h = seed & 0xFFFFFFFF
+    rounded = length & ~0x3
+    for i in range(0, rounded, 4):
+        k = int.from_bytes(data[i : i + 4], "little")
+        k = (k * c1) & 0xFFFFFFFF
+        k = ((k << 15) | (k >> 17)) & 0xFFFFFFFF
+        k = (k * c2) & 0xFFFFFFFF
+        h ^= k
+        h = ((h << 13) | (h >> 19)) & 0xFFFFFFFF
+        h = (h * 5 + 0xE6546B64) & 0xFFFFFFFF
+    k = 0
+    tail = data[rounded:]
+    if len(tail) >= 3:
+        k ^= tail[2] << 16
+    if len(tail) >= 2:
+        k ^= tail[1] << 8
+    if len(tail) >= 1:
+        k ^= tail[0]
+        k = (k * c1) & 0xFFFFFFFF
+        k = ((k << 15) | (k >> 17)) & 0xFFFFFFFF
+        k = (k * c2) & 0xFFFFFFFF
+        h ^= k
+    h ^= length
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
+def hash_strings(values: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Hash an array of python strings/bytes to uint32 codes.
+
+    Hashes each *distinct* value once and broadcasts through an inverse
+    index, so ingestion cost is O(#distinct) python-level hashes plus
+    vectorized numpy.
+    """
+    values = np.asarray(values)
+    uniq, inv = np.unique(values, return_inverse=True)
+    codes = np.empty(len(uniq), dtype=np.uint32)
+    for i, v in enumerate(uniq):
+        b = v if isinstance(v, bytes) else str(v).encode("utf-8")
+        codes[i] = murmur3_bytes(b, seed)
+    return codes[inv]
+
+
+def occurrence_index(keys: np.ndarray) -> np.ndarray:
+    """1-based occurrence index j of each key value, in sequence order.
+
+    Row i receives j if ``keys[i]`` is the j-th appearance of that value
+    scanning the table top-to-bottom.  This is the <k, j> tuple-key
+    derivation at the heart of TUPSK: every (k, j) pair uniquely
+    identifies a row, making row-inclusion probabilities uniform.
+
+    Vectorized via a stable argsort (single pass, O(N log N)).
+    """
+    keys = np.asarray(keys)
+    n = len(keys)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    order = np.argsort(keys, kind="stable")
+    sorted_keys = keys[order]
+    new_run = np.empty(n, dtype=bool)
+    new_run[0] = True
+    new_run[1:] = sorted_keys[1:] != sorted_keys[:-1]
+    run_id = np.cumsum(new_run) - 1
+    run_start = np.flatnonzero(new_run)
+    j_sorted = np.arange(n, dtype=np.int64) - run_start[run_id] + 1
+    j = np.empty(n, dtype=np.int64)
+    j[order] = j_sorted
+    return j
+
+
+def combine_key_occurrence(key_hash: jax.Array, j: jax.Array) -> jax.Array:
+    """Hash of the derived tuple-key <k, j> used by TUPSK.
+
+    We re-hash the occurrence index with the key hash as the murmur seed:
+    ``murmur3_32(j, seed=h(k))``.  For j == 1 this is a deterministic
+    function of h(k) shared by the aggregated candidate-side sketch,
+    which is exactly the coordination property TUPSK relies on.
+    """
+    return murmur3_32(jnp.asarray(j).astype(jnp.uint32), seed=key_hash)

@@ -1,0 +1,134 @@
+"""Sketch joins and the full-join reference.
+
+The sketch join recovers a sample of the left-outer join
+``T_train ⋈ T_aug`` by matching hashed keys between a train-side sketch
+(values = target Y, repeated keys preserved) and a candidate-side sketch
+(values = feature X, keys unique after aggregation).
+
+Two implementations:
+
+  * :func:`sketch_join` — host numpy, used by the benchmark harness.
+  * :func:`sketch_join_jax` — fixed-shape jit/vmap-friendly JAX used by
+    the batched discovery engine (``repro.core.discovery``): a discovery
+    query joins ONE train sketch against THOUSANDS of stacked candidate
+    sketches in a single compiled program, sharded over the device mesh.
+
+Both return fixed-capacity padded (x, y, mask) triples sized by the
+train sketch capacity (a many-to-one join emits at most one output row
+per train-sketch row).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import aggregate_by_key, output_is_discrete
+from repro.core.sketch import Sketch
+
+__all__ = ["JoinSample", "sketch_join", "sketch_join_jax", "full_left_join"]
+
+
+@dataclass
+class JoinSample:
+    """Padded sample of the join: pairs (x=feature, y=target)."""
+
+    x: np.ndarray
+    y: np.ndarray
+    mask: np.ndarray
+    x_is_discrete: bool
+    y_is_discrete: bool
+
+    @property
+    def size(self) -> int:
+        return int(np.asarray(self.mask).sum())
+
+
+def sketch_join(train: Sketch, cand: Sketch) -> JoinSample:
+    """Join two sketches on their hashed keys (host-side)."""
+    if cand.side != "cand":
+        raise ValueError("right operand must be a candidate-side sketch")
+    tk, tv, tm = train.key_hashes, train.values, train.mask
+    ck, cv, cm = cand.key_hashes, cand.values, cand.mask
+
+    cvalid = np.flatnonzero(cm)
+    order = np.argsort(ck[cvalid], kind="stable")
+    ck_sorted = ck[cvalid][order]
+    cv_sorted = cv[cvalid][order]
+
+    pos = np.searchsorted(ck_sorted, tk)
+    pos_c = np.clip(pos, 0, max(len(ck_sorted) - 1, 0))
+    matched = tm & (len(ck_sorted) > 0)
+    if len(ck_sorted):
+        matched &= ck_sorted[pos_c] == tk
+
+    x = np.zeros(train.capacity, dtype=cv.dtype)
+    if len(ck_sorted):
+        x[matched] = cv_sorted[pos_c[matched]]
+    y = np.where(tm, tv, 0)
+    return JoinSample(x, y, matched, cand.value_is_discrete, train.value_is_discrete)
+
+
+def sketch_join_jax(
+    train_keys: jax.Array,
+    train_values: jax.Array,
+    train_mask: jax.Array,
+    cand_keys: jax.Array,
+    cand_values: jax.Array,
+    cand_mask: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape JAX sketch join; vmap over the candidate axis.
+
+    Candidates are sorted by (key, invalid-last) so that for any key
+    value present both as padding and as a valid entry, searchsorted's
+    left position lands on the valid one; the gathered mask then rejects
+    matches that landed on padding.  No dtype widening needed (x64-safe).
+    """
+    tk = train_keys.astype(jnp.uint32)
+    ck = cand_keys.astype(jnp.uint32)
+    inval = (~cand_mask).astype(jnp.int32)
+    order = jnp.lexsort((inval, ck))  # primary: key; secondary: valid first
+    ck_sorted = ck[order]
+    cv_sorted = cand_values[order]
+    cm_sorted = cand_mask[order]
+
+    pos = jnp.searchsorted(ck_sorted, tk)
+    pos_c = jnp.clip(pos, 0, ck_sorted.shape[0] - 1)
+    matched = train_mask & (ck_sorted[pos_c] == tk) & cm_sorted[pos_c]
+    x = jnp.where(matched, cv_sorted[pos_c], 0)
+    y = jnp.where(train_mask, train_values, 0)
+    return x, y, matched
+
+
+def full_left_join(
+    train_keys: np.ndarray,
+    train_values: np.ndarray,
+    cand_keys: np.ndarray,
+    cand_values: np.ndarray,
+    agg: str = "first",
+    cand_value_is_discrete: bool = False,
+) -> JoinSample:
+    """Reference: materialized LEFT JOIN (GROUP BY key, AGG) — the ground
+    truth the sketches approximate.  Rows whose key is absent from the
+    candidate table are dropped (paper Section III-A discards NULLs)."""
+    uk, uv = aggregate_by_key(np.asarray(cand_keys), np.asarray(cand_values), agg)
+    pos = np.searchsorted(uk, train_keys)
+    pos_c = np.clip(pos, 0, max(len(uk) - 1, 0))
+    matched = np.zeros(len(train_keys), dtype=bool)
+    if len(uk):
+        matched = uk[pos_c] == np.asarray(train_keys)
+    x = np.zeros(len(train_keys), dtype=uv.dtype)
+    if len(uk):
+        x[matched] = uv[pos_c[matched]]
+    y_is_disc = not np.issubdtype(np.asarray(train_values).dtype, np.number)
+    return JoinSample(
+        x,
+        np.asarray(train_values),
+        matched,
+        output_is_discrete(agg, not np.issubdtype(np.asarray(cand_values).dtype, np.number)),
+        y_is_disc,
+    )

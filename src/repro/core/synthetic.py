@@ -1,0 +1,196 @@
+"""Synthetic benchmark with analytically known mutual information
+(paper Section V-A).
+
+Two post-join (X, Y) distributions:
+
+  * ``Trinomial`` — (X, Y) are the first two components of a
+    Multinomial(m, <p1, p2>).  Parameters (p1, p2) are *selected* via the
+    bivariate-normal CLT approximation to hit a target MI, but the true
+    MI reported is computed exactly from the open-form trinomial pmf.
+  * ``CDUnif``    — X ~ U{0..m−1} discrete, Y | X ~ U[X, X+2] continuous;
+    I(X; Y) = ln m − (m−1) ln 2 / m  (natural log).
+
+and two decompositions into joinable tables:
+
+  * ``KeyInd``  — unique sequential keys (one-to-one join, key ⊥ data).
+  * ``KeyDep``  — the join key *equals* the X value (many-to-one join,
+    maximal key/feature dependence; key frequencies follow X's marginal).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+from numpy.random import Generator
+
+from repro.core import hashing
+
+__all__ = [
+    "GeneratedPair",
+    "trinomial_params_for_mi",
+    "true_trinomial_mi",
+    "gen_trinomial",
+    "gen_cdunif",
+    "cdunif_true_mi",
+    "decompose",
+]
+
+
+@dataclass
+class GeneratedPair:
+    """A generated post-join (X, Y) sample plus its exact MI in nats."""
+
+    x: np.ndarray
+    y: np.ndarray
+    true_mi: float
+    x_is_discrete: bool
+    y_is_discrete: bool
+    params: dict
+
+
+def trinomial_params_for_mi(i_true: float, rng: Generator) -> tuple[float, float]:
+    """Select (p1, p2) so the CLT-equivalent bivariate normal has MI
+    ``i_true`` (paper's parameter-selection algorithm, Section V-A)."""
+    r = np.sqrt(1.0 - np.exp(-2.0 * i_true))
+    for _ in range(1000):
+        p1 = rng.uniform(0.15, 0.85)
+        # |r| = p1 p2 / sqrt(p1(1-p1) p2(1-p2))  =>  closed form for p2.
+        r2 = r * r
+        p2 = r2 * (1.0 - p1) / (p1 + r2 * (1.0 - p1))
+        if 0.15 <= p2 <= 0.85 and p1 + p2 < 1.0:
+            return p1, p2
+    raise RuntimeError(f"could not find trinomial params for MI={i_true}")
+
+
+_LOGFACT = np.zeros(1, dtype=np.float64)  # ln k! lookup, grown on demand
+
+
+def _logfact(z: np.ndarray) -> np.ndarray:
+    """Exact ln(z!) for integer z via a cached cumulative-log table."""
+    return _LOGFACT[np.asarray(z, dtype=np.int64)]
+
+
+def _ensure_logfact(upto: int) -> None:
+    global _LOGFACT
+    if len(_LOGFACT) <= upto:
+        _LOGFACT = np.concatenate(
+            [[0.0], np.cumsum(np.log(np.arange(1, upto + 1, dtype=np.float64)))]
+        )
+
+
+def true_trinomial_mi(m: int, p1: float, p2: float) -> float:
+    """Exact I(X;Y) for (X,Y) ~ first two coords of Multinomial(m, p1, p2).
+
+    Open-form: H(X) + H(Y) − H(X, Y) with X ~ Bin(m, p1), Y ~ Bin(m, p2),
+    and the joint trinomial pmf evaluated in log-space with exact
+    log-factorials.  Grid is O(m²) ≈ 1M entries at m=1024 — vectorized.
+    """
+    _ensure_logfact(m + 1)
+    p3 = 1.0 - p1 - p2
+    xs = np.arange(m + 1, dtype=np.int64)
+
+    def entropy_binomial(p: float) -> float:
+        logpmf = (
+            _logfact(m)
+            - _logfact(xs)
+            - _logfact(m - xs)
+            + xs * np.log(p)
+            + (m - xs) * np.log1p(-p)
+        )
+        pmf = np.exp(logpmf)
+        return float(-np.sum(pmf * logpmf))
+
+    x_grid, y_grid = np.meshgrid(xs, xs, indexing="ij")
+    valid = (x_grid + y_grid) <= m
+    z_grid = np.where(valid, m - x_grid - y_grid, 0)
+    logpmf_joint = np.where(
+        valid,
+        _logfact(m)
+        - _logfact(x_grid)
+        - _logfact(y_grid)
+        - _logfact(z_grid)
+        + x_grid * np.log(p1)
+        + y_grid * np.log(p2)
+        + z_grid * np.log(p3),
+        -np.inf,
+    )
+    pmf = np.where(valid, np.exp(logpmf_joint), 0.0)
+    safe_log = np.where(valid, logpmf_joint, 0.0)  # avoid 0 * -inf
+    h_joint = float(-np.sum(pmf * safe_log))
+    return entropy_binomial(p1) + entropy_binomial(p2) - h_joint
+
+
+def gen_trinomial(
+    n_rows: int, m: int, i_target: float, rng: Generator
+) -> GeneratedPair:
+    p1, p2 = trinomial_params_for_mi(i_target, rng)
+    sample = rng.multinomial(m, [p1, p2, 1.0 - p1 - p2], size=n_rows)
+    x, y = sample[:, 0].astype(np.int64), sample[:, 1].astype(np.int64)
+    mi = true_trinomial_mi(m, p1, p2)
+    return GeneratedPair(
+        x, y, mi, True, True, {"dist": "trinomial", "m": m, "p1": p1, "p2": p2}
+    )
+
+
+def cdunif_true_mi(m: int) -> float:
+    return float(np.log(m) - (m - 1) * np.log(2.0) / m)
+
+
+def gen_cdunif(n_rows: int, m: int, rng: Generator) -> GeneratedPair:
+    x = rng.integers(0, m, size=n_rows).astype(np.int64)
+    y = rng.uniform(x, x + 2.0).astype(np.float32)
+    return GeneratedPair(
+        x, y, cdunif_true_mi(m), True, False, {"dist": "cdunif", "m": m}
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decomposition into joinable tables (KeyInd / KeyDep).
+# ---------------------------------------------------------------------------
+
+def decompose(
+    pair: GeneratedPair, scheme: str, rng: Generator
+) -> tuple[dict, dict]:
+    """Split a post-join (X, Y) sample into T_train[K_Y, Y] and
+    T_cand[K_X, X] such that the left join exactly recovers (X, Y).
+
+    Returns (train, cand) dicts with uint32 ``key_hashes`` plus raw
+    ``values`` arrays ready for :func:`repro.core.sketch.build_sketch`.
+    """
+    n = len(pair.x)
+    if scheme == "keyind":
+        raw_keys = np.arange(n, dtype=np.uint32)
+        # Shuffle the candidate table so physical order carries no signal.
+        perm = rng.permutation(n)
+        train_keys, cand_keys = raw_keys, raw_keys[perm]
+        cand_vals = pair.x[perm]
+    elif scheme == "keydep":
+        if not pair.x_is_discrete:
+            raise ValueError("KeyDep requires a discrete X (paper Section V-A)")
+        raw_keys = pair.x.astype(np.uint32)
+        train_keys = raw_keys
+        # Candidate table: one row per occurrence; aggregation collapses
+        # them (all equal) — many-to-one after GROUP BY.
+        perm = rng.permutation(n)
+        cand_keys = raw_keys[perm]
+        cand_vals = pair.x[perm]
+    else:
+        raise ValueError(f"unknown decomposition {scheme!r}")
+
+    key_seed = 7
+    train = {
+        "key_hashes": np.asarray(
+            hashing.murmur3_32_np(train_keys, seed=np.uint32(key_seed))
+        ),
+        "values": pair.y,
+        "value_is_discrete": pair.y_is_discrete,
+    }
+    cand = {
+        "key_hashes": np.asarray(
+            hashing.murmur3_32_np(cand_keys, seed=np.uint32(key_seed))
+        ),
+        "values": cand_vals,
+        "value_is_discrete": pair.x_is_discrete,
+    }
+    return train, cand

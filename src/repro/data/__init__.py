@@ -1,0 +1,6 @@
+"""Data substrate: columnar tables, relational augmentation, and the
+training-token pipeline."""
+
+from repro.data.tables import Column, Table, ColumnType
+
+__all__ = ["Column", "Table", "ColumnType"]

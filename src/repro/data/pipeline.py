@@ -1,0 +1,173 @@
+"""Training data pipelines.
+
+Two sources:
+
+  * :class:`TokenPipeline` — deterministic synthetic LM stream.  Batches
+    are a pure function of (seed, step) via the same murmur3 machinery
+    the sketches use, so (a) restarts resume exactly (the iterator state
+    is a single integer, saved in every checkpoint), and (b) each data
+    host materializes only its shard: ``host_slice`` carves the global
+    batch by (host_id, num_hosts) with no inter-host coordination.
+    Tokens follow a noisy affine-recurrence over the vocab so models
+    have real structure to learn (loss decreases measurably within tens
+    of steps — used by the end-to-end example).
+
+  * :class:`AugmentedTabularPipeline` — the paper's use case: a base
+    table is augmented with the top-k features discovered by MI sketches
+    (``repro.core.discovery``), and (features, target) minibatches are
+    served for model training.  This is the bridge between the paper's
+    discovery layer and the training framework.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hashing
+from repro.core.discovery import SketchIndex
+from repro.core.join import full_left_join
+from repro.core.sketch import build_sketch
+
+__all__ = ["TokenPipeline", "AugmentedTabularPipeline"]
+
+
+class TokenPipeline:
+    """Stateless-deterministic synthetic token batches for an arch/shape."""
+
+    def __init__(self, cfg: ModelConfig, *, batch: int, seq: int, seed: int = 0,
+                 num_hosts: int = 1, host_id: int = 0):
+        assert batch % num_hosts == 0, (batch, num_hosts)
+        self.cfg = cfg
+        self.global_batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.num_hosts = num_hosts
+        self.host_id = host_id
+        self.step = 0
+
+    # -- checkpointable iterator state ------------------------------------
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.step = int(state["step"])
+        assert int(state["seed"]) == self.seed, "pipeline seed mismatch"
+
+    # -- generation --------------------------------------------------------
+    def _tokens(self, step: int, rows: np.ndarray, seq: int) -> np.ndarray:
+        """Deterministic (step, row) -> token sequences with *learnable*
+        structure: a noisy affine Markov chain over the vocab.  With
+        probability 1/8 the next token is a hash-random jump, otherwise
+        tok_{t+1} = (a · tok_t + 1) mod V — so a model that learns the
+        affine map approaches H ≈ (1/8)·ln V, far below ln V."""
+        V = max(self.cfg.vocab_size - 1, 2)
+        a = 5
+        n = len(rows)
+        base = hashing.murmur3_32_np(
+            rows.astype(np.uint32), seed=np.uint32(self.seed ^ step)
+        )
+        toks = np.empty((n, seq), dtype=np.int64)
+        toks[:, 0] = base % V
+        for t in range(1, seq):
+            h = hashing.murmur3_32_np(
+                base ^ np.uint32(t), seed=np.uint32(self.seed)
+            )
+            jump = (h >> np.uint32(3)) % V
+            noisy = (h % np.uint32(8)) == 0
+            toks[:, t] = np.where(noisy, jump, (a * toks[:, t - 1] + 1) % V)
+        return toks.astype(np.int32)
+
+    def next_batch(self) -> dict:
+        cfg = self.cfg
+        per_host = self.global_batch // self.num_hosts
+        rows = np.arange(per_host) + self.host_id * per_host \
+            + self.step * self.global_batch
+        seq = self.seq
+        step = self.step
+        self.step += 1
+
+        if cfg.modality == "audio_stub":
+            rng = np.random.default_rng(self.seed * 1_000_003 + step)
+            frames = rng.normal(size=(per_host, seq, cfg.d_model)).astype(np.float32)
+            labels = rng.integers(
+                0, cfg.vocab_size, size=(per_host, seq, cfg.num_codebooks)
+            ).astype(np.int32)
+            return {
+                "batch": {"frame_embeds": frames},
+                "labels": labels,
+                "loss_mask": np.ones(labels.shape, np.float32),
+            }
+
+        toks = self._tokens(step, rows, seq + 1)
+        inputs, labels = toks[:, :-1], toks[:, 1:]
+        mask = np.ones(labels.shape, np.float32)
+
+        if cfg.modality == "vision_stub":
+            P = cfg.num_patches
+            rng = np.random.default_rng(self.seed * 7_000_003 + step)
+            patches = rng.normal(size=(per_host, P, cfg.d_model)).astype(np.float32)
+            # logits cover patches + text; mask patch positions out of loss
+            text = inputs[:, : seq - P]
+            labels_full = np.concatenate(
+                [np.zeros((per_host, P), np.int32), toks[:, 1 : seq - P + 1]],
+                axis=1,
+            )
+            mask_full = np.concatenate(
+                [np.zeros((per_host, P), np.float32),
+                 np.ones((per_host, seq - P), np.float32)],
+                axis=1,
+            )
+            return {
+                "batch": {"tokens": text, "patch_embeds": patches},
+                "labels": labels_full,
+                "loss_mask": mask_full,
+            }
+
+        return {
+            "batch": {"tokens": inputs},
+            "labels": labels,
+            "loss_mask": mask,
+        }
+
+
+@dataclass
+class AugmentedTabularPipeline:
+    """Discovery-driven relational augmentation feeding model training.
+
+    Given a base table (key, target) and a repository index, selects the
+    top-k candidate features by sketch-estimated MI, materializes ONLY
+    those k joins (this is the paper's entire point: k ≪ |repository|),
+    and serves standardized (features, target) batches.
+    """
+
+    index: SketchIndex
+    tables: dict  # name -> (key_hashes, values) for materialization
+    top_k: int = 8
+    min_join: int = 64
+
+    def build(self, base_key_hashes: np.ndarray, target: np.ndarray,
+              target_is_discrete: bool = False):
+        train_sk = build_sketch(
+            base_key_hashes, target, n=self.index.n, method=self.index.method,
+            side="train", value_is_discrete=target_is_discrete,
+        )
+        ranked = self.index.query(train_sk, top_k=self.top_k,
+                                  min_join=self.min_join)
+        feats, names = [], []
+        for meta, mi, join_size in ranked:
+            key_hashes, values = self.tables[(meta.table, meta.value_column)]
+            fj = full_left_join(base_key_hashes, target, key_hashes, values,
+                                agg=self.index.agg)
+            col = np.where(fj.mask, fj.x, np.nan).astype(np.float32)
+            feats.append(col)
+            names.append(f"{meta.table}.{meta.value_column}|mi={mi:.3f}")
+        x = np.stack(feats, axis=1) if feats else np.zeros((len(target), 0))
+        # standardize + impute missing with column means
+        mean = np.nanmean(x, axis=0) if x.size else np.zeros(x.shape[1])
+        std = np.nanstd(x, axis=0) + 1e-6 if x.size else np.ones(x.shape[1])
+        x = np.where(np.isnan(x), mean, x)
+        x = (x - mean) / std
+        return x.astype(np.float32), names

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with the (kernel.py, ops.py, ref.py) layout:
+
+  murmur3        — elementwise MurmurHash3/Fibonacci hashing used by the
+                   sketch pipeline (ingestion at repository scale hashes
+                   billions of keys; VPU-bound elementwise op).
+  pairwise_cheb  — tiled pairwise Chebyshev (L-inf) distance matrix, the
+                   O(n^2) hot-spot of all KSG-family MI estimators.
+  flash_attention— blocked causal GQA attention (online softmax) for the
+                   transformer backbones; the jnp reference doubles as
+                   the memory-efficient chunked path used on non-TPU
+                   backends and in the multi-pod dry-run.
+
+TPU is the *target*; on CPU the kernels are validated with
+``interpret=True`` against their pure-jnp oracles (ref.py).
+"""

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention (forward).
+
+Canonical online-softmax tiling adapted to the TPU memory hierarchy:
+
+  * grid (B, Hq, nQ, nK) with the KV axis innermost and declared
+    "arbitrary" — the (m, l, acc) running statistics live in VMEM
+    scratch and persist across KV steps, so K/V stream HBM→VMEM once
+    per (q-block, kv-block) pair and the S×S score matrix never exists.
+  * Q/K/V tiles sized (block_q|block_k, head_dim); head_dim is padded to
+    a multiple of 128 upstream so the MXU matmuls are lane-aligned.
+  * Causal block-skipping: KV blocks strictly above the diagonal are
+    skipped via ``pl.when`` (no compute, no load cost on TPU since the
+    index map still walks but the body is predicated out).
+  * GQA: the K/V index map folds q-head → kv-head (h // group), so no
+    KV replication materializes.
+
+The running max/denominator scratch is kept at (block_q, 128) — the
+minimum TPU-tileable width — with values broadcast along lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+_LANES = 128
+_NEG_INF = -1e30  # finite: keeps exp() exact-zero without NaN risk
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, block_q: int, block_k: int, scale: float, causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Entire KV block above the causal diagonal -> skip all compute.
+    block_live = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+
+        m_prev = m_scr[:, :1]  # (bq, 1)
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, :, :] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "scale", "causal", "interpret"),
+)
+def flash_attention_padded(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    scale: float,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, Dk = q.shape
+    Dv = v.shape[-1]
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (B, Hq, S // block_q, S // block_k)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, Dk), lambda b, h, i, j: (b, h, i, 0))
+    k_spec = pl.BlockSpec(
+        (1, 1, block_k, Dk), lambda b, h, i, j: (b, h // group, j, 0)
+    )
+    v_spec = pl.BlockSpec(
+        (1, 1, block_k, Dv), lambda b, h, i, j: (b, h // group, j, 0)
+    )
+    o_spec = pl.BlockSpec((1, 1, block_q, Dv), lambda b, h, i, j: (b, h, i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_q=block_q,
+            block_k=block_k,
+            scale=scale,
+            causal=causal,
+        ),
+        grid=grid,
+        in_specs=[q_spec, k_spec, v_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

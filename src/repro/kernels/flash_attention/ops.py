@@ -1,0 +1,65 @@
+"""Public attention op: kernel on TPU, chunked-jnp elsewhere.
+
+``attention(q, k, v)`` — causal GQA forward with automatic padding to
+kernel block multiples.  Padding correctness: padded KV positions sit at
+indices ≥ S, strictly above every real query's causal horizon, so they
+are masked out; padded Q rows are sliced off on return.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+from repro.kernels.flash_attention.ref import chunked_attention
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "causal", "use_kernel", "block_q", "block_k")
+)
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    use_kernel: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Causal GQA attention, (B, Hq, S, Dk) x (B, Hkv, S, Dk), (B, Hkv, S, Dv)
+    -> (B, Hq, S, Dv).  Distinct Dk/Dv supported (MLA)."""
+    B, Hq, S, Dk = q.shape
+    Dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / (Dk**0.5)
+    if not use_kernel:
+        return chunked_attention(q, k, v, scale=scale, causal=causal)
+
+    bq = min(block_q, max(128, S))
+    bk = min(block_k, max(128, S))
+    Sp = max(-(-S // bq) * bq, -(-S // bk) * bk)
+    Sp = -(-Sp // bq) * bq
+    Sp = -(-Sp // bk) * bk
+    Dkp = -(-Dk // 128) * 128
+    Dvp = -(-Dv // 128) * 128
+
+    def pad(t, dp):
+        return jnp.pad(
+            t, ((0, 0), (0, 0), (0, Sp - S), (0, dp - t.shape[-1]))
+        )
+
+    out = flash_attention_padded(
+        pad(q, Dkp), pad(k, Dkp), pad(v, Dvp),
+        block_q=bq, block_k=bk, scale=scale, causal=causal,
+        interpret=_use_interpret(),
+    )
+    return out[:, :, :S, :Dv]

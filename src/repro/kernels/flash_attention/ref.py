@@ -1,0 +1,109 @@
+"""Oracles for flash attention.
+
+Two references:
+
+  * :func:`mha_reference` — naive full-softmax causal GQA attention.
+    O(S²) memory; the ground truth for kernel allclose tests.
+  * :func:`chunked_attention` — online-softmax over KV chunks via
+    ``lax.scan``.  Numerically identical algorithm to the Pallas kernel
+    but expressed in portable jnp: O(S·chunk) live memory, compiles on
+    any backend.  This is the path the multi-pod dry-run lowers (the
+    TPU kernel cannot compile on the CPU host), so the dry-run's memory
+    analysis reflects flash-attention asymptotics, not naive ones.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """(B, Hkv, S, D) -> (B, Hq, S, D) by repeating each kv head."""
+    return jnp.repeat(k, group, axis=1)
+
+
+def mha_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float, causal: bool = True
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    group = Hq // k.shape[1]
+    k = _expand_kv(k, group)
+    v = _expand_kv(v, group)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "chunk"))
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention scanning KV in chunks (flash semantics).
+
+    Q is processed whole per head; K/V stream through in ``chunk``-sized
+    slices carried by ``lax.scan``, so peak live memory is
+    O(B·H·S·chunk / S) per score block instead of O(B·H·S²).
+    Supports distinct QK and V head dims (MLA).
+    """
+    B, Hq, S, Dk = q.shape
+    Dv = v.shape[-1]
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    qf = q.astype(jnp.float32)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, n_chunks, chunk, Dk)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, n_chunks, chunk, Dv)
+    kc = jnp.moveaxis(kc, 2, 0)  # (n_chunks, B, Hkv, chunk, Dk)
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    q_pos = jnp.arange(S)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        idx, k_blk, v_blk = inputs
+        # (B, Hkv, group, S, chunk) scores without materializing expanded KV
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk",
+            qf.reshape(B, Hkv, group, S, Dk),
+            k_blk,
+        ) * scale
+        if causal:
+            k_pos = idx * chunk + jnp.arange(chunk)
+            live = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(live[None, None, None], s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, group, S), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, group, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc)
+    )
+    safe_l = jnp.where(l > 0, l, 1.0)
+    out = (acc / safe_l[..., None]).reshape(B, Hq, S, Dv)
+    return out.astype(q.dtype)

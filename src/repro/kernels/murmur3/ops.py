@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the murmur3 kernel: arbitrary 1-D shapes,
+padding + reshape to the (rows, 128) tile layout, TPU/interpret switch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.murmur3.kernel import BLOCK_ROWS, LANES, murmur3_fib_2d
+from repro.kernels.murmur3.ref import murmur3_fib_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("fibonacci", "use_kernel"))
+def hash_keys(
+    keys: jax.Array,
+    seeds: jax.Array | int = 0,
+    *,
+    fibonacci: bool = True,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused murmur3(+Fibonacci) over a flat uint32 key array.
+
+    ``seeds`` may be a scalar or an array matching ``keys`` (per-element
+    seeds implement the TUPSK <k, j> tuple-key hash in one call:
+    ``hash_keys(j, seeds=key_hashes)``).
+    """
+    keys = keys.astype(jnp.uint32)
+    seeds = jnp.broadcast_to(jnp.asarray(seeds).astype(jnp.uint32), keys.shape)
+    if not use_kernel:
+        return murmur3_fib_ref(keys, seeds, fibonacci=fibonacci)
+
+    n = keys.shape[0]
+    tile = BLOCK_ROWS * LANES
+    padded = -(-n // tile) * tile
+    k2 = jnp.zeros(padded, jnp.uint32).at[:n].set(keys).reshape(-1, LANES)
+    s2 = jnp.zeros(padded, jnp.uint32).at[:n].set(seeds).reshape(-1, LANES)
+    out = murmur3_fib_2d(
+        k2, s2, fibonacci=fibonacci, interpret=_use_interpret()
+    )
+    return out.reshape(-1)[:n]

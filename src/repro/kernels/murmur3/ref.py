@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the murmur3 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+def murmur3_fib_ref(
+    keys: jax.Array, seeds: jax.Array, *, fibonacci: bool = True
+) -> jax.Array:
+    h = hashing.murmur3_32(keys.astype(jnp.uint32), seed=seeds.astype(jnp.uint32))
+    return hashing.fibonacci32(h) if fibonacci else h

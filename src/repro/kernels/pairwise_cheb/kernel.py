@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: tiled pairwise Chebyshev (L∞) distance matrix.
+
+The O(n²) core of every KSG-family MI estimator: given scalar marginals
+x, y (the joint point is (x_i, y_i)), produce
+
+    DX[i,j] = |x_i − x_j|
+    DY[i,j] = |y_i − y_j|
+    DJ[i,j] = max(DX, DY)   with  DJ[i,i] = +inf, invalid rows/cols = +inf
+
+in a single fused pass.  The estimator then derives k-NN radii and ball
+counts from these.  A discovery query evaluates ~10³–10⁶ candidate
+sketches of size n ≈ 256–2048; the fused kernel avoids materializing the
+three matrices in HBM separately (one write each instead of the ~8
+intermediate HLO buffers the naive jnp path produces).
+
+Tiling: grid (n/bm, n/bn); each program reads an (bm, 1) column block
+and a (1, bn) row block of each marginal (VMEM-trivial) and writes
+(bm, bn) output tiles.  All dims padded to multiples of 128 by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # (BLOCK, BLOCK) f32 tile = 256 KiB per output — VMEM-safe ×3
+
+
+def _cheb_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref,
+                 dx_ref, dy_ref, dj_ref, *, block: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    xc = xc_ref[...]  # (bm, 1)
+    xr = xr_ref[...]  # (1, bn)
+    yc = yc_ref[...]
+    yr = yr_ref[...]
+    valid = (mc_ref[...] > 0) & (mr_ref[...] > 0)  # (bm,1)&(1,bn) -> (bm,bn)
+
+    dx = jnp.abs(xc - xr)
+    dy = jnp.abs(yc - yr)
+    inf = jnp.float32(jnp.inf)
+    dx = jnp.where(valid, dx, inf)
+    dy = jnp.where(valid, dy, inf)
+
+    # Diagonal fence (self-distances excluded from neighbor counts).
+    row_ids = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    col_ids = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    diag = row_ids == col_ids
+
+    dx_ref[...] = dx
+    dy_ref[...] = dy
+    dj_ref[...] = jnp.where(diag, inf, jnp.maximum(dx, dy))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def pairwise_cheb_padded(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """x, y float32 (n,), mask int32 (n,); n must divide ``block``.
+
+    Returns (DX, DY, DJ) each (n, n) float32.
+    """
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block, n // block)
+
+    xc = x.reshape(n, 1)
+    xr = x.reshape(1, n)
+    yc = y.reshape(n, 1)
+    yr = y.reshape(1, n)
+    mc = mask.astype(jnp.int32).reshape(n, 1)
+    mr = mask.astype(jnp.int32).reshape(1, n)
+
+    col = pl.BlockSpec((block, 1), lambda i, j: (i, 0))
+    row = pl.BlockSpec((1, block), lambda i, j: (0, j))
+    out = pl.BlockSpec((block, block), lambda i, j: (i, j))
+    shape = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_cheb_kernel, block=block),
+        grid=grid,
+        in_specs=[col, row, col, row, col, row],
+        out_specs=(out, out, out),
+        out_shape=(shape, shape, shape),
+        interpret=interpret,
+    )(xc, xr, yc, yr, mc, mr)

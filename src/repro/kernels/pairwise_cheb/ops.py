@@ -1,0 +1,47 @@
+"""Public wrapper: pad to tile multiples, TPU/interpret switch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_cheb.kernel import pairwise_cheb_padded
+from repro.kernels.pairwise_cheb.ref import pairwise_cheb_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block"))
+def pairwise_cheb(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    block: int = 256,
+):
+    """Fused (DX, DY, DJ) pairwise L∞ distances with masking + diagonal
+    fencing, shapes (n, n); n arbitrary (padded internally).
+
+    ``use_kernel=None`` resolves to the Pallas kernel on TPU and the jnp
+    oracle elsewhere (interpret mode is for validation, not production).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    n = x.shape[0]
+    if not use_kernel:
+        return pairwise_cheb_ref(
+            x.astype(jnp.float32), y.astype(jnp.float32), mask.astype(bool)
+        )
+    p = -(-n // block) * block
+    xp = jnp.zeros(p, jnp.float32).at[:n].set(x.astype(jnp.float32))
+    yp = jnp.zeros(p, jnp.float32).at[:n].set(y.astype(jnp.float32))
+    mp = jnp.zeros(p, jnp.int32).at[:n].set(mask.astype(jnp.int32))
+    dx, dy, dj = pairwise_cheb_padded(
+        xp, yp, mp, block=block, interpret=_use_interpret()
+    )
+    return dx[:n, :n], dy[:n, :n], dj[:n, :n]

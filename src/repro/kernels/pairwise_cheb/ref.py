@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the pairwise Chebyshev kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_cheb_ref(x: jax.Array, y: jax.Array, mask: jax.Array):
+    """Reference (DX, DY, DJ) with the same fencing semantics."""
+    n = x.shape[0]
+    valid = mask[:, None] & mask[None, :]
+    inf = jnp.float32(jnp.inf)
+    dx = jnp.where(valid, jnp.abs(x[:, None] - x[None, :]), inf)
+    dy = jnp.where(valid, jnp.abs(y[:, None] - y[None, :]), inf)
+    eye = jnp.eye(n, dtype=bool)
+    dj = jnp.where(eye, inf, jnp.maximum(dx, dy))
+    return dx, dy, dj

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, training, serving,
+and the discovery service."""

@@ -1,0 +1,456 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against ShapeDtypeStruct stand-ins — no allocation, no data.
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, a non-divisible axis, an unsupported collective, or a
+compile-time OOM all fail HERE, on the real production mesh topology
+(16×16 single-pod / 2×16×16 multi-pod), with the real full-size model
+configs.
+
+Per cell it records (results/dryrun/<arch>__<shape>__<mesh>.json):
+  * compiled.memory_analysis()  — per-device bytes (argument/output/temp/peak)
+  * compiled.cost_analysis()    — HLO FLOPs + bytes accessed
+  * a collective census parsed from the post-SPMD HLO (op, dtype, shape,
+    group size, estimated per-device ring traffic)
+  * analytic params / 6ND model FLOPs for the §Roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.parallel.sharding import (
+    POLICIES,
+    apply_named_sharding,
+    current_policy,
+    mesh_context,
+    policy_context,
+    validate_spec,
+)
+from repro.train import optimizer as O
+from repro.train import train_step as TS
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+}
+
+# ---------------------------------------------------------------------------
+# Sharding spec builders
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh, batch: int):
+    """Policy batch axes, greedily trimmed to divisibility."""
+    axes = tuple(a for a in current_policy().batch_axes if a in mesh.shape)
+    while axes:
+        div = 1
+        for a in axes:
+            div *= mesh.shape[a]
+        if batch % div == 0:
+            break
+        axes = axes[:-1]
+    div = 1
+    for a in axes:
+        div *= mesh.shape[a]
+    return axes if (axes and div > 1) else ()
+
+
+def _batch_shardings(mesh, tree, batch: int):
+    """Shard dim 0 (global batch) of every leaf over ('pod','data')."""
+    axes = _batch_axes(mesh, batch)
+    entry = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def spec(leaf):
+        s = P(*([entry] + [None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, validate_spec(s, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
+def _cache_shardings(mesh, caches, batch: int):
+    """KV caches: batch over ('pod','data') when divisible, sequence over
+    'model' (or over every axis for the single-sequence long-context
+    cell) — matching the flash-decode shard_map layout."""
+    baxes = _batch_axes(mesh, batch)
+    if baxes:
+        seq_axes = ("model",)
+    else:
+        seq_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    bentry = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    sentry = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        has_group = "prefix" not in str(path[0].key)
+        lead = [None] if has_group else []
+        if name in ("k", "v"):           # (G?, B, S, Hkv, Dh)
+            ent = lead + [bentry, sentry, None, None]
+        elif name in ("c_kv", "k_rope"):  # (G?, B, S, r)
+            ent = lead + [bentry, sentry, None]
+        elif name == "conv":              # (G?, B, W-1, C)
+            ent = lead + [bentry, None, "model"]
+        elif name == "ssm":               # (G?, B, H, P, N)
+            ent = lead + [bentry, "model", None, None]
+        else:
+            ent = [None] * len(leaf.shape)
+        ent = ent[: len(leaf.shape)]
+        ent += [None] * (len(leaf.shape) - len(ent))
+        return NamedSharding(mesh, validate_spec(P(*ent), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def _opt_state_shardings(mesh, opt_state_shapes, param_shardings):
+    """Moments mirror their parameter's sharding exactly (codes share the
+    param shape, scales drop the last dim) — misaligned moment layouts
+    trigger SPMD involuntary-rematerialization copies on every update
+    (EXPERIMENTS.md §Perf iteration 1)."""
+
+    def moment_of(psh):
+        return {
+            "q": psh,
+            "s": NamedSharding(mesh, P(*psh.spec[:-1])) if len(psh.spec)
+            else NamedSharding(mesh, P()),
+        }
+
+    is_ns = lambda x: isinstance(x, NamedSharding)
+    return O.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree_util.tree_map(moment_of, param_shardings, is_leaf=is_ns),
+        nu=jax.tree_util.tree_map(moment_of, param_shardings, is_leaf=is_ns),
+    )
+
+
+# ---------------------------------------------------------------------------
+# HLO collective census
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(",
+)
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_census(hlo_text: str) -> list[dict]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        result_bytes = _shape_bytes(shape_str)
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = g.group(1).count(",") + 1
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        if n <= 1:
+            traffic = 0.0
+        elif op == "all-gather":
+            traffic = result_bytes * (n - 1) / n
+        elif op == "all-reduce":
+            traffic = 2.0 * result_bytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            traffic = result_bytes * (n - 1)  # result is the shard
+        elif op == "all-to-all":
+            traffic = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            traffic = result_bytes
+        out.append({"op": op, "bytes": result_bytes, "group": n,
+                    "traffic_per_device": traffic})
+    return out
+
+
+def _cpu_bf16_artifact_bytes(hlo_text: str) -> float:
+    """Quantify the XLA-CPU bf16-emulation memory artifact.
+
+    XLA's CPU pipeline has no native bf16 math: every bf16 dot/mul is
+    upcast to f32, and the simplifier then hoists the per-slice converts
+    of scan-saved remat stacks into ONE whole-stack convert — so a
+    duplicate f32[L, B, S, D] copy of each bf16 remat stack appears in
+    the buffer assignment (observed +12.9 GB/device on internlm2
+    train_4k; absent from the tiny-jaxpr and absent on native-bf16
+    backends).  We detect (bf16[dims], f32[dims]) twins of rank ≥ 4 over
+    64 MB and report their f32 bytes so the memory analysis can be
+    corrected to what a TPU compile allocates.
+    """
+    seen: dict[tuple[str, str], bool] = {}
+    for dt, dims in _SHAPE_RE.findall(hlo_text):
+        if dt in ("bf16", "f32"):
+            seen[(dt, dims)] = True
+    artifact = 0.0
+    for (dt, dims) in seen:
+        if dt != "bf16":
+            continue
+        if ("f32", dims) not in seen:
+            continue
+        dvals = [int(d) for d in dims.split(",") if d]
+        if len(dvals) < 4:
+            continue
+        n = 1
+        for d in dvals:
+            n *= d
+        if n * 4 > 64e6:
+            artifact += n * 4
+    return artifact
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _analytic_param_bytes_per_device(params_abs, shardings, mesh) -> float:
+    total = 0.0
+    for leaf, sh in zip(
+        jax.tree_util.tree_leaves(params_abs),
+        jax.tree_util.tree_leaves(shardings),
+    ):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        shards = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= mesh.shape[a]
+        total += n * leaf.dtype.itemsize / shards
+    return total
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               moe_impl: str = "gspmd", dtype: str = "bfloat16",
+               param_dtype: str = "float32", remat: bool = True,
+               policy: str = "tp", grad_accum: int = 1,
+               extra_overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; returns the report dict."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = M.get_config(arch).with_overrides(
+        dtype=dtype, param_dtype=param_dtype, remat=remat,
+        **(extra_overrides or {}),
+    )
+    ok, reason = M.shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": list(mesh.shape.values()),
+                "status": "skipped", "reason": reason}
+
+    specs = M.input_specs(cfg, shape)
+    kind = M.SHAPES[shape]["kind"]
+    B = M.SHAPES[shape]["batch"]
+
+    with policy_context(policy), mesh_context(mesh):
+        params_abs = M.abstract_params(cfg)
+        param_sh = apply_named_sharding(params_abs, mesh)
+
+        if kind == "train":
+            opt = O.adamw(quantized=True)
+            sched = O.warmup_cosine(3e-4, 2000, 100_000)
+            state_abs = jax.eval_shape(
+                lambda k: TS.init_train_state(cfg, opt, k), jax.random.key(0)
+            )
+            state_sh = TS.TrainState(
+                params=param_sh,
+                opt_state=_opt_state_shardings(mesh, state_abs.opt_state, param_sh),
+                err_fb=None,
+            )
+            batch_abs = {k: specs[k] for k in ("batch", "labels", "loss_mask")}
+            batch_sh = _batch_shardings(mesh, batch_abs, B)
+            step = TS.build_train_step(cfg, opt, sched, moe_impl=moe_impl,
+                                       grad_accum=grad_accum)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh), donate_argnums=0,
+            ).lower(state_abs, batch_abs)
+        elif kind == "prefill":
+            batch_abs = specs["batch"]
+            batch_sh = _batch_shardings(mesh, batch_abs, B)
+            max_len = specs["max_len"]
+
+            def prefill_fn(params, batch):
+                return T.prefill(cfg, params, batch, max_len=max_len,
+                                 moe_impl=moe_impl)
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(param_sh, batch_sh),
+            ).lower(params_abs, batch_abs)
+        else:  # decode
+            caches_abs = specs["caches"]
+            cache_sh = _cache_shardings(mesh, caches_abs, B)
+            tok_sh = _batch_shardings(mesh, specs["tokens"], B)
+
+            def decode_fn(params, caches, tokens, pos):
+                return T.decode_step(cfg, params, caches, tokens, pos,
+                                     moe_impl=moe_impl)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(param_sh, cache_sh, tok_sh,
+                              NamedSharding(mesh, P())),
+                donate_argnums=1,
+            ).lower(params_abs, caches_abs, specs["tokens"], specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_report = {
+                k: float(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not support it
+            mem_report = {"error": str(e)}
+
+        try:
+            cost = dict(compiled.cost_analysis())
+            cost_report = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float)) and (
+                               "flops" in k or "bytes" in k or k == "utilization")}
+        except Exception as e:
+            cost_report = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        artifact = _cpu_bf16_artifact_bytes(hlo)
+        if isinstance(mem_report.get("temp_size_in_bytes"), float):
+            mem_report["cpu_bf16_artifact_bytes"] = artifact
+            mem_report["temp_corrected_bytes"] = max(
+                mem_report["temp_size_in_bytes"] - artifact, 0.0
+            )
+        colls = collective_census(hlo)
+        summary: dict[str, dict] = {}
+        for c in colls:
+            s = summary.setdefault(
+                c["op"], {"count": 0, "bytes": 0.0, "traffic_per_device": 0.0}
+            )
+            s["count"] += 1
+            s["bytes"] += c["bytes"]
+            s["traffic_per_device"] += c["traffic_per_device"]
+
+        n_params = M.count_params_analytic(cfg)
+        n_active = M.count_params_analytic(cfg, active_only=True)
+
+    report = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": {k: v for k, v in mesh.shape.items()},
+        "moe_impl": moe_impl, "policy": policy, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": n_params, "active_params": n_active,
+        "param_bytes_per_device": _analytic_param_bytes_per_device(
+            params_abs, param_sh, mesh
+        ),
+        "memory_analysis": mem_report,
+        "cost_analysis": cost_report,
+        "collectives": summary,
+        "num_collectives": len(colls),
+    }
+    return report
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}{suffix}.json"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(M.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-impl", default="gspmd", choices=["gspmd", "ep"])
+    ap.add_argument("--policy", default="tp", choices=sorted(POLICIES))
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = M.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(M.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                out = cell_path(arch, shape, multi_pod, args.tag)
+                if os.path.exists(out) and not args.force:
+                    print(f"[skip] {out} exists")
+                    continue
+                label = f"{arch} × {shape} × {'2x16x16' if multi_pod else '16x16'}"
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    rep = lower_cell(arch, shape, multi_pod=multi_pod,
+                                     moe_impl=args.moe_impl,
+                                     policy=args.policy,
+                                     grad_accum=args.grad_accum)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append(label)
+                    continue
+                with open(out, "w") as f:
+                    json.dump(rep, f, indent=1)
+                status = rep["status"]
+                extra = (
+                    f" compile={rep.get('compile_s')}s "
+                    f"colls={rep.get('num_collectives')}"
+                    if status == "ok" else f" ({rep.get('reason','')})"
+                )
+                print(f"[{status}] {label}{extra}", flush=True)
+    if failures:
+        print("FAILURES:", *failures, sep="\n  ")
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax initialization, and tests/benches must keep seeing 1 device.
+
+Mesh shapes (TPU v5e pods):
+  single-pod:  (data=16, model=16)           = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)    = 512 chips
+The 'pod' axis carries pure data parallelism across the DCI links
+(optionally with int8 gradient compression, see train_step.py); 'data'
+carries FSDP + batch sharding on ICI; 'model' carries TP/EP/SP.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,2 @@
+"""Model zoo: composable decoder blocks (attention / MLA / Mamba2-SSD
+mixers, dense / MoE FFNs) assembled into the 10 assigned architectures."""

@@ -1,0 +1,239 @@
+"""Attention mixers: GQA (with optional QKV bias) and MLA (DeepSeek-V2).
+
+Each mixer exposes ``init(cfg, key)``, ``apply(cfg, params, x, ...)`` for
+train/prefill (full-sequence, causal), and ``decode(cfg, params, x, cache,
+pos)`` for single-token decoding against a KV cache.
+
+Hardware adaptation notes (see DESIGN.md):
+  * train/prefill attention runs the blocked online-softmax path —
+    the Pallas flash kernel on TPU, the numerically identical
+    lax.scan-chunked jnp path elsewhere (and in the multi-pod dry-run).
+  * decode keeps the KV cache laid out (B, S, Hkv, Dh) so the *sequence*
+    dim can be sharded over 'model' (context-parallel flash-decode,
+    ``repro.parallel.decode_attention``) — GQA kv-head counts (4–16)
+    rarely divide a 16-way TP axis, so sharding S is the only layout
+    that avoids cache replication at high TP degree.
+  * MLA stores the compressed latent (kv_lora + rope dims) in the cache
+    and uses the *absorbed* formulation for decode (W_UK folded into the
+    query, W_UV into the output projection), turning a 32k-token
+    re-expansion into a rank-512 dot per step.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.kernels.flash_attention.ref import chunked_attention
+from repro.models.common import apply_rope, dense_init, linear, rope_cos_sin, shard
+from repro.parallel.decode_attention import decode_attention
+
+__all__ = ["gqa", "mla"]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+class gqa:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> dict:
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.param_dtype)
+        return {
+            "wq": dense_init(kq, d, h * dh, bias=cfg.qkv_bias, dtype=dt),
+            "wk": dense_init(kk, d, hkv * dh, bias=cfg.qkv_bias, dtype=dt),
+            "wv": dense_init(kv, d, hkv * dh, bias=cfg.qkv_bias, dtype=dt),
+            "wo": dense_init(ko, h * dh, d, scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dt),
+        }
+
+    @staticmethod
+    def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+        B, S, _ = x.shape
+        h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = linear(p["wq"], x).reshape(B, S, h, dh)
+        k = linear(p["wk"], x).reshape(B, S, hkv, dh)
+        v = linear(p["wv"], x).reshape(B, S, hkv, dh)
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+        cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)  # (S?, dh/2)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        return q, k, v
+
+    @staticmethod
+    def apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array
+              ) -> tuple[jax.Array, dict]:
+        """Full-sequence causal attention.  Returns (out, kv) where kv is
+        the cache contribution (used by prefill)."""
+        B, S, _ = x.shape
+        q, k, v = gqa._qkv(cfg, p, x, positions)
+        qt = q.transpose(0, 2, 1, 3)  # (B, H, S, Dh)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        if jax.default_backend() == "tpu":
+            out = flash_attention(qt, kt, vt, scale=scale, causal=True)
+        else:
+            out = chunked_attention(
+                qt, kt, vt, scale=scale, causal=True,
+                chunk=min(cfg.attn_chunk, S),
+            )
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.num_heads * cfg.head_dim)
+        out = shard(out, "batch", "seq", "mlp")
+        return linear(p["wo"], out), {"k": k, "v": v}
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+        shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    @staticmethod
+    def decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+        """x (B, 1, D); cache k/v (B, Smax, Hkv, Dh); pos scalar int32."""
+        B = x.shape[0]
+        q, k_new, v_new = gqa._qkv(
+            cfg, p, x, jnp.full((B, 1), pos, jnp.int32)
+        )
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0)
+        )
+        out = decode_attention(
+            q[:, 0], k_cache, v_cache, pos, scale=1.0 / math.sqrt(cfg.head_dim)
+        )  # (B, H, Dh)
+        out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+        return linear(p["wo"], out), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+class mla:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> dict:
+        kq, kd, ku, ko = jax.random.split(key, 4)
+        d, h = cfg.d_model, cfg.num_heads
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        lora = cfg.kv_lora_rank
+        dt = jnp.dtype(cfg.param_dtype)
+        return {
+            "wq": dense_init(kq, d, h * (dn + dr), dtype=dt),
+            "kv_down": dense_init(kd, d, lora + dr, dtype=dt),
+            "kv_up": dense_init(ku, lora, h * (dn + dv), dtype=dt),
+            "wo": dense_init(ko, h * dv, d, scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dt),
+        }
+
+    @staticmethod
+    def _latent(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+        """Compressed KV latent + rope key (what the cache stores)."""
+        lat = linear(p["kv_down"], x)  # (B, S, lora + dr)
+        c_kv, k_rope = lat[..., : cfg.kv_lora_rank], lat[..., cfg.kv_lora_rank :]
+        cos, sin = rope_cos_sin(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[..., None, :], cos[..., None, :], sin[..., None, :])[..., 0, :]
+        return c_kv, k_rope
+
+    @staticmethod
+    def _queries(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+        B, S, _ = x.shape
+        h = cfg.num_heads
+        dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        q = linear(p["wq"], x).reshape(B, S, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        cos, sin = rope_cos_sin(positions, dr, cfg.rope_theta)
+        q_rope = apply_rope(q_rope, cos[..., None, :], sin[..., None, :])
+        return q_nope, q_rope
+
+    @staticmethod
+    def apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array
+              ) -> tuple[jax.Array, dict]:
+        """Train/prefill: expand the latent into per-head K/V (explicit
+        formulation — best FLOPs/byte when S·H ≫ lora)."""
+        B, S, _ = x.shape
+        h = cfg.num_heads
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        q_nope, q_rope = mla._queries(cfg, p, x, positions)
+        c_kv, k_rope = mla._latent(cfg, p, x, positions)
+
+        kv = linear(p["kv_up"], c_kv).reshape(B, S, h, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, dr))
+
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "heads", None)
+        v = shard(v, "batch", "seq", "heads", None)
+
+        scale = 1.0 / math.sqrt(dn + dr)
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        if jax.default_backend() == "tpu":
+            out = flash_attention(qt, kt, vt, scale=scale, causal=True)
+        else:
+            out = chunked_attention(qt, kt, vt, scale=scale, causal=True,
+                                    chunk=min(cfg.attn_chunk, S))
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, h * dv)
+        return linear(p["wo"], out), {"c_kv": c_kv, "k_rope": k_rope}
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        }
+
+    @staticmethod
+    def decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+        """Absorbed-matrix decode: score against the latent directly.
+
+        W_kv_up = [W_UK; W_UV] per head.  q_eff = q_nope @ W_UK gives a
+        rank-`lora` query; attention runs in latent space and W_UV is
+        applied once to the attention-weighted latent.
+        """
+        B = x.shape[0]
+        h = cfg.num_heads
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        lora = cfg.kv_lora_rank
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        q_nope, q_rope = mla._queries(cfg, p, x, positions)  # (B,1,h,·)
+        c_new, kr_new = mla._latent(cfg, p, x, positions)
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+
+        w_up = p["kv_up"]["w"].astype(x.dtype).reshape(lora, h, dn + dv)
+        w_uk, w_uv = w_up[..., :dn], w_up[..., dn:]  # (lora, h, dn/dv)
+
+        # Absorb W_UK into the query: (B,1,h,dn)·(lora,h,dn) -> (B,h,lora)
+        q_eff = jnp.einsum("bohd,lhd->bhl", q_nope, w_uk)
+        S = c_kv.shape[1]
+        scale = 1.0 / math.sqrt(dn + dr)
+        scores = (
+            jnp.einsum("bhl,bsl->bhs", q_eff.astype(jnp.float32),
+                       c_kv.astype(jnp.float32))
+            + jnp.einsum("bohd,bsd->bhs", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+        ) * scale
+        live = (jnp.arange(S) <= pos)[None, None, :]
+        scores = jnp.where(live, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        lat_out = jnp.einsum("bhs,bsl->bhl", w, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bhl,lhd->bhd", lat_out, w_uv.astype(jnp.float32))
+        out = out.reshape(B, 1, h * dv).astype(x.dtype)
+        return linear(p["wo"], out), {"c_kv": c_kv, "k_rope": k_rope}

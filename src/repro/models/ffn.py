@@ -1,0 +1,179 @@
+"""FFN layers: dense SwiGLU and dropless Mixture-of-Experts.
+
+MoE dispatch is the *dropless* sort-based formulation (MegaBlocks-style,
+TPU-adapted): token copies are sorted by routed expert id and pushed
+through grouped GEMMs (``jax.lax.ragged_dot``), so no capacity factor,
+no dropped tokens, no (T, E, C) dispatch tensor.  Cost is exactly
+top_k·T tokens through one expert FFN plus two sorts of top_k·T keys.
+
+Two sharding modes (selected by the perf layer, see §Perf):
+  * 'gspmd' — ragged_dot under pjit; XLA chooses collectives (baseline).
+  * 'ep'    — explicit expert parallelism under shard_map: experts live
+    on their 'model' shard; every shard routes the full token set to its
+    local experts and a single psum combines partial outputs.  The
+    collective payload is one (tokens, d_model) all-reduce, independent
+    of expert count.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, linear, shard
+from repro.parallel.sharding import current_mesh
+
+__all__ = ["dense_ffn", "moe_ffn"]
+
+
+class dense_ffn:
+    @staticmethod
+    def init(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+        kg, ku, kd = jax.random.split(key, 3)
+        d_ff = d_ff or cfg.d_ff
+        dt = jnp.dtype(cfg.param_dtype)
+        return {
+            "gate": dense_init(kg, cfg.d_model, d_ff, dtype=dt),
+            "up": dense_init(ku, cfg.d_model, d_ff, dtype=dt),
+            "down": dense_init(
+                kd, d_ff, cfg.d_model,
+                scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dt,
+            ),
+        }
+
+    @staticmethod
+    def apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+        h = shard(h, "batch", "seq", "mlp")
+        return linear(p["down"], h)
+
+
+def _expert_ffn_ragged(x_sorted, group_sizes, w_gate, w_up, w_down):
+    """Grouped SwiGLU over expert-sorted tokens via ragged_dot."""
+    h = jax.nn.silu(
+        jax.lax.ragged_dot(x_sorted, w_gate, group_sizes)
+    ) * jax.lax.ragged_dot(x_sorted, w_up, group_sizes)
+    return jax.lax.ragged_dot(h, w_down, group_sizes)
+
+
+class moe_ffn:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> dict:
+        kr, ke, ks = jax.random.split(key, 3)
+        E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+        dt = jnp.dtype(cfg.param_dtype)
+        k1, k2, k3 = jax.random.split(ke, 3)
+        down_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+        p = {
+            "router": dense_init(kr, D, E, dtype=jnp.float32),
+            "experts": {
+                "w_gate": (jax.random.normal(k1, (E, D, F)) * 0.02).astype(dt),
+                "w_up": (jax.random.normal(k2, (E, D, F)) * 0.02).astype(dt),
+                "w_down": (jax.random.normal(k3, (E, F, D)) * down_scale).astype(dt),
+            },
+        }
+        if cfg.num_shared_experts:
+            p["shared"] = dense_ffn.init(
+                cfg, ks, d_ff=cfg.moe_d_ff * cfg.num_shared_experts
+            )
+        return p
+
+    @staticmethod
+    def route(cfg: ModelConfig, p: dict, x_flat: jax.Array):
+        """Router: top-k expert ids + combine weights.  x_flat (T, D)."""
+        logits = (x_flat.astype(jnp.float32) @ p["router"]["w"])  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+        if cfg.norm_topk:
+            top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        # Load-balancing aux loss (Switch-style): E * Σ_e f_e · P_e
+        E = cfg.num_experts
+        dispatch = jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32)
+        f = jnp.mean(dispatch, axis=0)
+        pbar = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f * pbar)
+        return top_p, top_i, aux
+
+    @staticmethod
+    def _dropless(cfg: ModelConfig, experts: dict, x_flat, top_p, top_i,
+                  expert_offset: int = 0, local_experts: int | None = None):
+        """Sort-based dropless dispatch through local expert weights.
+
+        With ``expert_offset/local_experts`` set, tokens routed elsewhere
+        are parked in a trailing null group (weights indexed safely, the
+        combine weight zeroes their output).
+        """
+        T, D = x_flat.shape
+        k = cfg.top_k
+        E_local = local_experts or cfg.num_experts
+
+        flat_e = top_i.reshape(-1) - expert_offset  # (T·k,)
+        flat_w = top_p.reshape(-1)
+        local = (flat_e >= 0) & (flat_e < E_local)
+        flat_e_safe = jnp.where(local, flat_e, E_local)  # null group id
+        flat_w = jnp.where(local, flat_w, 0.0)
+
+        order = jnp.argsort(flat_e_safe)
+        inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * k))
+        x_rep = jnp.repeat(x_flat, k, axis=0)[order]  # (T·k, D) sorted
+        group_sizes = jnp.bincount(flat_e_safe, length=E_local + 1)[:E_local]
+
+        y_sorted = _expert_ffn_ragged(
+            x_rep, group_sizes.astype(jnp.int32),
+            experts["w_gate"].astype(x_flat.dtype),
+            experts["w_up"].astype(x_flat.dtype),
+            experts["w_down"].astype(x_flat.dtype),
+        )
+        y = y_sorted[inv] * flat_w[:, None].astype(x_flat.dtype)
+        return jnp.sum(y.reshape(T, k, D), axis=1)
+
+    @staticmethod
+    def apply(cfg: ModelConfig, p: dict, x: jax.Array,
+              impl: str = "gspmd") -> tuple[jax.Array, jax.Array]:
+        """Returns (out, aux_loss).  x (B, S, D)."""
+        B, S, D = x.shape
+        x_flat = x.reshape(B * S, D)
+        top_p, top_i, aux = moe_ffn.route(cfg, p, x_flat)
+
+        mesh = current_mesh()
+        use_ep = (
+            impl == "ep"
+            and mesh is not None
+            and "model" in mesh.shape
+            and cfg.num_experts % mesh.shape["model"] == 0
+        )
+        if use_ep:
+            n_shards = mesh.shape["model"]
+            e_local = cfg.num_experts // n_shards
+
+            def body(xf, tp, ti, w_gate, w_up, w_down):
+                shard_id = jax.lax.axis_index("model")
+                out = moe_ffn._dropless(
+                    cfg, {"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+                    xf, tp, ti,
+                    expert_offset=shard_id * e_local, local_experts=e_local,
+                )
+                return jax.lax.psum(out, "model")
+
+            out = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(("pod", "data") if "pod" in mesh.shape else "data"),
+                          P(("pod", "data") if "pod" in mesh.shape else "data"),
+                          P(("pod", "data") if "pod" in mesh.shape else "data"),
+                          P("model"), P("model"), P("model")),
+                out_specs=P(("pod", "data") if "pod" in mesh.shape else "data"),
+                check_vma=False,
+            )(x_flat, top_p, top_i,
+              p["experts"]["w_gate"], p["experts"]["w_up"],
+              p["experts"]["w_down"])
+        else:
+            out = moe_ffn._dropless(cfg, p["experts"], x_flat, top_p, top_i)
+
+        out = out.reshape(B, S, D)
+        if "shared" in p:
+            out = out + dense_ffn.apply(cfg, p["shared"], x)
+        return out, aux * cfg.aux_loss_coef

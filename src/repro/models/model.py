@@ -1,0 +1,136 @@
+"""Model registry: config lookup, analytic param counts, input specs.
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of the assigned (architecture × input-shape) cells — the
+multi-pod dry-run lowers against these without allocating anything.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+__all__ = [
+    "get_config",
+    "list_archs",
+    "count_params_analytic",
+    "SHAPES",
+    "shape_applicable",
+    "input_specs",
+    "abstract_params",
+]
+
+SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    full, smoke_cfg = REGISTRY[name]
+    return smoke_cfg if smoke else full
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runnable, reason).  long_500k requires sub-quadratic attention:
+    run for SSM/hybrid, skip for pure full-attention archs (documented
+    in DESIGN.md §Arch-applicability)."""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, (
+            "long_500k needs sub-quadratic sequence mixing; "
+            f"{cfg.name} is pure full-attention ({cfg.family})"
+        )
+    return True, ""
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg), jax.random.key(0)
+    )
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count from abstract shapes.  ``active_only`` scales the
+    routed-expert tensors by top_k / num_experts (MoE 6·N_active·D)."""
+    shapes = abstract_params(cfg)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if active_only and "/experts/" in f"/{pstr}/":
+            size *= cfg.top_k / cfg.num_experts
+        total += size
+    return int(total)
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train  -> {'batch': {...}, 'labels', 'loss_mask'}
+    prefill-> {'batch': {...}} (prompt through the model, cache out)
+    decode -> {'caches', 'tokens', 'pos'} (one new token, cache in/out)
+    """
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+
+    def token_batch(seq_len: int) -> dict:
+        if cfg.modality == "audio_stub":
+            return {"frame_embeds": sds((B, seq_len, cfg.d_model), _act_dtype(cfg))}
+        batch = {"tokens": sds((B, seq_len), i32)}
+        if cfg.modality == "vision_stub":
+            text = seq_len - cfg.num_patches
+            assert text > 0, (seq_len, cfg.num_patches)
+            batch["tokens"] = sds((B, text), i32)
+            batch["patch_embeds"] = sds(
+                (B, cfg.num_patches, cfg.d_model), _act_dtype(cfg)
+            )
+        return batch
+
+    if kind == "train":
+        if cfg.num_codebooks:
+            labels = sds((B, S, cfg.num_codebooks), i32)
+        else:
+            labels = sds((B, S), i32)
+        return {
+            "batch": token_batch(S),
+            "labels": labels,
+            "loss_mask": sds(labels.shape, jnp.float32),
+        }
+
+    if kind == "prefill":
+        return {"batch": token_batch(S), "max_len": S}
+
+    # decode: cache holds S tokens of context; we write position S-1.
+    caches = jax.eval_shape(
+        functools.partial(transformer.init_decode_caches, cfg, B, S)
+    )
+    if cfg.modality == "audio_stub":
+        tok = sds((B, 1, cfg.d_model), _act_dtype(cfg))
+    else:
+        tok = sds((B, 1), i32)
+    return {"caches": caches, "tokens": tok, "pos": sds((), i32)}

@@ -1,0 +1,242 @@
+"""Mamba2 mixer via SSD (state-space duality), adapted for TPU.
+
+The SSD formulation (Dao & Gu 2024) decomposes the selective-scan into
+chunked *matmuls* — block-diagonal intra-chunk attention-like products
+plus a low-rank inter-chunk state recurrence.  This is the TPU-native
+choice (MXU-friendly GEMMs instead of the CUDA selective-scan kernel;
+see DESIGN.md §Hardware-adaptation):
+
+  intra:  Y_diag = (C Bᵀ ⊙ L) · X          per chunk, (cl × cl) GEMMs
+  states: S_c    = Σ decay · B X           per chunk
+  inter:  S_{c+1} = exp(Σa) S_c + S_c'     lax.scan over chunks (linear,
+                                           not the quadratic minimal form)
+  out:    Y_off  = C · S_prev · decay
+
+Decode is the O(1) recurrent update on the (H, P, N) state.
+
+Block structure follows Mamba-2: in_proj → [z | x | B | C | dt], causal
+depthwise conv over [x|B|C], SSD core, gated RMSNorm, out_proj.  Jamba's
+Mamba-1 layers are realized with the same SSD core (state size from the
+published config) — the duality makes them computationally equivalent
+while staying systolic-friendly; noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, norm_apply, shard
+
+__all__ = ["mamba"]
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def _in_proj_dim(cfg: ModelConfig) -> int:
+    # z | x | B | C | dt
+    return 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """segsum(a)[..., i, j] = sum_{k=j+1..i} a_k for i >= j else -inf."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           state: jax.Array | None = None):
+    """x (B, S, C), w (W, C), b (C,).  Returns (y, new_state (B, W-1, C))."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[2],
+    ) + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y, new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD scan.  x (b,s,h,p); dt (b,s,h) post-softplus; A (h,) negative;
+    B, C (b,s,g,n).  Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    cl = min(chunk, s)
+    assert s % cl == 0, (s, cl)
+    nc = s // cl
+
+    a = (dt * A).astype(jnp.float32)  # (b,s,h) log-decay
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)  # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    # chunked views
+    ac = a.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)        # (b,h,nc,cl)
+    xc = xdt.reshape(b, nc, cl, h, p)
+    Bc = Bh.reshape(b, nc, cl, h, n)
+    Cc = Ch.reshape(b, nc, cl, h, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                            # (b,h,nc,cl)
+
+    # 1. intra-chunk
+    L = jnp.exp(_segsum(ac))                                   # (b,h,nc,cl,cl)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # (b,h,nc,cl)
+    chunk_states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (linear scan, not quadratic segsum)
+    total_decay = jnp.exp(a_cum[..., -1])                      # (b,h,nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)                    # (nc,b,h,p,n)
+    dec_t = jnp.moveaxis(total_decay, 2, 0)                    # (nc,b,h)
+    final_state, prev_states = jax.lax.scan(
+        step, initial_state.astype(jnp.float32), (cs_t, dec_t)
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,nc,h,p,n)
+
+    # 4. inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(a_cum)                           # (b,h,nc,cl)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+class mamba:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> dict:
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        dt = jnp.dtype(cfg.param_dtype)
+        h = cfg.ssm_heads
+        conv_ch = _conv_channels(cfg)
+        # dt bias: inverse-softplus of dt values log-uniform in [1e-3, 1e-1]
+        u = jax.random.uniform(k3, (h,), jnp.float32)
+        dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+        return {
+            "in_proj": dense_init(k1, cfg.d_model, _in_proj_dim(cfg), dtype=dt),
+            "conv": {
+                "w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch)) * 0.02).astype(dt),
+                "b": jnp.zeros((conv_ch,), dt),
+            },
+            "A_log": jnp.log(
+                jax.random.uniform(k4, (h,), jnp.float32, 1.0, 16.0)
+            ).astype(jnp.float32),
+            "dt_bias": dt_bias.astype(jnp.float32),
+            "D": jnp.ones((h,), jnp.float32),
+            "ssm_norm": {"scale": jnp.ones((cfg.d_inner,), dt)},
+            "out_proj": dense_init(
+                k5, cfg.d_inner, cfg.d_model,
+                scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dt,
+            ),
+        }
+
+    @staticmethod
+    def _split(cfg: ModelConfig, proj: jax.Array):
+        di, gn, h = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+        z = proj[..., :di]
+        xBC = proj[..., di : di + di + 2 * gn]
+        dt_raw = proj[..., di + di + 2 * gn :]
+        return z, xBC, dt_raw
+
+    @staticmethod
+    def apply(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+              conv_state=None, ssm_state=None):
+        """Full-sequence SSD.  Returns (out, {conv_state, ssm_state})."""
+        Bsz, S, _ = x.shape
+        di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        proj = x @ p["in_proj"]["w"].astype(x.dtype)
+        z, xBC, dt_raw = mamba._split(cfg, proj)
+        xBC = shard(xBC, "batch", "seq", "mlp")
+
+        xBC, new_conv = _causal_depthwise_conv(
+            xBC, p["conv"]["w"], p["conv"]["b"], conv_state
+        )
+        xBC = jax.nn.silu(xBC)
+        xs = xBC[..., :di].reshape(Bsz, S, h, di // h)
+        Bm = xBC[..., di : di + g * n].reshape(Bsz, S, g, n)
+        Cm = xBC[..., di + g * n :].reshape(Bsz, S, g, n)
+
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :]
+        )
+        A = -jnp.exp(p["A_log"])
+        y, final_state = _ssd_chunked(
+            xs, dt, A, Bm, Cm, cfg.ssm_chunk, initial_state=ssm_state
+        )
+        y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+        y = y.reshape(Bsz, S, di)
+        y = norm_apply(p["ssm_norm"], y * jax.nn.silu(z))
+        y = shard(y, "batch", "seq", "mlp")
+        out = y @ p["out_proj"]["w"].astype(x.dtype)
+        return out, {"conv": new_conv, "ssm": final_state}
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+        return {
+            "conv": jnp.zeros(
+                (batch, cfg.ssm_conv - 1, _conv_channels(cfg)), dtype
+            ),
+            "ssm": jnp.zeros(
+                (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+        }
+
+    @staticmethod
+    def decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict, pos):
+        """Single-step recurrent update.  x (B, 1, D)."""
+        Bsz = x.shape[0]
+        di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        ph = di // h
+        proj = x @ p["in_proj"]["w"].astype(x.dtype)
+        z, xBC, dt_raw = mamba._split(cfg, proj)
+
+        xBC, new_conv = _causal_depthwise_conv(
+            xBC, p["conv"]["w"], p["conv"]["b"], cache["conv"]
+        )
+        xBC = jax.nn.silu(xBC[:, -1:, :])  # current step only
+        xs = xBC[:, 0, :di].reshape(Bsz, h, ph).astype(jnp.float32)
+        Bm = xBC[:, 0, di : di + g * n].reshape(Bsz, g, n).astype(jnp.float32)
+        Cm = xBC[:, 0, di + g * n :].reshape(Bsz, g, n).astype(jnp.float32)
+        Bm = jnp.repeat(Bm, h // g, axis=1)  # (B,h,n)
+        Cm = jnp.repeat(Cm, h // g, axis=1)
+
+        dt = jax.nn.softplus(
+            dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :]
+        )  # (B,h)
+        A = -jnp.exp(p["A_log"])  # (h,)
+        da = jnp.exp(dt * A[None, :])  # (B,h)
+
+        state = cache["ssm"]  # (B,h,p,n) f32
+        Bx = jnp.einsum("bhn,bhp->bhpn", Bm, xs * dt[..., None])
+        state = state * da[..., None, None] + Bx
+        y = jnp.einsum("bhpn,bhn->bhp", state, Cm) + p["D"][None, :, None] * xs
+        y = y.reshape(Bsz, 1, di).astype(x.dtype)
+        y = norm_apply(p["ssm_norm"], y * jax.nn.silu(z))
+        out = y @ p["out_proj"]["w"].astype(x.dtype)
+        return out, {"conv": new_conv, "ssm": state}

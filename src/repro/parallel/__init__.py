@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, mesh helpers,
+context-parallel decode attention, collective utilities."""

@@ -1,0 +1,289 @@
+"""Logical-axis sharding: path-convention param specs + activation hooks.
+
+Parallelism dimensions supported (mapped onto the production meshes
+(data=16, model=16) and (pod=2, data=16, model=16)):
+
+  * DP   — batch over ('pod', 'data').
+  * FSDP — parameter + optimizer-state sharding over 'data' (embed-dim
+           for matrices), ZeRO-3 style: XLA all-gathers weights per
+           layer under the scan and reduce-scatters grads.
+  * TP   — heads / mlp / vocab over 'model' (Megatron pattern).
+  * EP   — MoE experts over 'model'.
+  * SP/CP— decode KV-cache sequence over 'model' (flash-decode merge,
+           see ``repro.parallel.decode_attention``) and over
+           ('data','model') for the single-sequence long-context shape.
+
+Every spec is *validated against divisibility* at application time:
+axes that do not divide a dimension are dropped (replication) rather
+than erroring — e.g. kv_heads=8 on model=16 replicates KV projections,
+matching what production systems do for GQA at high TP degree.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "mesh_context",
+    "current_mesh",
+    "shard_activation",
+    "logical",
+    "param_specs",
+    "apply_named_sharding",
+    "validate_spec",
+    "ShardingPolicy",
+    "POLICIES",
+    "policy_context",
+    "current_policy",
+]
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+# ---------------------------------------------------------------------------
+# Sharding policies — the §Perf hillclimbing lever.
+#
+# The mesh is fixed at (data=16, model=16); what varies per architecture is
+# how the program maps onto it.  Collective volume scales with ACTIVATIONS
+# under TP and with PARAMETERS under DP/ZeRO, so the right policy flips
+# with model size (see EXPERIMENTS.md §Perf):
+#
+#   'tp'        — batch over ('pod','data'); weights TP over 'model' +
+#                 FSDP over 'data'.  Right for ≫10B models where weight
+#                 movement dwarfs activation movement.
+#   'zero3_dp'  — batch over every axis (256/512-way DP); weights stay
+#                 sharded both axes and are all-gathered per pass
+#                 (ZeRO-3).  Minimal memory, param-sized collectives.
+#   'ddp_zero1' — batch over every axis; weights/moments replicated, one
+#                 gradient all-reduce per step.  Right for ≲2B models
+#                 where replicated state fits and activation ARs at
+#                 TP=16 would dominate (mamba2-370m: 4.7% → ~100% of
+#                 roofline).
+# ---------------------------------------------------------------------------
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    name: str = "tp"
+    batch_axes: tuple = ("pod", "data")
+    tp_params: bool = True     # shard weights over 'model'
+    fsdp_params: bool = True   # shard weights over 'data'
+    shard_experts: bool = True  # EP expert sharding survives regardless
+
+
+POLICIES = {
+    "tp": ShardingPolicy("tp", ("pod", "data"), True, True),
+    "zero3_dp": ShardingPolicy("zero3_dp", ("pod", "data", "model"), True, True),
+    "ddp_zero1": ShardingPolicy(
+        "ddp_zero1", ("pod", "data", "model"), False, False
+    ),
+}
+
+
+def current_policy() -> ShardingPolicy:
+    return getattr(_STATE, "policy", POLICIES["tp"])
+
+
+@contextlib.contextmanager
+def policy_context(policy: ShardingPolicy | str):
+    if isinstance(policy, str):
+        policy = POLICIES[policy]
+    prev = current_policy()
+    _STATE.policy = policy
+    try:
+        yield policy
+    finally:
+        _STATE.policy = prev
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None):
+    """Activate a mesh for shard_activation hooks (and jax's mesh ctx)."""
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _STATE.mesh = prev
+
+
+# Logical activation axes -> mesh axes (tried in order; missing mesh axes
+# are skipped, non-dividing axes dropped).
+ACT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("model",),     # decode cache CP
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "embed": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "long_seq": ("data", "model"),  # single-sequence long-context decode
+}
+
+
+def _mesh_axes_for(logical_name: str | None, mesh: Mesh) -> tuple[str, ...]:
+    if logical_name is None:
+        return ()
+    if logical_name == "batch":
+        axes = current_policy().batch_axes
+    else:
+        axes = ACT_RULES.get(logical_name, ())
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def validate_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide the corresponding dim size, and
+    dedup axes across dims (first dim wins) — a policy may map batch over
+    'model' while a TP rule also claims 'model'; the batch mapping takes
+    precedence by position."""
+    out = []
+    used: set[str] = set()
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = [a for a in axes if a in mesh.shape and a not in used]
+        keep: list[str] = []
+        denom = 1
+        for a in axes:
+            if shape[i] % (denom * mesh.shape[a]) == 0:
+                keep.append(a)
+                denom *= mesh.shape[a]
+        used.update(keep)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def logical(*names: str | None) -> P:
+    """Build a PartitionSpec from logical activation-axis names (unresolved
+    — resolved against the active mesh in shard_activation)."""
+    return P(*names)
+
+
+def shard_activation(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    entries = []
+    for n in names:
+        axes = _mesh_axes_for(n, mesh)
+        entries.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    spec = validate_spec(P(*entries), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by path convention.
+# ---------------------------------------------------------------------------
+
+# (regex on the '/'-joined param path, spec for the *trailing* dims).
+# Matrices are (in, out); FSDP shards the embed-side dim over 'data',
+# TP shards heads/mlp/vocab over 'model'.  Leading scan ('layers') dims
+# are padded with None automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embedding/table$", (("model",), ("data",))),         # (V, D)
+    (r"lm_head/w$", (("data",), ("model",))),               # (D, V)
+    (r"(wq|wqkv)/w$", (("data",), ("model",))),             # (D, H·dh)
+    (r"(wk|wv)/w$", (("data",), ("model",))),               # (D, Hkv·dh)
+    (r"wo/w$", (("model",), ("data",))),                    # (H·dh, D)
+    (r"(wq|wk|wv|wqkv)/b$", (("model",),)),
+    (r"wo/b$", (("data",),)),
+    (r"(gate|up)/w$", (("data",), ("model",))),             # (D, F)
+    (r"down/w$", (("model",), ("data",))),                  # (F, D)
+    (r"router/w$", (("data",), None)),                      # (D, E)
+    (r"experts/(w_gate|w_up)$", (("model",), ("data",), None)),  # (E, D, F)
+    (r"experts/w_down$", (("model",), None, ("data",))),    # (E, F, D)
+    (r"q_down/w$", (("data",), None)),                      # MLA
+    (r"q_up/w$", (None, ("model",))),
+    (r"kv_down/w$", (("data",), None)),
+    (r"kv_up/w$", (None, ("model",))),
+    (r"in_proj/w$", (("data",), ("model",))),               # mamba
+    (r"out_proj/w$", (("model",), ("data",))),
+    (r"conv/w$", (None, ("model",))),
+    (r"conv/b$", (("model",),)),
+    (r"(A_log|dt_bias|D)$", (("model",),)),
+    (r"ssm_norm/scale$", (("model",),)),
+    (r"(scale|b)$", (None,)),                               # norms / misc bias
+    (r"patch_proj/w$", (None, ("data",))),
+    (r"head\d*/w$", (("data",), ("model",))),               # audio codebook heads
+]
+
+
+def _spec_for_path(path: str, ndim: int) -> P:
+    policy = current_policy()
+    for pattern, trailing in _PARAM_RULES:
+        if re.search(pattern, path):
+            pad = ndim - len(trailing)
+            if pad < 0:  # rule longer than leaf rank: trim leading rule dims
+                trailing = trailing[-ndim:]
+                pad = 0
+            entries = list(trailing)
+            is_expert = "experts/" in path
+            if not (policy.tp_params or (is_expert and policy.shard_experts)):
+                entries = [
+                    None if e and "model" in (e if isinstance(e, tuple) else (e,))
+                    else e
+                    for e in entries
+                ]
+            if not policy.fsdp_params:
+                entries = [
+                    None if e and "data" in (e if isinstance(e, tuple) else (e,))
+                    else e
+                    for e in entries
+                ]
+            return P(*([None] * pad + entries))
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params: Any) -> Any:
+    """PartitionSpec pytree mirroring ``params`` via path conventions."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(_path_str(path), jnp.ndim(leaf)),
+        params,
+    )
+
+
+def apply_named_sharding(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree (divisibility-validated) for jit in/out specs."""
+    specs = param_specs(params)
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: NamedSharding(
+            mesh, validate_spec(spec, jnp.shape(leaf), mesh)
+        ),
+        params,
+        specs,
+    )

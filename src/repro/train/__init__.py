@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, checkpointing, fault
+tolerance, schedules."""

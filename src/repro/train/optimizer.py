@@ -1,0 +1,230 @@
+"""Optimizers: AdamW with optional block-wise int8 moment quantization,
+global-norm clipping, and warmup+cosine schedules.
+
+Memory layout at scale (the numbers that make Jamba-398B trainable on a
+single 256-chip v5e pod, see EXPERIMENTS.md §Dry-run):
+
+  params fp32 (master)      4 B/param   sharded data×model (FSDP+TP)
+  grads  bf16->fp32         4 B/param   (transient)
+  m, v   int8 + scales     ~2.03 B/param  (vs 8 B for fp32 Adam)
+
+Compute casts params to bf16 on the fly, so no separate bf16 copy is
+stored.  Moment quantization is block-wise symmetric (int8, absmax
+scale per 256-element block) for m and block-wise unsigned for v —
+the bitsandbytes recipe expressed in pure JAX; the quantization is
+requantize-on-write so errors do not accumulate beyond one step's
+rounding (validated against fp32 Adam in tests/test_optimizer.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "Schedule", "warmup_cosine", "global_norm", "clip_by_global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# Quantized moments are stored in the PARAM'S OWN SHAPE (int8 codes) with
+# one fp32 scale per last-dim row.  This is deliberate: block-reshaped
+# (N/256, 256) moment layouts shard differently from their parameters,
+# and XLA's SPMD partitioner falls back to "involuntary full
+# rematerialization" (replicate-then-reshard) on every optimizer update —
+# observed as multi-GB copies in the baseline dry-run (EXPERIMENTS.md
+# §Perf iteration 1).  Shape-mirroring codes inherit the param
+# PartitionSpec exactly, so the update is collective-free.
+#
+# Codecs: the first moment uses a SIGNED log grid (sign ⊗ 127 log-spaced
+# magnitudes over 7 decades), the second moment stores sqrt(nu) on an
+# UNSIGNED log grid — linear int8 collapses small rsqrt denominators to
+# zero and diverges (observed: loss 6.2 → 668, EXPERIMENTS.md).
+
+_ULOG_TABLE = jnp.concatenate(
+    [jnp.zeros((1,), jnp.float32),
+     jnp.exp(jnp.linspace(jnp.log(1e-7), 0.0, 255)).astype(jnp.float32)]
+)
+_ULOG_MIDS = (_ULOG_TABLE[1:] + _ULOG_TABLE[:-1]) / 2.0
+
+_SLOG_TABLE = jnp.concatenate(
+    [jnp.zeros((1,), jnp.float32),
+     jnp.exp(jnp.linspace(jnp.log(1e-7), 0.0, 127)).astype(jnp.float32)]
+)
+_SLOG_MIDS = (_SLOG_TABLE[1:] + _SLOG_TABLE[:-1]) / 2.0
+
+
+def _row_scale(x: jax.Array) -> jax.Array:
+    """abs-max over the last dim (scalar for 0/1-D params)."""
+    if x.ndim == 0:
+        return jnp.abs(x)
+    return jnp.max(jnp.abs(x), axis=-1)
+
+
+def _quantize_signed(x: jax.Array):
+    """fp32 param-shaped -> (int8 codes same shape, fp32 row scales).
+
+    Signed log-grid: q ∈ [-127, 127], |q| indexes the magnitude table."""
+    scale = _row_scale(x)
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None] if x.ndim else \
+        jnp.where(scale > 0, scale, 1.0)
+    ratio = jnp.abs(x) / safe
+    mag = jnp.searchsorted(_SLOG_MIDS, ratio).astype(jnp.int8)
+    q = jnp.where(x < 0, -mag, mag).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_signed(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    mag = _SLOG_TABLE[jnp.abs(q).astype(jnp.int32)]
+    sgn = jnp.sign(q.astype(jnp.float32))
+    s = scale[..., None] if len(shape) else scale
+    return (sgn * mag * s).reshape(shape)
+
+
+def _quantize_log_unsigned(x: jax.Array):
+    """Non-negative fp32 param-shaped -> (uint8 codes, fp32 row scales)."""
+    scale = _row_scale(x)
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None] if x.ndim else \
+        jnp.where(scale > 0, scale, 1.0)
+    ratio = x / safe
+    q = jnp.searchsorted(_ULOG_MIDS, ratio).astype(jnp.uint8)
+    return q, scale
+
+
+def _dequantize_log_unsigned(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    s = scale[..., None] if len(shape) else scale
+    return (_ULOG_TABLE[q.astype(jnp.int32)] * s).reshape(shape)
+
+
+@dataclass(frozen=True)
+class Schedule:
+    base_lr: float
+    warmup_steps: int
+    total_steps: int
+    min_ratio: float = 0.1
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = self.base_lr * step / max(self.warmup_steps, 1)
+        progress = jnp.clip(
+            (step - self.warmup_steps)
+            / max(self.total_steps - self.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = self.base_lr * (
+            self.min_ratio
+            + (1 - self.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        )
+        return jnp.where(step < self.warmup_steps, warm, cos)
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int) -> Schedule:
+    return Schedule(base_lr, warmup, total)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], AdamWState]
+    update: Callable[[Any, AdamWState, Any, jax.Array | float], tuple[Any, AdamWState]]
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    quantized: bool = False,
+) -> Optimizer:
+    """AdamW; ``quantized=True`` stores moments as block-int8."""
+
+    def _decayable(path) -> bool:
+        # No weight decay on norms/biases/1-D params (standard practice).
+        last = str(getattr(path[-1], "key", path[-1]))
+        return last not in ("scale", "b", "A_log", "dt_bias", "D")
+
+    def init(params) -> AdamWState:
+        if quantized:
+            def qzero_m(p):
+                q, s = _quantize_signed(jnp.zeros(p.shape, jnp.float32))
+                return {"q": q, "s": s}
+
+            def qzero_u(p):
+                q, s = _quantize_log_unsigned(jnp.zeros(p.shape, jnp.float32))
+                return {"q": q, "s": s}
+
+            mu = jax.tree_util.tree_map(qzero_m, params)
+            nu = jax.tree_util.tree_map(qzero_u, params)  # stores sqrt(nu)
+        else:
+            mu = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            nu = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return AdamWState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state: AdamWState, params, lr) -> tuple[Any, AdamWState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(path, g, p, mu, nu):
+            g = g.astype(jnp.float32)
+            if quantized:
+                mu_f = _dequantize_signed(mu["q"], mu["s"], g.shape)
+                u = _dequantize_log_unsigned(nu["q"], nu["s"], g.shape)
+                nu_f = u * u  # stored as sqrt(nu)
+            else:
+                mu_f, nu_f = mu, nu
+            mu_f = b1 * mu_f + (1 - b1) * g
+            nu_f = b2 * nu_f + (1 - b2) * g * g
+            update = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + eps)
+            if weight_decay and _decayable(path):
+                update = update + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+            if quantized:
+                qm, sm = _quantize_signed(mu_f)
+                qn, sn = _quantize_log_unsigned(jnp.sqrt(nu_f))
+                return new_p, {"q": qm, "s": sm}, {"q": qn, "s": sn}
+            return new_p, mu_f, nu_f
+
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        paths = [p for p, _ in flat]
+        treedef = jax.tree_util.tree_structure(grads)
+        gs = [g for _, g in flat]
+        ps = jax.tree_util.tree_leaves(params)
+        mus = treedef.flatten_up_to(state.mu)
+        nus = treedef.flatten_up_to(state.nu)
+        out = [upd(path, g, p, m, n)
+               for path, g, p, m, n in zip(paths, gs, ps, mus, nus)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_params, AdamWState(step, new_mu, new_nu)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,64 @@
+"""Featurization (AGG) segment-reduction tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregate import aggregate_by_key
+
+
+def _reference(keys, values, agg):
+    out = {}
+    for k in np.unique(keys):
+        v = values[keys == k]
+        if agg == "avg":
+            out[int(k)] = float(np.mean(v))
+        elif agg == "sum":
+            out[int(k)] = float(np.sum(v))
+        elif agg == "count":
+            out[int(k)] = float(len(v))
+        elif agg == "min":
+            out[int(k)] = float(np.min(v))
+        elif agg == "max":
+            out[int(k)] = float(np.max(v))
+        elif agg == "first":
+            out[int(k)] = float(v[0])
+        elif agg == "mode":
+            vals, counts = np.unique(v, return_counts=True)
+            out[int(k)] = float(vals[np.argmax(counts)])
+    return out
+
+
+@pytest.mark.parametrize("agg", ["avg", "sum", "count", "min", "max", "first", "mode"])
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_matches_reference(agg, data):
+    n = data.draw(st.integers(1, 200))
+    seed = data.draw(st.integers(0, 2**31))
+    r = np.random.default_rng(seed)
+    keys = r.integers(0, 20, size=n).astype(np.uint32)
+    values = r.integers(-5, 6, size=n).astype(np.float32)
+    uk, uv = aggregate_by_key(keys, values, agg)
+    got = dict(zip(uk.astype(int).tolist(), uv.astype(float).tolist()))
+    assert got == pytest.approx(_reference(keys, values, agg))
+
+
+def test_paper_example2():
+    """Example 2 from the paper: K_Z=[a,b,b,b,c,c,c], Z=[1,2,2,5,0,3,3]."""
+    keys = np.array([1, 2, 2, 2, 3, 3, 3], dtype=np.uint32)
+    z = np.array([1, 2, 2, 5, 0, 3, 3], dtype=np.float32)
+    uk, uv = aggregate_by_key(keys, z, "avg")
+    assert dict(zip(uk.tolist(), uv.tolist())) == {1: 1.0, 2: 3.0, 3: 2.0}
+    uk, uv = aggregate_by_key(keys, z, "mode")
+    assert dict(zip(uk.tolist(), uv.tolist())) == {1: 1.0, 2: 2.0, 3: 3.0}
+    uk, uv = aggregate_by_key(keys, z, "count")
+    assert dict(zip(uk.tolist(), uv.tolist())) == {1: 1.0, 2: 3.0, 3: 3.0}
+
+
+def test_type_errors():
+    with pytest.raises(TypeError):
+        aggregate_by_key(
+            np.array([1, 1], dtype=np.uint32), np.array(["a", "b"]), "avg"
+        )
+    with pytest.raises(ValueError):
+        aggregate_by_key(np.zeros(2, np.uint32), np.zeros(2), "median")

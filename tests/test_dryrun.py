@@ -1,0 +1,60 @@
+"""Integration test: the multi-pod dry-run machinery end to end on the
+real 512-device forced-host topology (subprocess — device count is fixed
+at jax init).  One train cell + one decode cell; the full 2-mesh sweep
+runs via ``python -m repro.launch.dryrun --all --both-meshes`` and is
+recorded in EXPERIMENTS.md."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=540):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args, "--force",
+         "--tag", "test"],
+        capture_output=True, text=True, timeout=timeout,
+        env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")),
+        cwd=REPO,
+    )
+    assert out.returncode == 0, out.stdout[-800:] + out.stderr[-2000:]
+    return out.stdout
+
+
+class TestDryRun:
+    def test_train_cell_single_pod(self):
+        out = _run_dryrun(["--arch", "internlm2-1.8b", "--shape", "train_4k"])
+        assert "[ok]" in out
+        path = os.path.join(REPO, "results", "dryrun",
+                            "internlm2-1.8b__train_4k__16x16__test.json")
+        rep = json.load(open(path))
+        assert rep["status"] == "ok"
+        assert rep["mesh"] == {"data": 16, "model": 16}
+        assert rep["cost_analysis"]["flops"] > 1e12
+        assert rep["collectives"]["all-reduce"]["count"] > 0
+        # FSDP param sharding: ~1.9B params * 4B / 256 devices
+        assert rep["param_bytes_per_device"] < 40e6
+
+    def test_decode_cell_multi_pod(self):
+        out = _run_dryrun(["--arch", "olmo-1b", "--shape", "decode_32k",
+                           "--multi-pod"])
+        assert "[ok]" in out
+        path = os.path.join(REPO, "results", "dryrun",
+                            "olmo-1b__decode_32k__2x16x16__test.json")
+        rep = json.load(open(path))
+        assert rep["status"] == "ok"
+        assert rep["mesh"] == {"pod": 2, "data": 16, "model": 16}
+
+    def test_long_500k_skip_for_full_attention(self):
+        out = _run_dryrun(["--arch", "olmo-1b", "--shape", "long_500k"])
+        assert "[skipped]" in out
+        path = os.path.join(REPO, "results", "dryrun",
+                            "olmo-1b__long_500k__16x16__test.json")
+        rep = json.load(open(path))
+        assert rep["status"] == "skipped"
+        assert "sub-quadratic" in rep["reason"]

@@ -1,0 +1,96 @@
+"""Unit + property tests for the hashing primitives."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+class TestMurmur3Bytes:
+    # Reference vectors for MurmurHash3 x86 32-bit.
+    VECTORS = [
+        (b"", 0, 0x00000000),
+        (b"", 1, 0x514E28B7),
+        (b"hello", 0, 0x248BFA47),
+        (b"hello, world", 0, 0x149BBB7F),
+        (b"The quick brown fox jumps over the lazy dog", 0, 0x2E4FF723),
+    ]
+
+    @pytest.mark.parametrize("data,seed,expected", VECTORS)
+    def test_known_vectors(self, data, seed, expected):
+        assert hashing.murmur3_bytes(data, seed) == expected
+
+
+class TestWordHash:
+    def test_matches_bytes_hash(self):
+        # The JAX word hash must equal the byte hash of the 4-byte LE word.
+        for word in [0, 1, 0xDEADBEEF, 0xFFFFFFFF, 12345]:
+            expected = hashing.murmur3_bytes(
+                int(word).to_bytes(4, "little"), 7
+            )
+            got = int(hashing.murmur3_32(jnp.uint32(word), seed=7))
+            assert got == expected, hex(word)
+
+    @given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+    @settings(max_examples=30, deadline=None)
+    def test_numpy_jax_agree(self, words):
+        arr = np.asarray(words, dtype=np.uint32)
+        np_h = hashing.murmur3_32_np(arr, seed=3)
+        jx_h = np.asarray(hashing.murmur3_32(jnp.asarray(arr), seed=3))
+        np.testing.assert_array_equal(np_h, jx_h)
+
+    def test_fibonacci_order_isomorphic_to_unit(self):
+        h = np.asarray([0, 1, 2, 1000, 2**31, 2**32 - 1], dtype=np.uint32)
+        f = hashing.fibonacci32_np(h)
+        u = np.asarray(hashing.to_unit(jnp.asarray(f)))
+        assert np.all((u >= 0) & (u < 1))
+        # integer ordering == float ordering
+        assert np.array_equal(np.argsort(f, kind="stable"),
+                              np.argsort(u, kind="stable"))
+
+    def test_uniformity_coarse(self):
+        """Fibonacci(murmur3(i)) should fill the unit range uniformly."""
+        n = 50_000
+        h = hashing.fibonacci32_np(
+            hashing.murmur3_32_np(np.arange(n, dtype=np.uint32), seed=0)
+        )
+        u = h.astype(np.float64) / 2**32
+        counts, _ = np.histogram(u, bins=20, range=(0, 1))
+        # chi-square-ish: each bin within 10% of expectation
+        assert np.all(np.abs(counts - n / 20) < 0.1 * n / 20)
+
+
+class TestOccurrenceIndex:
+    def test_basic(self):
+        keys = np.array([5, 5, 3, 5, 3, 9])
+        j = hashing.occurrence_index(keys)
+        np.testing.assert_array_equal(j, [1, 2, 1, 3, 2, 1])
+
+    def test_empty(self):
+        assert len(hashing.occurrence_index(np.array([], dtype=np.int64))) == 0
+
+    @given(st.lists(st.integers(0, 5), min_size=1, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def test_property_uniqueness_and_order(self, keys):
+        keys = np.asarray(keys)
+        j = hashing.occurrence_index(keys)
+        # <k, j> pairs are unique
+        pairs = set(zip(keys.tolist(), j.tolist()))
+        assert len(pairs) == len(keys)
+        # j counts occurrences in sequence order
+        for val in np.unique(keys):
+            js = j[keys == val]
+            np.testing.assert_array_equal(np.sort(js), np.arange(1, len(js) + 1))
+            np.testing.assert_array_equal(js, np.sort(js))  # increasing in order
+
+
+class TestHashStrings:
+    def test_distinct_and_deterministic(self):
+        vals = np.array(["a", "b", "a", "hello", "b"])
+        h = hashing.hash_strings(vals)
+        assert h[0] == h[2] and h[1] == h[4]
+        assert len({int(h[0]), int(h[1]), int(h[3])}) == 3
+        np.testing.assert_array_equal(h, hashing.hash_strings(vals))

@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps: pallas_call (interpret=True on CPU) vs
+the pure-jnp ref.py oracles, across shapes and dtypes."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.murmur3.ops import hash_keys
+from repro.kernels.murmur3.ref import murmur3_fib_ref
+from repro.kernels.pairwise_cheb.ops import pairwise_cheb
+from repro.kernels.pairwise_cheb.ref import pairwise_cheb_ref
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import chunked_attention, mha_reference
+
+RNG = np.random.default_rng(123)
+
+
+class TestMurmur3Kernel:
+    @pytest.mark.parametrize("n", [1, 7, 128, 1000, 32768, 40000])
+    def test_shapes_vs_ref(self, n):
+        keys = jnp.asarray(RNG.integers(0, 2**32, size=n, dtype=np.uint32))
+        seeds = jnp.asarray(RNG.integers(0, 2**32, size=n, dtype=np.uint32))
+        got = hash_keys(keys, seeds, use_kernel=True)
+        want = murmur3_fib_ref(keys, seeds)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_scalar_seed_and_no_fib(self):
+        keys = jnp.arange(5000, dtype=jnp.uint32)
+        got = hash_keys(keys, 17, fibonacci=False, use_kernel=True)
+        want = murmur3_fib_ref(keys, jnp.full(5000, 17, jnp.uint32), fibonacci=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_host_pipeline(self):
+        """Kernel output must equal the numpy ingestion-path hashes."""
+        from repro.core import hashing
+
+        raw = RNG.integers(0, 2**32, size=2048, dtype=np.uint32)
+        host = hashing.fibonacci32_np(hashing.murmur3_32_np(raw, seed=9))
+        dev = hash_keys(jnp.asarray(raw), 9, use_kernel=True)
+        np.testing.assert_array_equal(host, np.asarray(dev))
+
+
+class TestPairwiseChebKernel:
+    @pytest.mark.parametrize("n,block", [(64, 64), (256, 128), (300, 128), (1024, 256)])
+    def test_shapes_vs_ref(self, n, block):
+        x = jnp.asarray(RNG.normal(size=n), jnp.float32)
+        y = jnp.asarray(RNG.normal(size=n), jnp.float32)
+        mask = jnp.asarray(RNG.uniform(size=n) > 0.2)
+        dx_k, dy_k, dj_k = pairwise_cheb(x, y, mask, use_kernel=True, block=block)
+        dx_r, dy_r, dj_r = pairwise_cheb_ref(x, y, mask)
+        np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_r))
+        np.testing.assert_allclose(np.asarray(dy_k), np.asarray(dy_r))
+        np.testing.assert_allclose(np.asarray(dj_k), np.asarray(dj_r))
+
+    def test_repeated_values_exact_zero(self):
+        """Mixture distributions need exact-zero plateaus preserved."""
+        x = jnp.asarray(np.repeat([1.5, 2.5], 64), jnp.float32)
+        y = x
+        mask = jnp.ones(128, bool)
+        _, _, dj = pairwise_cheb(x, y, mask, use_kernel=True, block=128)
+        dj = np.asarray(dj)
+        same = np.repeat([0, 1], 64)
+        block_same = same[:, None] == same[None, :]
+        off_diag = ~np.eye(128, dtype=bool)
+        assert np.all(dj[block_same & off_diag] == 0.0)
+        assert np.all(np.isinf(dj[np.eye(128, dtype=bool)]))
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,hq,hkv,s,d",
+        [
+            (1, 2, 2, 128, 64),     # MHA
+            (2, 4, 2, 256, 64),     # GQA group 2
+            (1, 8, 2, 512, 128),    # GQA group 4, fuller tile
+            (1, 3, 1, 128, 80),     # non-pow2 heads, padded head_dim
+            (2, 2, 2, 384, 32),     # S not multiple of default block
+        ],
+    )
+    def test_vs_naive_reference(self, b, hq, hkv, s, d):
+        q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+        got = attention(q, k, v, use_kernel=True, block_q=128, block_k=128)
+        want = mha_reference(q, k, v, scale=1.0 / d**0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_bf16(self):
+        q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+        k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+        v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+        got = attention(q, k, v, use_kernel=True, block_q=128, block_k=128)
+        want = mha_reference(q, k, v, scale=1.0 / 8.0)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+        )
+
+    def test_non_causal(self):
+        q = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+        got = attention(q, k, v, causal=False, use_kernel=True,
+                        block_q=128, block_k=128)
+        want = mha_reference(q, k, v, scale=1.0 / 8.0, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_chunked_path_matches_naive(self):
+        """The dry-run/CPU chunked path is numerically flash-equivalent."""
+        q = jnp.asarray(RNG.normal(size=(2, 4, 256, 64)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)), jnp.float32)
+        got = chunked_attention(q, k, v, scale=0.125, chunk=64)
+        want = mha_reference(q, k, v, scale=0.125)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

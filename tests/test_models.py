@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs, one
+forward + one train step on CPU, shape and NaN assertions; plus
+decode/prefill consistency for every mixer family."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import layer_layout, scan_grouping
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train import train_step as TS
+from repro.data.pipeline import TokenPipeline
+
+RNG = np.random.default_rng(0)
+ALL_ARCHS = M.list_archs()
+
+
+def _batch_for(cfg, B=2, S=32):
+    if cfg.modality == "audio_stub":
+        batch = {"frame_embeds": jnp.asarray(
+            RNG.normal(size=(B, S, cfg.d_model)), jnp.float32)}
+        labels = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, size=(B, S, cfg.num_codebooks)),
+            jnp.int32)
+    elif cfg.modality == "vision_stub":
+        batch = {
+            "tokens": jnp.asarray(
+                RNG.integers(0, cfg.vocab_size, size=(B, S - cfg.num_patches)),
+                jnp.int32),
+            "patch_embeds": jnp.asarray(
+                RNG.normal(size=(B, cfg.num_patches, cfg.d_model)), jnp.float32),
+        }
+        labels = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    else:
+        batch = {"tokens": jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)}
+        labels = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    return batch, labels
+
+
+class TestArchSmoke:
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = M.get_config(arch, smoke=True)
+        params = T.init_params(cfg, jax.random.key(0))
+        B, S = 2, 32
+        batch, labels = _batch_for(cfg, B, S)
+        logits, aux = T.forward(cfg, params, batch)
+        if cfg.num_codebooks:
+            assert logits.shape == (B, S, cfg.num_codebooks, cfg.padded_vocab_size)
+        else:
+            assert logits.shape == (B, S, cfg.padded_vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+        assert float(aux) >= 0.0
+
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_one_train_step(self, arch):
+        cfg = M.get_config(arch, smoke=True)
+        opt = O.adamw(weight_decay=0.01)
+        sched = O.warmup_cosine(1e-3, 2, 10)
+        step_fn = jax.jit(TS.build_train_step(cfg, opt, sched))
+        state = TS.init_train_state(cfg, opt, jax.random.key(0))
+        batch, labels = _batch_for(cfg)
+        full = {"batch": batch, "labels": labels,
+                "loss_mask": jnp.ones(labels.shape, jnp.float32)}
+        state, metrics = step_fn(state, full)
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        assert int(state.opt_state.step) == 1
+
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_decode_matches_forward(self, arch):
+        """Prefill + one decode step == full forward at position S."""
+        cfg = M.get_config(arch, smoke=True)
+        params = T.init_params(cfg, jax.random.key(1))
+        B, S, MAX = 2, 16, 32
+        if cfg.modality == "audio_stub":
+            fe = jnp.asarray(RNG.normal(size=(B, S + 1, cfg.d_model)), jnp.float32)
+            prompt, full = {"frame_embeds": fe[:, :S]}, {"frame_embeds": fe}
+            nxt = fe[:, S : S + 1]
+        elif cfg.modality == "vision_stub":
+            toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(B, S + 1)),
+                               jnp.int32)
+            pe = jnp.asarray(RNG.normal(size=(B, cfg.num_patches, cfg.d_model)),
+                             jnp.float32)
+            prompt = {"tokens": toks[:, :S], "patch_embeds": pe}
+            full = {"tokens": toks, "patch_embeds": pe}
+            nxt = toks[:, S : S + 1]
+        else:
+            toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(B, S + 1)),
+                               jnp.int32)
+            prompt, full = {"tokens": toks[:, :S]}, {"tokens": toks}
+            nxt = toks[:, S : S + 1]
+
+        logits_pre, caches = T.prefill(cfg, params, prompt, max_len=MAX)
+        logits_ref, _ = T.forward(cfg, params, prompt)
+        np.testing.assert_allclose(
+            np.asarray(logits_pre[:, 0]), np.asarray(logits_ref[:, -1]),
+            atol=1e-4,
+        )
+        pos = S + (cfg.num_patches if cfg.modality == "vision_stub" else 0)
+        logits_dec, _ = T.decode_step(cfg, params, caches, nxt, jnp.int32(pos))
+        logits_full, _ = T.forward(cfg, params, full)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+            atol=1e-4,
+        )
+
+
+class TestLayerLayout:
+    def test_jamba_interleave(self):
+        cfg = M.get_config("jamba-1.5-large-398b")
+        layout = layer_layout(cfg)
+        attn = [i for i, s in enumerate(layout) if s.mixer == "attn"]
+        assert len(attn) == 9  # 72 / 8: exactly 1:7 attn:mamba
+        assert all(i % 8 == 4 for i in attn)
+        moe = [i for i, s in enumerate(layout) if s.ffn == "moe"]
+        assert len(moe) == 36  # every other layer
+        prefix, g, group = scan_grouping(cfg)
+        assert (len(prefix), g, len(group)) == (0, 9, 8)
+
+    def test_deepseek_first_dense(self):
+        cfg = M.get_config("deepseek-v2-lite-16b")
+        layout = layer_layout(cfg)
+        assert layout[0].ffn == "dense" and layout[0].mixer == "mla"
+        assert all(s.ffn == "moe" for s in layout[1:])
+        prefix, g, group = scan_grouping(cfg)
+        assert len(prefix) == 1 and g == 26 and len(group) == 1
+
+    def test_dense_uniform(self):
+        cfg = M.get_config("mistral-nemo-12b")
+        prefix, g, group = scan_grouping(cfg)
+        assert len(prefix) == 0 and g == 40 and len(group) == 1
+
+    def test_mamba_attention_free(self):
+        cfg = M.get_config("mamba2-370m")
+        assert all(s.mixer == "mamba" for s in layer_layout(cfg))
+
+    def test_long_500k_applicability(self):
+        runnable = [a for a in ALL_ARCHS
+                    if M.shape_applicable(M.get_config(a), "long_500k")[0]]
+        assert sorted(runnable) == ["jamba-1.5-large-398b", "mamba2-370m"]
+
+
+class TestParamCounts:
+    """Full-config analytic param counts vs published sizes (±10%)."""
+
+    EXPECTED = {
+        "mistral-nemo-12b": 12.2e9,
+        "qwen1.5-110b": 111e9,
+        "internlm2-1.8b": 1.9e9,
+        "olmo-1b": 1.2e9,
+        "jamba-1.5-large-398b": 398e9,
+        "qwen3-moe-30b-a3b": 30.5e9,
+        "deepseek-v2-lite-16b": 15.7e9,
+        "internvl2-26b": 20e9,  # LM backbone of the 26B (InternLM2-20B)
+        "mamba2-370m": 0.37e9,
+        "musicgen-large": 3.3e9,
+    }
+
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_total(self, arch):
+        n = M.count_params_analytic(M.get_config(arch))
+        assert n == pytest.approx(self.EXPECTED[arch], rel=0.10), n
+
+    def test_active(self):
+        assert M.count_params_analytic(
+            M.get_config("jamba-1.5-large-398b"), active_only=True
+        ) == pytest.approx(94e9, rel=0.1)
+        assert M.count_params_analytic(
+            M.get_config("qwen3-moe-30b-a3b"), active_only=True
+        ) == pytest.approx(3.3e9, rel=0.1)
+
+
+class TestLearning:
+    def test_loss_decreases(self):
+        cfg = M.get_config("olmo-1b", smoke=True)
+        opt = O.adamw(weight_decay=0.01)
+        sched = O.warmup_cosine(3e-3, 5, 100)
+        step_fn = jax.jit(TS.build_train_step(cfg, opt, sched))
+        state = TS.init_train_state(cfg, opt, jax.random.key(0))
+        pipe = TokenPipeline(cfg, batch=8, seq=64, seed=0)
+        losses = []
+        for _ in range(30):
+            batch = jax.tree_util.tree_map(jnp.asarray, pipe.next_batch())
+            state, m = step_fn(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 1.0

@@ -1,0 +1,158 @@
+"""Sharding-rule tests + multi-device parity via subprocess."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+from repro.parallel.decode_attention import decode_attention, _local_decode
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RNG = np.random.default_rng(4)
+
+
+class TestParamSpecs:
+    def test_rules_cover_all_archs(self):
+        """Every param leaf of every arch matches some rule (matrix leaves
+        must not silently fall through to full replication)."""
+        for arch in M.list_archs():
+            cfg = M.get_config(arch, smoke=True)
+            shapes = M.abstract_params(cfg)
+            specs = SH.param_specs(shapes)
+            flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+            spec_leaves = jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: isinstance(x, P)
+            )
+            for (path, leaf), spec in zip(flat, spec_leaves):
+                name = SH._path_str(path)
+                # norm scales / biases are replicated by design
+                if name.endswith("/scale") or name.endswith("/b"):
+                    continue
+                if leaf.ndim >= 2 and max(leaf.shape) >= 64:
+                    assert any(e is not None for e in spec), (arch, name)
+
+    def test_divisibility_validation(self):
+        mesh = jax.make_mesh((1,), ("model",))
+        # fake a 16-way axis via abstract mesh is awkward; test the logic
+        mesh16 = jax.sharding.AbstractMesh((16,), ("model",))
+        spec = SH.validate_spec(P("model"), (8,), mesh16)
+        assert spec == P(None)  # 8 not divisible by 16 -> replicate
+        spec = SH.validate_spec(P("model"), (32,), mesh16)
+        assert spec == P("model")
+
+    def test_embedding_padded_vocab_shards(self):
+        cfg = M.get_config("internvl2-26b")  # vocab 92553 (odd)
+        assert cfg.padded_vocab_size % 256 == 0
+        mesh16 = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        spec = SH.validate_spec(
+            P("model", "data"), (cfg.padded_vocab_size, cfg.d_model), mesh16
+        )
+        assert spec == P("model", "data")
+
+
+class TestDecodeAttention:
+    def test_local_matches_naive(self):
+        B, S, Hkv, g, Dh = 2, 64, 2, 3, 16
+        H = Hkv * g
+        q = jnp.asarray(RNG.normal(size=(B, H, Dh)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+        pos = 40
+        out = decode_attention(q, k, v, jnp.int32(pos), scale=0.25)
+        # naive reference
+        kf = np.repeat(np.asarray(k), g, axis=2)  # (B,S,H,Dh)
+        vf = np.repeat(np.asarray(v), g, axis=2)
+        s = np.einsum("bhd,bshd->bhs", np.asarray(q), kf) * 0.25
+        s[:, :, pos + 1:] = -1e30
+        w = np.exp(s - s.max(-1, keepdims=True))
+        w /= w.sum(-1, keepdims=True)
+        ref = np.einsum("bhs,bshd->bhd", w, vf)
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+    def test_merge_math_equals_single_shard(self):
+        """Partial-softmax merge across a fake axis == single pass."""
+        B, S, Hkv, Dh = 1, 32, 2, 8
+        q = jnp.asarray(RNG.normal(size=(B, Hkv, Dh)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+        full = _local_decode(q, k, v, jnp.int32(S - 1), 0.3)
+        # emulate 2 shards by manual merge
+        import jax.numpy as jnp2
+        def part(ks, vs, off):
+            Bq, Hq, D = q.shape
+            qf = q.reshape(B, Hkv, 1, D).astype(jnp.float32)
+            sc = jnp.einsum("bkgd,bskd->bkgs", qf, ks) * 0.3
+            live = (off + jnp.arange(ks.shape[1])) <= S - 1
+            sc = jnp.where(live[None, None, None], sc, -1e30)
+            m = jnp.max(sc, -1)
+            p = jnp.exp(sc - m[..., None])
+            return m, jnp.sum(p, -1), jnp.einsum("bkgs,bskd->bkgd", p, vs)
+        m1, l1, o1 = part(k[:, :16], v[:, :16], 0)
+        m2, l2, o2 = part(k[:, 16:], v[:, 16:], 16)
+        mg = jnp.maximum(m1, m2)
+        c1, c2 = jnp.exp(m1 - mg), jnp.exp(m2 - mg)
+        merged = (o1 * c1[..., None] + o2 * c2[..., None]) / (
+            (l1 * c1 + l2 * c2)[..., None]
+        )
+        np.testing.assert_allclose(
+            np.asarray(full), np.asarray(merged.reshape(B, Hkv, Dh)), atol=1e-5
+        )
+
+
+class TestMultiDeviceParity:
+    """Sharded train step == single-device train step (4 fake devices)."""
+
+    SCRIPT = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import model as M
+        from repro.train import optimizer as O, train_step as TS
+        from repro.data.pipeline import TokenPipeline
+        from repro.parallel.sharding import mesh_context, apply_named_sharding
+
+        cfg = M.get_config("internlm2-1.8b", smoke=True)
+        opt = O.adamw(weight_decay=0.01)
+        sched = O.warmup_cosine(1e-3, 2, 20)
+        pipe = TokenPipeline(cfg, batch=4, seq=32, seed=0)
+        batches = [jax.tree_util.tree_map(jnp.asarray, pipe.next_batch())
+                   for _ in range(5)]
+
+        def run(mesh):
+            with mesh_context(mesh):
+                step = jax.jit(TS.build_train_step(cfg, opt, sched))
+                state = TS.init_train_state(cfg, opt, jax.random.key(0))
+                if mesh is not None:
+                    state = state._replace(params=jax.device_put(
+                        state.params, apply_named_sharding(state.params, mesh)))
+                losses = []
+                for b in batches:
+                    state, m = step(state, b)
+                    losses.append(float(m["loss"]))
+            return losses
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        l_sharded = run(mesh)
+        l_single = run(None)
+        np.testing.assert_allclose(l_sharded, l_single, rtol=2e-4)
+        print("PARITY-OK", l_sharded[-1])
+    """)
+
+    def test_sharded_equals_single(self):
+        out = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, timeout=420,
+            env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")),
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "PARITY-OK" in out.stdout

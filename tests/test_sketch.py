@@ -1,0 +1,134 @@
+"""Sketch-builder tests: size bounds, uniformity, coordination."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.join import sketch_join
+from repro.core.sketch import SKETCH_METHODS, build_sketch
+
+RNG = np.random.default_rng(0)
+
+
+def _hashed_keys(raw):
+    return np.asarray(
+        hashing.murmur3_32_np(np.asarray(raw, dtype=np.uint32), seed=1)
+    )
+
+
+class TestSizeBounds:
+    @given(
+        st.integers(2, 6),  # log2 sketch size
+        st.lists(st.integers(0, 50), min_size=1, max_size=400),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_bounds_all_methods(self, log_n, raw_keys):
+        n = 2**log_n
+        keys = _hashed_keys(raw_keys)
+        values = RNG.normal(size=len(keys)).astype(np.float32)
+        for method in SKETCH_METHODS:
+            sk = build_sketch(keys, values, n=n, method=method, side="train")
+            cap = 2 * n if method in ("lv2sk", "prisk") else n
+            assert sk.size <= cap, method
+            if method == "tupsk":
+                assert sk.size == min(n, len(keys))
+            if method in ("lv2sk", "prisk"):
+                # >= n whenever #distinct keys >= n (paper Section IV-A)
+                if sk.source_distinct_keys >= n:
+                    assert sk.size >= n
+
+    def test_cand_side_unique_keys(self):
+        keys = _hashed_keys(RNG.integers(0, 100, size=1000))
+        values = RNG.normal(size=1000).astype(np.float32)
+        for method in SKETCH_METHODS:
+            sk = build_sketch(keys, values, n=64, method=method, side="cand", agg="avg")
+            valid = sk.key_hashes[sk.mask]
+            assert len(np.unique(valid)) == len(valid), method
+
+
+class TestTupskUniformity:
+    def test_row_inclusion_proportional_to_key_frequency(self):
+        """Paper Section IV-B: TUPSK samples rows uniformly, so a key
+        holding 95% of rows gets ~95% of sketch slots; LV2SK gives it
+        at most its level-2 cap and CSK exactly one."""
+        n_rows, n = 2000, 64
+        shares = []
+        for trial in range(30):
+            # key 0 repeats 95%, keys 1..100 spread over the rest
+            raw = np.where(
+                RNG.uniform(size=n_rows) < 0.95,
+                0,
+                RNG.integers(1, 101, size=n_rows),
+            ).astype(np.uint32)
+            keys = np.asarray(
+                hashing.murmur3_32_np(raw, seed=np.uint32(trial))
+            )
+            vals = RNG.normal(size=n_rows).astype(np.float32)
+            sk = build_sketch(keys, vals, n=n, method="tupsk", side="train")
+            heavy = keys[np.flatnonzero(raw == 0)[0]] if (raw == 0).any() else None
+            share = np.mean(sk.key_hashes[sk.mask] == heavy)
+            shares.append(share)
+        assert abs(np.mean(shares) - 0.95) < 0.05
+
+    def test_paper_pathological_example(self):
+        """Paper's extreme example: K=[a,b,c,d,e,f*95]; LV2SK level-1 may
+        exclude f entirely, TUPSK almost surely samples mostly f-rows."""
+        raw = np.array([1, 2, 3, 4, 5] + [6] * 95, dtype=np.uint32)
+        y = np.array([0, 0, 0, 0, 0] + list(range(1, 96)), dtype=np.float32)
+        shares = []
+        for seed in range(50):
+            keys = np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+            sk = build_sketch(keys, y, n=5, method="tupsk", side="train")
+            f_hash = keys[5]
+            shares.append(np.mean(sk.key_hashes[sk.mask] == f_hash))
+        # ~95% of sampled rows should carry key f on average
+        assert abs(np.mean(shares) - 0.95) < 0.08
+
+
+class TestCoordination:
+    def test_tupsk_join_recovers_when_contained(self):
+        """With full key containment and unique keys, a TUPSK sketch join
+        has size exactly n (Table I: 100% join size)."""
+        n_rows, n = 5000, 256
+        raw = np.arange(n_rows, dtype=np.uint32)
+        keys = _hashed_keys(raw)
+        yv = RNG.normal(size=n_rows).astype(np.float32)
+        xv = RNG.normal(size=n_rows).astype(np.float32)
+        st_ = build_sketch(keys, yv, n=n, method="tupsk", side="train")
+        sc_ = build_sketch(keys, xv, n=n, method="tupsk", side="cand", agg="avg")
+        assert sketch_join(st_, sc_).size == n
+
+    def test_indsk_not_coordinated(self):
+        n_rows, n = 5000, 256
+        keys = _hashed_keys(np.arange(n_rows))
+        yv = RNG.normal(size=n_rows).astype(np.float32)
+        st_ = build_sketch(keys, yv, n=n, method="indsk", side="train", table_seed=11)
+        sc_ = build_sketch(keys, yv, n=n, method="indsk", side="cand", table_seed=22)
+        js = sketch_join(st_, sc_)
+        # E[join] = n^2 / N ≈ 13 — far below n (quadratic shrinkage)
+        assert js.size < n // 4
+
+    def test_deterministic(self):
+        keys = _hashed_keys(RNG.integers(0, 500, size=3000))
+        vals = RNG.normal(size=3000).astype(np.float32)
+        for method in SKETCH_METHODS:
+            a = build_sketch(keys, vals, n=128, method=method, side="train")
+            b = build_sketch(keys, vals, n=128, method=method, side="train")
+            np.testing.assert_array_equal(a.key_hashes, b.key_hashes)
+            np.testing.assert_array_equal(a.values, b.values)
+
+
+class TestAggregation:
+    def test_cand_agg_matches_manual(self):
+        raw = np.array([7, 7, 7, 3, 3, 1], dtype=np.uint32)
+        keys = _hashed_keys(raw)
+        vals = np.array([1.0, 2.0, 6.0, 5.0, 7.0, 9.0], dtype=np.float32)
+        sk = build_sketch(keys, vals, n=8, method="tupsk", side="cand", agg="avg")
+        got = dict(zip(sk.key_hashes[sk.mask].tolist(), sk.values[sk.mask].tolist()))
+        expect = {
+            int(_hashed_keys([7])[0]): 3.0,
+            int(_hashed_keys([3])[0]): 6.0,
+            int(_hashed_keys([1])[0]): 9.0,
+        }
+        assert got == pytest.approx(expect)

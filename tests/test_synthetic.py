@@ -1,0 +1,73 @@
+"""Synthetic-benchmark generator tests (paper Section V-A / V-B1)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import estimators, synthetic
+
+RNG = np.random.default_rng(11)
+
+
+class TestTrinomial:
+    def test_param_selection_hits_target(self):
+        """CLT-approximated target vs exact MI: close for moderate m."""
+        for target in [0.3, 1.0, 2.0]:
+            p1, p2 = synthetic.trinomial_params_for_mi(target, RNG)
+            exact = synthetic.true_trinomial_mi(512, p1, p2)
+            assert exact == pytest.approx(target, abs=0.25), target
+
+    def test_full_sample_estimate_close_to_true(self):
+        """Reproduces Section V-B1: full-join MLE vs analytic truth."""
+        errs = []
+        for target in [0.5, 1.5, 2.5]:
+            pair = synthetic.gen_trinomial(10_000, 512, target, RNG)
+            mi = estimators.mle_mi(
+                jnp.asarray(pair.x), jnp.asarray(pair.y),
+                jnp.ones(10_000, bool),
+            )
+            errs.append(float(mi) - pair.true_mi)
+        assert np.sqrt(np.mean(np.square(errs))) < 0.15
+
+    def test_marginals_binomial(self):
+        pair = synthetic.gen_trinomial(20_000, 64, 1.0, RNG)
+        p1 = pair.params["p1"]
+        assert np.mean(pair.x) == pytest.approx(64 * p1, rel=0.05)
+        assert np.var(pair.x) == pytest.approx(64 * p1 * (1 - p1), rel=0.1)
+
+
+class TestCDUnif:
+    def test_formula_matches_paper_example(self):
+        # Paper: m=256 ≈ 4.85
+        assert synthetic.cdunif_true_mi(256) == pytest.approx(4.85, abs=0.01)
+
+    def test_full_sample_estimate(self):
+        pair = synthetic.gen_cdunif(10_000, 16, RNG)
+        mi = estimators.mixed_ksg_mi(
+            jnp.asarray(pair.x, jnp.float32), jnp.asarray(pair.y),
+            jnp.ones(10_000, bool),
+        )
+        assert float(mi) == pytest.approx(pair.true_mi, abs=0.12)
+
+
+class TestDecompose:
+    def test_keydep_key_frequency_follows_x(self):
+        pair = synthetic.gen_trinomial(5000, 64, 1.0, RNG)
+        train, cand = synthetic.decompose(pair, "keydep", RNG)
+        # one distinct hashed key per distinct X value
+        assert len(np.unique(train["key_hashes"])) == len(np.unique(pair.x))
+
+    def test_keyind_unique_keys(self):
+        pair = synthetic.gen_cdunif(5000, 32, RNG)
+        train, cand = synthetic.decompose(pair, "keyind", RNG)
+        assert len(np.unique(train["key_hashes"])) == 5000
+        assert len(np.unique(cand["key_hashes"])) == 5000
+
+    def test_keydep_requires_discrete(self):
+        pair = synthetic.gen_cdunif(100, 8, RNG)
+        pair = synthetic.GeneratedPair(
+            pair.y, pair.y, 0.0, False, False, {}
+        )
+        with pytest.raises(ValueError):
+            synthetic.decompose(pair, "keydep", RNG)
