@@ -23,7 +23,13 @@ import numpy as np
 import jax
 
 from repro.core import hashing
-from repro.core.discovery import SketchIndex, score_batch, distributed_topk
+from repro.core.discovery import (
+    SketchIndex,
+    distributed_topk,
+    score_batch,
+    score_batch_partitioned,
+    score_batch_reference,
+)
 from repro.core.sketch import build_sketch
 from repro.launch.mesh import make_host_mesh
 
@@ -64,18 +70,32 @@ def bench_discovery_throughput(quick: bool = False) -> list[tuple]:
     rows.append(("discovery/per_pair_loop", us_loop,
                  f"cands_per_s={1e6 / us_loop:.0f}"))
 
-    # 2. batched vmap (one compiled program for the whole repository)
-    mi, js = score_batch(train, cands)
+    # 2a. seed scoring path (double lexsort join + lax.switch over the
+    # materialized P×P estimators) — the old-vs-new baseline.
+    reps = 3
+    mi_seed, _ = score_batch_reference(train, cands)
+    mi_seed.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        mi_seed, _ = score_batch_reference(train, cands)
+        mi_seed.block_until_ready()
+    us_seed = (time.perf_counter() - t0) / reps / n_cands * 1e6
+    rows.append(("discovery/batched_vmap_seed", us_seed,
+                 f"cands_per_s={1e6 / us_seed:.0f}"))
+
+    # 2b. flash-KSG path: presorted single-searchsorted join +
+    # estimator-partitioned homogeneous programs + streamed kNN stats.
+    mi, js = score_batch_partitioned(train, cands)
     mi.block_until_ready()
     t0 = time.perf_counter()
-    reps = 3
     for _ in range(reps):
-        mi, js = score_batch(train, cands)
+        mi, js = score_batch_partitioned(train, cands)
         mi.block_until_ready()
     us_batch = (time.perf_counter() - t0) / reps / n_cands * 1e6
     rows.append(("discovery/batched_vmap", us_batch,
                  f"cands_per_s={1e6 / us_batch:.0f};"
-                 f"speedup_vs_loop={us_loop / us_batch:.1f}x"))
+                 f"speedup_vs_loop={us_loop / us_batch:.1f}x;"
+                 f"new_vs_seed={us_seed / us_batch:.1f}x"))
 
     # 3. mesh-sharded top-k (collective-merged)
     mesh = make_host_mesh(model=1)
@@ -120,4 +140,21 @@ def bench_kernel_hot_spots(quick: bool = False) -> list[tuple]:
     us = (time.perf_counter() - t0) / 5 * 1e6
     rows.append(("kernels/pairwise_cheb_jnp", us,
                  f"Mpairs_per_s={P * P / us:.1f}"))
+
+    # Streaming kNN-stats (flash-KSG) — same P, O(P·block) memory.
+    from repro.kernels.knn_stats.ops import ball_counts, knn_smallest
+
+    @jax.jit
+    def _knn_pass(xv, mv):
+        knn, _ = knn_smallest(xv, xv, mv, k=3, use_kernel=False)
+        return ball_counts(xv, xv, mv, knn[:, 2], use_kernel=False).x_lt
+
+    _knn_pass(x, mask).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        _knn_pass(x, mask).block_until_ready()
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    # Two full P×P pair sweeps per call (radius pass + count pass).
+    rows.append(("kernels/knn_stats_jnp", us,
+                 f"Mpairs_per_s={2 * P * P / us:.1f}"))
     return rows

@@ -1,12 +1,16 @@
 """Benchmark harness: one function per paper table/figure + the
-beyond-paper scale benches.  Prints ``name,us_per_call,derived`` CSV.
+beyond-paper scale benches.  Prints ``name,us_per_call,derived`` CSV and
+writes a machine-readable JSON snapshot (``BENCH_discovery.json`` by
+default) so the perf trajectory is tracked across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2] \
+      [--json BENCH_discovery.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -25,16 +29,29 @@ BENCHES = [
 ]
 
 
+def _parse_derived(derived: str) -> dict:
+    """'a=1.5x;b=2' -> {'a': '1.5x', 'b': '2'} (values kept verbatim)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            key, val = part.split("=", 1)
+            out[key] = val
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced trial counts (CI mode)")
     ap.add_argument("--only", default=None,
                     help="run a single bench by prefix")
+    ap.add_argument("--json", default="BENCH_discovery.json",
+                    help="write row results as JSON (empty string disables)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failures = []
+    results: dict[str, dict] = {}
     for name, fn in BENCHES:
         if args.only and not name.startswith(args.only):
             continue
@@ -47,7 +64,24 @@ def main() -> None:
             continue
         for rname, us, derived in rows:
             print(f"{rname},{us:.1f},{derived}", flush=True)
+            results[rname] = {
+                "us_per_call": round(float(us), 2),
+                "derived": _parse_derived(derived),
+            }
         print(f"# {name} wall={time.time() - t0:.1f}s", flush=True)
+    if args.json and results:
+        # Merge into any existing snapshot so `--only` runs refresh
+        # their rows without destroying the rest of the tracked file.
+        merged = {}
+        try:
+            with open(args.json) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            pass
+        merged.update(results)
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json} ({len(results)} rows updated)", flush=True)
     if failures:
         for name, err in failures:
             print(f"# FAILED {name}: {err}", file=sys.stderr)

@@ -4,36 +4,71 @@ A :class:`SketchIndex` holds candidate-side sketches for every
 (table, key-column, value-column) pair in a repository, stacked into
 dense arrays.  A discovery query takes a train-side sketch (the user's
 base table + target column) and ranks every candidate by estimated MI
-with the target — **without materializing any join** — in one
-jit-compiled, vmapped program.
+with the target — **without materializing any join** — in jit-compiled,
+vmapped programs.
 
-Scale-out story (this is what makes the technique deployable on a
-cluster): the candidate axis is embarrassingly parallel, so the stacked
-sketch arrays are sharded across the device mesh with ``jax.jit`` +
-``PartitionSpec('data')`` and each device scores its local shard; only
-the final (C,)-vector of scores is exchanged.  ``distributed_topk`` does
-the same under ``shard_map`` with an explicit per-shard ``lax.top_k``
-followed by a global merge, reducing the collective payload from O(C)
-to O(shards · k) — the pattern that matters when C is billions of
-column pairs.
+Hot-path layout (the flash-KSG discovery path):
+
+  * Candidate sketches are key-sorted at ingest, so the stacked arrays
+    (cached on the index — built once, reused by every query) feed
+    :func:`repro.core.join.sketch_join_presorted`: one ``searchsorted``
+    per candidate gathers both the float32 and uint32 value views.
+  * :func:`score_batch_partitioned` splits the candidate axis by
+    estimator id **at stack time** and compiles one homogeneous program
+    per estimator group.  The seed scorer (:func:`score_batch`) keeps a
+    ``lax.switch`` per candidate, which under ``vmap`` lowers to
+    ``select_n`` — every candidate paid for all four estimators.  The
+    partitioned scorer re-fuses group results into the original
+    candidate order, so mixed corpora stop paying ~4× redundant FLOPs.
+  * The KSG-family estimators stream kNN statistics through the fused
+    ``knn_stats`` kernel — no P×P distance matrix per candidate.
+
+Scale-out story: the candidate axis is embarrassingly parallel, so the
+stacked sketch arrays are sharded across the device mesh and each device
+scores its local shard; ``distributed_topk`` does the same under
+``shard_map`` with an explicit per-shard ``lax.top_k`` followed by a
+global merge, reducing the collective payload from O(C) to
+O(shards · k) — the pattern that matters when C is billions of column
+pairs.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= ~0.5: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+# The replication-check kwarg was renamed check_rep -> check_vma
+# independently of the import location; pick by signature, not version.
+import inspect as _inspect
+
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
 
 from repro.core import estimators
-from repro.core.join import sketch_join_jax
+from repro.core.join import sketch_join_jax, sketch_join_presorted
 from repro.core.sketch import Sketch, build_sketch
 
-__all__ = ["CandidateMeta", "SketchIndex", "score_batch", "distributed_topk"]
+__all__ = [
+    "CandidateMeta",
+    "SketchIndex",
+    "score_batch",
+    "score_batch_partitioned",
+    "score_batch_reference",
+    "distributed_topk",
+]
 
 # Estimator ids used in the per-candidate dispatch.
 _EST_MLE, _EST_MIXED, _EST_DC_XD, _EST_DC_YD = 0, 1, 2, 3
@@ -55,15 +90,40 @@ def _estimator_id(x_discrete: bool, y_discrete: bool) -> int:
     return _EST_DC_XD if x_discrete else _EST_DC_YD
 
 
+def _estimate(est_id: int, xf, xu, y_f, y_u, mask, k: int, impl: str = "fused"):
+    """One estimator on one joined sample; ``est_id`` is a static int.
+
+    The single source of the est_id -> estimator mapping — both the
+    switch scorer and the partitioned scorer dispatch through it, so
+    they cannot drift apart.
+    """
+    if est_id == _EST_MLE:
+        return estimators.mle_mi(xu, y_u, mask)
+    if est_id == _EST_MIXED:
+        return estimators.mixed_ksg_mi(xf, y_f, mask, k=k, impl=impl)
+    if est_id == _EST_DC_XD:  # discrete X (candidate feature), continuous Y
+        return estimators.dc_ksg_mi(
+            estimators.dense_rank(xu, mask), y_f, mask, k=k, impl=impl
+        )
+    # continuous X, discrete Y
+    return estimators.dc_ksg_mi(
+        estimators.dense_rank(y_u, mask), xf, mask, k=k, impl=impl
+    )
+
+
 def _score_one(
-    train_keys, train_vals_f, train_vals_u, train_mask, train_y_discrete,
+    train_keys, train_vals_f, train_vals_u, train_mask,
     cand_keys, cand_vals_f, cand_vals_u, cand_mask, est_id, k,
+    impl: str = "fused",
 ):
     """Join one candidate sketch against the train sketch and estimate MI.
 
     Discrete values travel as uint32 codes (exact), continuous as
     float32; ``est_id`` picks the estimator branch via ``lax.switch`` so
-    a single compiled program serves heterogeneous corpora.
+    a single compiled program serves heterogeneous corpora.  NOTE: under
+    ``vmap`` the switch lowers to ``select_n`` — ALL branches execute
+    for every candidate; :func:`score_batch_partitioned` is the fast
+    path for batch scoring.
     """
     xf, y_f, mask = sketch_join_jax(
         train_keys, train_vals_f, train_mask, cand_keys, cand_vals_f, cand_mask
@@ -71,20 +131,11 @@ def _score_one(
     xu, y_u, _ = sketch_join_jax(
         train_keys, train_vals_u, train_mask, cand_keys, cand_vals_u, cand_mask
     )
-
-    def mle(_):
-        return estimators.mle_mi(xu, y_u, mask)
-
-    def mixed(_):
-        return estimators.mixed_ksg_mi(xf, y_f, mask, k=k)
-
-    def dc_xd(_):  # discrete X (candidate feature), continuous Y
-        return estimators.dc_ksg_mi(estimators.dense_rank(xu, mask), y_f, mask, k=k)
-
-    def dc_yd(_):  # continuous X, discrete Y
-        return estimators.dc_ksg_mi(estimators.dense_rank(y_u, mask), xf, mask, k=k)
-
-    mi = jax.lax.switch(est_id, [mle, mixed, dc_xd, dc_yd], operand=None)
+    branches = [
+        (lambda _, i=i: _estimate(i, xf, xu, y_f, y_u, mask, k, impl))
+        for i in (_EST_MLE, _EST_MIXED, _EST_DC_XD, _EST_DC_YD)
+    ]
+    mi = jax.lax.switch(est_id, branches, operand=None)
     return mi, jnp.sum(mask)
 
 
@@ -94,13 +145,15 @@ def score_batch(train: dict, cands: dict, k: int = 3):
 
     ``cands`` arrays carry a leading candidate axis C; sharding that axis
     over the mesh ('data' axis) makes this a single-program multi-device
-    scoring pass.
+    scoring pass.  Per-candidate estimator dispatch runs through
+    ``lax.switch`` (all branches under vmap) — prefer
+    :func:`score_batch_partitioned` on the host-driven path.
     Returns (mi_scores (C,), join_sizes (C,)).
     """
     f = jax.vmap(
         lambda ck, cf, cu, cm, eid: _score_one(
             train["keys"], train["vals_f"], train["vals_u"], train["mask"],
-            train["y_discrete"], ck, cf, cu, cm, eid, k,
+            ck, cf, cu, cm, eid, k,
         )
     )
     return f(
@@ -109,54 +162,204 @@ def score_batch(train: dict, cands: dict, k: int = 3):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def score_batch_reference(train: dict, cands: dict, k: int = 3):
+    """Seed-identical scoring path, kept for benchmark comparison.
+
+    Double lexsort join per candidate + 4-way switch over the
+    *materialized* (P×P) estimators — exactly what the repository
+    shipped before the flash-KSG path; ``benchmarks/discovery_scale``
+    prints old-vs-new from this.
+    """
+    f = jax.vmap(
+        lambda ck, cf, cu, cm, eid: _score_one(
+            train["keys"], train["vals_f"], train["vals_u"], train["mask"],
+            ck, cf, cu, cm, eid, k,
+            impl="materialized",
+        )
+    )
+    return f(
+        cands["keys"], cands["vals_f"], cands["vals_u"], cands["mask"],
+        cands["est_id"],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("est_id", "k"))
+def _score_group(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+    *, est_id: int, k: int,
+):
+    """Homogeneous scorer: every candidate in the batch shares one
+    estimator, so no switch and no redundant branches are compiled.
+    Requires the sorted-at-ingest candidate key invariant."""
+
+    def one(ck, cf, cu, cm):
+        (xf, xu), (y_f, y_u), mask = sketch_join_presorted(
+            train_keys, train_mask, ck, cm,
+            (cf, cu), (train_vals_f, train_vals_u),
+        )
+        return _estimate(est_id, xf, xu, y_f, y_u, mask, k), jnp.sum(mask)
+
+    return jax.vmap(one)(cand_keys, cand_vals_f, cand_vals_u, cand_mask)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def partition_by_estimator(est_id: np.ndarray) -> list[tuple[int, np.ndarray]]:
+    """Stable partition of the candidate axis by estimator id."""
+    est_id = np.asarray(est_id)
+    return [
+        (int(eid), np.flatnonzero(est_id == eid))
+        for eid in np.unique(est_id)
+    ]
+
+
+def _pack_group(cands: dict, idx: np.ndarray) -> dict:
+    """Gather one estimator group into a contiguous padded batch.
+
+    Pads to the next power of two with masked duplicates of the first
+    row (bounding recompiles); padding rows produce empty joins and are
+    never read back.
+    """
+    g = len(idx)
+    G = _next_pow2(g)
+    idx_pad = np.concatenate([idx, np.full(G - g, idx[0], idx.dtype)])
+    cm = jnp.asarray(cands["mask"])[idx_pad]
+    if G > g:
+        cm = cm.at[g:].set(False)
+    return {
+        "keys": jnp.asarray(cands["keys"])[idx_pad],
+        "vals_f": jnp.asarray(cands["vals_f"])[idx_pad],
+        "vals_u": jnp.asarray(cands["vals_u"])[idx_pad],
+        "mask": cm,
+    }
+
+
+def score_batch_partitioned(
+    train: dict, cands: dict, k: int = 3,
+    groups: list[tuple] | None = None,
+):
+    """Estimator-partitioned batch scoring (the discovery fast path).
+
+    Runs one homogeneous compiled program per estimator group and
+    scatters the results back into the original candidate order.
+    Matches :func:`score_batch` output exactly on any corpus.
+
+    ``groups`` entries are ``(est_id, indices)`` or — as cached by
+    :meth:`SketchIndex.stacked` so repeat queries skip the per-group
+    gather entirely — ``(est_id, indices, packed_arrays)``.
+
+    Returns (mi_scores (C,), join_sizes (C,)).
+    """
+    if groups is None:
+        groups = partition_by_estimator(np.asarray(cands["est_id"]))
+    C = int(np.asarray(cands["est_id"]).shape[0])
+    mi_out = np.zeros(C, np.float32)
+    js_out = np.zeros(C, np.int32)
+    for entry in groups:
+        eid, idx = entry[0], entry[1]
+        packed = entry[2] if len(entry) > 2 else _pack_group(cands, idx)
+        g = len(idx)
+        mi, js = _score_group(
+            train["keys"], train["vals_f"], train["vals_u"], train["mask"],
+            packed["keys"], packed["vals_f"], packed["vals_u"], packed["mask"],
+            est_id=eid, k=k,
+        )
+        mi_out[idx] = np.asarray(mi[:g])
+        js_out[idx] = np.asarray(js[:g])
+    return jnp.asarray(mi_out), jnp.asarray(js_out)
+
+
+def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
+    """Per-shard and global result counts for the distributed top-k.
+
+    ``lax.top_k`` inside a shard cannot exceed the shard's candidate
+    count, but clamping must never shrink the *global* result below
+    ``min(top_k, C)``: every shard keeps ``min(top_k, shard_size)``
+    (all global top-k could live in one shard), and the merge returns
+    ``min(top_k, shards · per_shard)`` — the seed version returned only
+    the per-shard clamp's worth of results globally, silently dropping
+    valid candidates whenever ``shard_size < top_k``.
+    """
+    shard_size = c_padded // n_shards
+    k_shard = max(min(top_k, shard_size), 1)
+    k_final = min(top_k, n_shards * k_shard)
+    return k_shard, k_final
+
+
+@functools.lru_cache(maxsize=32)
+def _make_distributed_scorer(mesh: Mesh, k_shard: int, k: int):
+    """Compiled shard_map scorer, cached so repeat queries against the
+    same mesh re-trace nothing (the seed rebuilt + re-traced the
+    shard_map closure on every call)."""
+    axis = "data"
+    specs = P(axis)
+    rep = P()  # train sketch: replicated on every device
+
+    def local_score(tk, tf, tu, tm, ck, cf, cu, cm, eid):
+        train = {"keys": tk, "vals_f": tf, "vals_u": tu, "mask": tm}
+        mi, js = score_batch.__wrapped__(
+            train,
+            {"keys": ck, "vals_f": cf, "vals_u": cu, "mask": cm, "est_id": eid},
+            k=k,
+        )
+        v, i = jax.lax.top_k(mi, k_shard)
+        return v, i, js[i]
+
+    fn = _shard_map(
+        local_score,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, rep, specs, specs, specs, specs, specs),
+        out_specs=(specs, specs, specs),
+        **_SHARD_MAP_KW,
+    )
+    return jax.jit(fn)
+
+
 def distributed_topk(train: dict, cands: dict, mesh: Mesh, top_k: int, k: int = 3):
     """Mesh-sharded discovery query with per-shard top-k merge.
 
     Candidates sharded over the 'data' mesh axis; each shard scores
-    locally and emits only its top-k (scores, local indices); the merge
-    happens on the host after a gather of O(shards · k) scalars.
+    locally and emits only its top ``min(top_k, shard_size)`` (scores,
+    local indices); the merge happens on the host after a gather of
+    O(shards · k) scalars and returns the global top
+    ``min(top_k, C_padded)``.
     """
-    from jax import shard_map
-
     axis = "data"
     n_shards = mesh.shape[axis]
     C = cands["keys"].shape[0]
     if C % n_shards:
         raise ValueError(f"candidate count {C} not divisible by {n_shards} shards")
+    k_shard, k_final = _shard_topk_plan(C, n_shards, top_k)
 
-    def local_score(ck, cf, cu, cm, eid):
-        mi, js = score_batch.__wrapped__(
-            train, {"keys": ck, "vals_f": cf, "vals_u": cu, "mask": cm, "est_id": eid},
-            k=k,
-        )
-        v, i = jax.lax.top_k(mi, top_k)
-        return v, i, js[i]
-
-    specs = P(axis)
-    fn = shard_map(
-        local_score,
-        mesh=mesh,
-        in_specs=(specs, specs, specs, specs, specs),
-        out_specs=(specs, specs, specs),
-        check_vma=False,
-    )
+    fn = _make_distributed_scorer(mesh, k_shard, k)
     v, i, js = fn(
+        train["keys"], train["vals_f"], train["vals_u"], train["mask"],
         cands["keys"], cands["vals_f"], cands["vals_u"], cands["mask"],
         cands["est_id"],
     )
-    # v/i are (n_shards * top_k,) stacked per shard; globalize indices.
-    v = np.asarray(v).reshape(n_shards, top_k)
-    i = np.asarray(i).reshape(n_shards, top_k)
-    js = np.asarray(js).reshape(n_shards, top_k)
+    # v/i are (n_shards * k_shard,) stacked per shard; globalize indices.
+    v = np.asarray(v).reshape(n_shards, k_shard)
+    i = np.asarray(i).reshape(n_shards, k_shard)
+    js = np.asarray(js).reshape(n_shards, k_shard)
     shard_base = (np.arange(n_shards) * (C // n_shards))[:, None]
     gi = (i + shard_base).reshape(-1)
     flat_v = v.reshape(-1)
-    order = np.argsort(-flat_v)[:top_k]
+    order = np.argsort(-flat_v)[:k_final]
     return flat_v[order], gi[order], js.reshape(-1)[order]
 
 
 class SketchIndex:
-    """Repository-side index: candidate sketches stacked for batch scoring."""
+    """Repository-side index: candidate sketches stacked for batch scoring.
+
+    The stacked dense arrays (and their estimator partition) are cached
+    per (target dtype, padding) — built once, on-device, and reused by
+    every query until the corpus changes; the seed re-copied the whole
+    repository on each ``query`` call.
+    """
 
     def __init__(self, n: int = 256, method: str = "tupsk", agg: str = "first"):
         self.n = n
@@ -168,6 +371,8 @@ class SketchIndex:
         self._vals_u: list[np.ndarray] = []
         self._masks: list[np.ndarray] = []
         self._discrete: list[bool] = []
+        self._stacked_cache: dict[tuple[bool, int], dict] = {}
+        self._group_cache: dict[tuple[bool, int], list] = {}
 
     def __len__(self) -> int:
         return len(self.meta)
@@ -179,6 +384,14 @@ class SketchIndex:
             key_hashes, values, n=self.n, method=self.method, side="cand",
             agg=agg or self.agg, value_is_discrete=value_is_discrete,
         )
+        size = sk.size
+        # Presorted-join contract: valid keys strictly ascending.  A
+        # real exception (not assert): correctness of every subsequent
+        # query depends on it, including under python -O.
+        if not np.all(np.diff(sk.key_hashes[:size].astype(np.int64)) > 0):
+            raise ValueError(
+                "candidate sketch violates the sorted-at-ingest key invariant"
+            )
         self.meta.append(
             CandidateMeta(table, key_column, value_column, sk.value_is_discrete)
         )
@@ -192,6 +405,8 @@ class SketchIndex:
             self._vals_u.append(f.view(np.uint32))
         self._masks.append(sk.mask)
         self._discrete.append(sk.value_is_discrete)
+        self._stacked_cache.clear()
+        self._group_cache.clear()
 
     def add_table(self, table, key_column: str) -> None:
         """Index every (key, value) column pair of a Table."""
@@ -202,11 +417,17 @@ class SketchIndex:
                      col.value_array(), col.is_discrete)
 
     def stacked(self, y_is_discrete: bool, pad_to_multiple: int = 1) -> dict:
-        """Stack candidate sketches into dense arrays for score_batch.
+        """Stack candidate sketches into dense device arrays (cached).
 
         Pads the candidate axis (with zero-mask dummies) to a multiple of
-        ``pad_to_multiple`` so the axis shards evenly over a mesh.
+        ``pad_to_multiple`` so the axis shards evenly over a mesh.  The
+        result — and the estimator partition of its candidate axis — is
+        cached until the next ``add``.
         """
+        cache_key = (bool(y_is_discrete), int(pad_to_multiple))
+        hit = self._stacked_cache.get(cache_key)
+        if hit is not None:
+            return hit
         C = len(self.meta)
         if C == 0:
             raise ValueError("empty index")
@@ -226,13 +447,22 @@ class SketchIndex:
         )
         masks = stack(self._masks, bool)
         masks[C:] = False
-        return {
-            "keys": stack(self._keys, np.uint32),
-            "vals_f": stack(self._vals_f, np.float32),
-            "vals_u": stack(self._vals_u, np.uint32),
-            "mask": masks,
-            "est_id": est_ids,
+        out = {
+            "keys": jnp.asarray(stack(self._keys, np.uint32)),
+            "vals_f": jnp.asarray(stack(self._vals_f, np.float32)),
+            "vals_u": jnp.asarray(stack(self._vals_u, np.uint32)),
+            "mask": jnp.asarray(masks),
+            "est_id": jnp.asarray(est_ids),
         }
+        self._stacked_cache[cache_key] = out
+        # Pre-gather the padded per-group arrays too: repeat queries
+        # dispatch straight into the homogeneous scorers with zero
+        # per-query gather/pad work.
+        self._group_cache[cache_key] = [
+            (eid, idx, _pack_group(out, idx))
+            for eid, idx in partition_by_estimator(est_ids)
+        ]
+        return out
 
     @staticmethod
     def train_arrays(sk: Sketch) -> dict:
@@ -260,13 +490,20 @@ class SketchIndex:
         train = self.train_arrays(train_sketch)
         C = len(self.meta)
         if mesh is not None:
+            n_shards = mesh.shape["data"]
             cands = self.stacked(train_sketch.value_is_discrete,
-                                 pad_to_multiple=mesh.shape["data"])
-            k_eff = min(top_k * 4, cands["keys"].shape[0] // mesh.shape["data"])
-            v, gi, js = distributed_topk(train, cands, mesh, max(k_eff, 1))
+                                 pad_to_multiple=n_shards)
+            # Oversample 4x so the min_join post-filter can discard
+            # high-MI/low-support candidates without starving the
+            # result list; distributed_topk clamps per shard itself.
+            want = max(min(top_k * 4, cands["keys"].shape[0]), 1)
+            v, gi, js = distributed_topk(train, cands, mesh, want)
         else:
+            cache_key = (bool(train_sketch.value_is_discrete), 1)
             cands = self.stacked(train_sketch.value_is_discrete)
-            mi, jsz = score_batch(train, cands)
+            mi, jsz = score_batch_partitioned(
+                train, cands, groups=self._group_cache.get(cache_key)
+            )
             v, gi, js = np.asarray(mi), np.arange(len(mi)), np.asarray(jsz)
         order = np.argsort(-np.where(js >= min_join, v, -np.inf))
         out = []

@@ -14,10 +14,15 @@ candidate joins in one compiled program.  Estimators:
   * :func:`dc_ksg_mi`    — Ross (2014) for (discrete X, continuous Y).
 
 Neighborhood counting uses L∞ (max-norm) balls per the KSG construction.
-The O(P²) pairwise-distance step is the compute hot-spot; it is backed
-by the ``repro.kernels.pairwise_cheb`` Pallas TPU kernel with a pure-jnp
-fallback (identical semantics) on non-TPU backends — the fused kernel
-emits all three distance matrices (DX, DY, DJoint) in one HBM pass.
+The O(P²) pairwise-distance step is the compute hot-spot.  The default
+``impl="fused"`` path streams it through ``repro.kernels.knn_stats``
+(flash-KSG): per-row kNN radii and marginal ball/tie counts are
+accumulated online over (P, block) column tiles, so no P×P distance
+matrix is ever materialized — peak intermediate memory is O(P·block)
+instead of O(P²) HBM traffic.  ``impl="materialized"`` keeps the seed
+path (three fused P×P matrices via ``repro.kernels.pairwise_cheb``) as
+the reference implementation; both produce the same statistics from
+bit-identical distances, so estimates agree to float rounding.
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
 
+from repro.kernels.knn_stats.ops import ball_counts, knn_smallest
 from repro.kernels.pairwise_cheb.ops import pairwise_cheb
 
 __all__ = [
@@ -150,31 +156,56 @@ def _kth_smallest(d: jax.Array, k: int) -> jax.Array:
     return -neg_topk[:, k - 1]
 
 
-def ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3) -> jax.Array:
-    """KSG estimator #1 (Kraskov et al. 2004) for continuous pairs.
+Impl = Literal["fused", "materialized"]
 
-    I ≈ ψ(k) + ψ(M) − ⟨ψ(n_x + 1) + ψ(n_y + 1)⟩ with ε_i the k-NN
-    distance in the joint (max-norm) space and n_x/n_y strict-ball
-    counts in the marginals.
-    """
-    xf = x.astype(jnp.float32)
-    yf = y.astype(jnp.float32)
-    M = jnp.sum(mask)
-    eye = jnp.eye(x.shape[0], dtype=bool)
-    # Fused kernel: DX/DY carry +inf at invalid pairs, DJ also fences the
-    # diagonal; self-pairs in the marginals are excluded via ~eye below.
-    dx, dy, dj = pairwise_cheb(xf, yf, mask)
-    eps = _kth_smallest(dj, k)
 
-    nx = jnp.sum((dx < eps[:, None]) & ~eye, axis=1)
-    ny = jnp.sum((dy < eps[:, None]) & ~eye, axis=1)
+def _ksg_tail(nx, ny, mask, M, k):
     per_i = digamma(nx + 1.0) + digamma(ny + 1.0)
     mean_term = jnp.sum(jnp.where(mask, per_i, 0.0)) / jnp.maximum(M, 1)
     est = digamma(float(k)) + digamma(M.astype(jnp.float32)) - mean_term
     return jnp.where(M > k, est, 0.0)
 
 
-def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3) -> jax.Array:
+def ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
+           impl: Impl = "fused") -> jax.Array:
+    """KSG estimator #1 (Kraskov et al. 2004) for continuous pairs.
+
+    I ≈ ψ(k) + ψ(M) − ⟨ψ(n_x + 1) + ψ(n_y + 1)⟩ with ε_i the k-NN
+    distance in the joint (max-norm) space and n_x/n_y strict-ball
+    counts in the marginals.  ``impl="fused"`` streams the radii and
+    counts via ``knn_stats`` (no P×P matrix); ``impl="materialized"``
+    is the seed O(P²)-memory reference.
+    """
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    M = jnp.sum(mask)
+    if impl == "fused":
+        knn, _ = knn_smallest(xf, yf, mask, k=k, mode="joint")
+        eps = knn[:, k - 1]
+        c = ball_counts(xf, yf, mask, eps)
+        return _ksg_tail(c.x_lt, c.y_lt, mask, M, k)
+    eye = jnp.eye(x.shape[0], dtype=bool)
+    # Materialized: DX/DY carry +inf at invalid pairs, DJ also fences the
+    # diagonal; self-pairs in the marginals are excluded via ~eye below.
+    dx, dy, dj = pairwise_cheb(xf, yf, mask)
+    eps = _kth_smallest(dj, k)
+    nx = jnp.sum((dx < eps[:, None]) & ~eye, axis=1)
+    ny = jnp.sum((dy < eps[:, None]) & ~eye, axis=1)
+    return _ksg_tail(nx, ny, mask, M, k)
+
+
+def _mixed_tail(rho, kp_tie, nx_tie, ny_tie, nx_cont, ny_cont, mask, M, k):
+    tie = rho <= 0.0
+    kp = jnp.where(tie, kp_tie, k).astype(jnp.float32)
+    nx = jnp.where(tie, nx_tie, nx_cont).astype(jnp.float32)
+    ny = jnp.where(tie, ny_tie, ny_cont).astype(jnp.float32)
+    per_i = digamma(kp) + jnp.log(M.astype(jnp.float32)) - jnp.log(nx) - jnp.log(ny)
+    est = jnp.sum(jnp.where(mask, per_i, 0.0)) / jnp.maximum(M, 1)
+    return jnp.where(M > k, est, 0.0)
+
+
+def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
+                 impl: Impl = "fused") -> jax.Array:
     """Gao et al. (2017) estimator for discrete-continuous mixtures.
 
     Handles repeated values (ρ_i = 0 plateaus) by reverting to the
@@ -183,17 +214,25 @@ def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3) -> jax
       I ≈ ⟨ψ(k̃_i) + ln M − ln n_{x,i} − ln n_{y,i}⟩
 
     with counts *including* the point itself, matching the reference
-    implementation (query_ball_point semantics).
+    implementation (query_ball_point semantics).  The fused path gets
+    the ρ radii plus all five tie/ball counts from two streaming
+    ``knn_stats`` passes.
     """
     xf = x.astype(jnp.float32)
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
+    if impl == "fused":
+        knn, _ = knn_smallest(xf, yf, mask, k=k, mode="joint")
+        rho = knn[:, k - 1]
+        c = ball_counts(xf, yf, mask, rho)
+        return _mixed_tail(
+            rho, c.j_eq + 1, c.x_eq + 1, c.y_eq + 1,
+            c.x_lt + 1, c.y_lt + 1, mask, M, k,
+        )
     P = x.shape[0]
     eye = jnp.eye(P, dtype=bool)
     dx, dy, dj = pairwise_cheb(xf, yf, mask)
     rho = _kth_smallest(dj, k)
-    tie = rho <= 0.0
-
     off = ~eye  # DX/DY already hold +inf at invalid pairs
     # Counts including self (+1 adds the i-th point back).
     kp_tie = jnp.sum((dj <= 0.0) & off, axis=1) + 1
@@ -201,18 +240,12 @@ def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3) -> jax
     ny_tie = jnp.sum((dy <= 0.0) & off, axis=1) + 1
     nx_cont = jnp.sum((dx < rho[:, None]) & off, axis=1) + 1
     ny_cont = jnp.sum((dy < rho[:, None]) & off, axis=1) + 1
-
-    kp = jnp.where(tie, kp_tie, k).astype(jnp.float32)
-    nx = jnp.where(tie, nx_tie, nx_cont).astype(jnp.float32)
-    ny = jnp.where(tie, ny_tie, ny_cont).astype(jnp.float32)
-
-    per_i = digamma(kp) + jnp.log(M.astype(jnp.float32)) - jnp.log(nx) - jnp.log(ny)
-    est = jnp.sum(jnp.where(mask, per_i, 0.0)) / jnp.maximum(M, 1)
-    return jnp.where(M > k, est, 0.0)
+    return _mixed_tail(rho, kp_tie, nx_tie, ny_tie, nx_cont, ny_cont, mask, M, k)
 
 
 def dc_ksg_mi(
-    x_codes: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3
+    x_codes: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
+    impl: Impl = "fused",
 ) -> jax.Array:
     """Ross (2014) estimator for (discrete X, continuous Y).
 
@@ -225,23 +258,35 @@ def dc_ksg_mi(
 
     Points whose class has a single member are excluded (as in the
     scikit-learn implementation); M' counts the points kept.
+
+    The fused path streams within-class kNN in class mode, so the seed's
+    full P×P sort of the same-class distance matrix disappears.
+    ``x_codes`` must be exactly float32-representable (dense ranks are;
+    raw uint32 codes above 2²⁴ may collide — rank them first).
     """
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     P = y.shape[0]
-    eye = jnp.eye(P, dtype=bool)
-    valid_pair = mask[:, None] & mask[None, :]
-    same = (x_codes[:, None] == x_codes[None, :]) & valid_pair
-    n_x = jnp.sum(same, axis=1)  # includes self
-    k_i = jnp.minimum(k, n_x - 1)
-
-    _, dy, _ = pairwise_cheb(yf, yf, mask)  # DY with +inf at invalid
-    dy_same = jnp.where(same & ~eye, dy, jnp.inf)
-    dy_sorted = jnp.sort(dy_same, axis=1)
-    idx = jnp.clip(k_i - 1, 0, P - 1)
-    d_i = jnp.take_along_axis(dy_sorted, idx[:, None], axis=1)[:, 0]
-
-    m_i = jnp.sum((dy < d_i[:, None]) & ~eye, axis=1)
+    if impl == "fused":
+        cf = x_codes.astype(jnp.float32)
+        knn, same_cnt = knn_smallest(cf, yf, mask, k=k, mode="class")
+        n_x = same_cnt + mask.astype(jnp.int32)  # includes self
+        k_i = jnp.minimum(k, n_x - 1)
+        idx = jnp.clip(k_i - 1, 0, k - 1)
+        d_i = jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
+        m_i = ball_counts(cf, yf, mask, d_i, which="y").y_lt
+    else:
+        eye = jnp.eye(P, dtype=bool)
+        valid_pair = mask[:, None] & mask[None, :]
+        same = (x_codes[:, None] == x_codes[None, :]) & valid_pair
+        n_x = jnp.sum(same, axis=1)  # includes self
+        k_i = jnp.minimum(k, n_x - 1)
+        _, dy, _ = pairwise_cheb(yf, yf, mask)  # DY with +inf at invalid
+        dy_same = jnp.where(same & ~eye, dy, jnp.inf)
+        dy_sorted = jnp.sort(dy_same, axis=1)
+        idx = jnp.clip(k_i - 1, 0, P - 1)
+        d_i = jnp.take_along_axis(dy_sorted, idx[:, None], axis=1)[:, 0]
+        m_i = jnp.sum((dy < d_i[:, None]) & ~eye, axis=1)
 
     valid_i = mask & (n_x >= 2)
     cnt = jnp.maximum(jnp.sum(valid_i), 1)

@@ -5,15 +5,22 @@ The sketch join recovers a sample of the left-outer join
 (values = target Y, repeated keys preserved) and a candidate-side sketch
 (values = feature X, keys unique after aggregation).
 
-Two implementations:
+Three implementations:
 
   * :func:`sketch_join` — host numpy, used by the benchmark harness.
-  * :func:`sketch_join_jax` — fixed-shape jit/vmap-friendly JAX used by
-    the batched discovery engine (``repro.core.discovery``): a discovery
-    query joins ONE train sketch against THOUSANDS of stacked candidate
-    sketches in a single compiled program, sharded over the device mesh.
+  * :func:`sketch_join_jax` — fixed-shape jit/vmap-friendly JAX join
+    that lexsorts the candidate keys on every call; works for ANY key
+    order.
+  * :func:`sketch_join_presorted` — the discovery hot path.  Relies on
+    the sorted-at-ingest invariant (``build_sketch(side="cand")``
+    emits valid keys in ascending order, padding last), so the
+    per-query lexsort disappears: one ``searchsorted`` against the
+    static candidate keys, then any number of value views (float32 and
+    uint32 reinterpretations of the same sketch) are gathered from the
+    same positions — the seed path paid two full joins per candidate
+    for exactly this.
 
-Both return fixed-capacity padded (x, y, mask) triples sized by the
+All return fixed-capacity padded (x, y, mask) triples sized by the
 train sketch capacity (a many-to-one join emits at most one output row
 per train-sketch row).
 """
@@ -30,7 +37,15 @@ import jax.numpy as jnp
 from repro.core.aggregate import aggregate_by_key, output_is_discrete
 from repro.core.sketch import Sketch
 
-__all__ = ["JoinSample", "sketch_join", "sketch_join_jax", "full_left_join"]
+__all__ = [
+    "JoinSample",
+    "sketch_join",
+    "sketch_join_jax",
+    "sketch_join_presorted",
+    "full_left_join",
+]
+
+_KEY_MAX = jnp.uint32(0xFFFFFFFF)
 
 
 @dataclass
@@ -102,6 +117,43 @@ def sketch_join_jax(
     x = jnp.where(matched, cv_sorted[pos_c], 0)
     y = jnp.where(train_mask, train_values, 0)
     return x, y, matched
+
+
+def sketch_join_presorted(
+    train_keys: jax.Array,
+    train_mask: jax.Array,
+    cand_keys: jax.Array,
+    cand_mask: jax.Array,
+    cand_values: tuple[jax.Array, ...],
+    train_values: tuple[jax.Array, ...],
+) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...], jax.Array]:
+    """Single-searchsorted join for key-sorted candidate sketches.
+
+    Invariant (established by ``build_sketch(side="cand")`` and asserted
+    by ``SketchIndex.add``): valid candidate keys are unique and sorted
+    ascending, padding entries trail them.  Masked-out keys are remapped
+    to 0xFFFFFFFF, which keeps the full fixed-shape array nondecreasing
+    with the valid prefix first, so ``searchsorted``'s left position for
+    any probe lands on the valid entry when one exists; the gathered
+    mask rejects probes that landed on padding (including a probe key
+    that IS 0xFFFFFFFF — then the valid entry, if any, sorts first).
+
+    ``cand_values`` / ``train_values`` are tuples of same-capacity value
+    views (e.g. the float32 and uint32 views of one sketch); all views
+    are gathered from the one set of match positions, replacing the seed
+    path's two independent lexsort joins per candidate.
+
+    Returns (gathered candidate views, masked train views, match mask).
+    """
+    tk = train_keys.astype(jnp.uint32)
+    ck = cand_keys.astype(jnp.uint32)
+    ck_eff = jnp.where(cand_mask, ck, _KEY_MAX)
+    pos = jnp.searchsorted(ck_eff, tk)
+    pos_c = jnp.clip(pos, 0, ck.shape[0] - 1)
+    matched = train_mask & (ck_eff[pos_c] == tk) & cand_mask[pos_c]
+    xs = tuple(jnp.where(matched, v[pos_c], 0) for v in cand_values)
+    ys = tuple(jnp.where(train_mask, v, 0) for v in train_values)
+    return xs, ys, matched
 
 
 def full_left_join(

@@ -54,6 +54,11 @@ class Sketch:
 
     Arrays are padded to ``capacity``; ``mask`` flags the valid prefix.
     ``value_is_discrete`` drives MI-estimator dispatch downstream.
+
+    Candidate-side sketches (``side == 'cand'``) additionally guarantee
+    the sorted-at-ingest invariant: valid ``key_hashes`` are unique and
+    ascending, padding trails them — the contract the presorted
+    discovery join depends on.
     """
 
     method: str
@@ -251,6 +256,13 @@ def build_sketch(
         uniq, agg_vals = aggregate_by_key(key_hashes, values, agg)
         discrete_out = output_is_discrete(agg, value_is_discrete)
         sel = _cand_select(method, uniq, n, table_seed)
+        # Sorted-at-ingest invariant: candidate keys are emitted in
+        # ascending order (uniq is sorted, so sorting the selection
+        # indices sorts the keys), valid prefix first, padding last.
+        # The discovery hot path (``sketch_join_presorted``) does one
+        # searchsorted against this static order instead of re-sorting
+        # every candidate on every query.
+        sel = np.sort(sel)
         # Candidate sketches always have unique keys -> capacity n suffices,
         # but keep LV2SK/PRISK at 2n so stacked batched sketches align.
         return _take(uniq, agg_vals, sel, capacity, method, n, "cand",

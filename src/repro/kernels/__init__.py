@@ -1,12 +1,17 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Three kernels, each with the (kernel.py, ops.py, ref.py) layout:
+Four kernels, each with the (kernel.py, ops.py, ref.py) layout:
 
   murmur3        — elementwise MurmurHash3/Fibonacci hashing used by the
                    sketch pipeline (ingestion at repository scale hashes
                    billions of keys; VPU-bound elementwise op).
   pairwise_cheb  — tiled pairwise Chebyshev (L-inf) distance matrix, the
-                   O(n^2) hot-spot of all KSG-family MI estimators.
+                   materialized O(n^2) reference for the KSG-family MI
+                   estimators.
+  knn_stats      — flash-KSG streaming kNN statistics (per-row kNN radii
+                   + marginal ball/tie counts) with online accumulators:
+                   O(P·block) memory, no P×P matrix; the production
+                   KSG-estimator path (tiled lax.scan fallback off-TPU).
   flash_attention— blocked causal GQA attention (online softmax) for the
                    transformer backbones; the jnp reference doubles as
                    the memory-efficient chunked path used on non-TPU
@@ -15,3 +20,9 @@ Three kernels, each with the (kernel.py, ops.py, ref.py) layout:
 TPU is the *target*; on CPU the kernels are validated with
 ``interpret=True`` against their pure-jnp oracles (ref.py).
 """
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; one shim for every
+# kernel module instead of a copy per file.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

@@ -1,0 +1,3 @@
+from repro.kernels.knn_stats.ops import BallCounts, ball_counts, knn_smallest
+
+__all__ = ["BallCounts", "ball_counts", "knn_smallest"]

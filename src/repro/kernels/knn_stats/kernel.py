@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: fused streaming kNN statistics (flash-KSG).
+
+Every KSG-family MI estimator reduces to two row-wise statistics over
+the implicit P×P pairwise-distance structure of a joined sample
+(x_i, y_i):
+
+  1. the k smallest "selected" distances per row (the kNN radii), and
+  2. ball counts per row given a per-row radius.
+
+The seed path materialized three P×P Chebyshev matrices in HBM
+(``pairwise_cheb``) and re-reduced them per estimator.  This kernel
+streams (block × block) distance tiles through VMEM with flash-attention
+style online accumulators — a (bm, LANES) running k-smallest buffer for
+pass 1 and a (bm, LANES) count accumulator for pass 2 — so peak
+intermediate memory is O(P · block) and the P×P matrices never exist.
+
+Selected distance per (i, j) pair, both passes fencing the diagonal and
+invalid (masked) endpoints to +inf:
+
+  * mode "joint":  d = max(|x_i−x_j|, |y_i−y_j|)   (KSG / MixedKSG)
+  * mode "class":  d = |y_i−y_j| if x_i == x_j else +inf   (Ross DC-KSG
+    within-class neighborhoods; x carries dense class codes)
+
+The k-smallest merge uses k unrolled min-extractions (min reduction +
+first-occurrence fence via a lane-iota min) — no sort/top_k primitive is
+required, so the kernel lowers on TPU and runs under ``interpret=True``
+for CPU validation.  Grid is (P/bm, P/bn) with the column axis declared
+"arbitrary" so the VMEM accumulators persist across column steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams as _CompilerParams
+
+BLOCK = 256
+LANES = 128  # minimum TPU-tileable lane width; also caps k
+_BIG_LANE = 1 << 30  # python int: jnp constants would be captured as consts
+
+
+
+def _tile_distances(xc, xr, yc, yr, mc, mr, i, j, bm, bn, mode):
+    """One (bm, bn) tile of selected distances (+inf at fenced pairs).
+
+    Returns (d_sel, sel_aux) where sel_aux is the boolean same-class
+    selection (class mode) used for the neighborhood-size count.
+    """
+    dx = jnp.abs(xc - xr)  # (bm, bn)
+    dy = jnp.abs(yc - yr)
+    valid = (mc > 0) & (mr > 0)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    off_diag = rows != cols
+    inf = jnp.float32(jnp.inf)
+    if mode == "joint":
+        sel = valid & off_diag
+        d_sel = jnp.where(sel, jnp.maximum(dx, dy), inf)
+        aux = None
+    else:  # class: x carries discrete codes, neighborhoods within class
+        sel = valid & off_diag & (xc == xr)
+        d_sel = jnp.where(sel, dy, inf)
+        aux = sel
+    return d_sel, aux
+
+
+def _merge_k_smallest(knn_prev, d_tile, k):
+    """k smallest of concat(knn_prev, d_tile) per row, ascending.
+
+    ``knn_prev`` is (bm, LANES) with the running k smallest in lanes
+    [0, k) and +inf elsewhere.  k unrolled min-extractions; ties are
+    consumed one occurrence at a time via a first-occurrence lane fence.
+    """
+    bm = knn_prev.shape[0]
+    inf = jnp.float32(jnp.inf)
+    buf = jnp.concatenate([knn_prev, d_tile], axis=1)
+    lane_buf = jax.lax.broadcasted_iota(jnp.int32, buf.shape, 1)
+    lane_out = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    new = jnp.full((bm, LANES), inf, jnp.float32)
+    for t in range(k):
+        m = jnp.min(buf, axis=1, keepdims=True)  # (bm, 1)
+        new = jnp.where(lane_out == t, m, new)
+        first = jnp.min(
+            jnp.where(buf == m, lane_buf, _BIG_LANE), axis=1, keepdims=True
+        )
+        buf = jnp.where(lane_buf == first, inf, buf)
+    return new
+
+
+def _knn_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref,
+                knn_ref, cnt_ref, knn_scr, cnt_scr,
+                *, bm: int, bn: int, k: int, mode: str):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        knn_scr[...] = jnp.full_like(knn_scr, jnp.inf)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    d_sel, aux = _tile_distances(
+        xc_ref[...], xr_ref[...], yc_ref[...], yr_ref[...],
+        mc_ref[...], mr_ref[...], i, j, bm, bn, mode,
+    )
+    knn_scr[...] = _merge_k_smallest(knn_scr[...], d_sel, k)
+    if aux is not None:
+        s = jnp.sum(aux.astype(jnp.float32), axis=1, keepdims=True)
+        cnt_scr[...] = cnt_scr[...] + jnp.broadcast_to(s, cnt_scr.shape)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        knn_ref[...] = knn_scr[...]
+        cnt_ref[...] = cnt_scr[...]
+
+
+def _counts_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref, rc_ref,
+                   cnt_ref, cnt_scr, *, bm: int, bn: int, which: str):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    dy = jnp.abs(yc_ref[...] - yr_ref[...])  # (bm, bn)
+    valid = (mc_ref[...] > 0) & (mr_ref[...] > 0)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    vo = valid & (rows != cols)
+    r = rc_ref[...]  # (bm, 1) per-row radius
+
+    def _acc(cond):
+        return jnp.sum((vo & cond).astype(jnp.float32), axis=1, keepdims=True)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    upd = jnp.where(lane == 1, _acc(dy < r), 0.0)
+    if which == "all":  # DC-KSG only consumes y_lt; skip the dx work
+        dx = jnp.abs(xc_ref[...] - xr_ref[...])
+        upd = (
+            upd
+            + jnp.where(lane == 0, _acc(dx < r), 0.0)
+            + jnp.where(lane == 2, _acc(dx <= 0.0), 0.0)
+            + jnp.where(lane == 3, _acc(dy <= 0.0), 0.0)
+            + jnp.where(lane == 4, _acc(jnp.maximum(dx, dy) <= 0.0), 0.0)
+        )
+    cnt_scr[...] = cnt_scr[...] + upd
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        cnt_ref[...] = cnt_scr[...]
+
+
+def _row_col_specs(block):
+    col = pl.BlockSpec((block, 1), lambda i, j: (i, 0))
+    row = pl.BlockSpec((1, block), lambda i, j: (0, j))
+    return col, row
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "mode", "block", "interpret")
+)
+def knn_smallest_padded(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    k: int,
+    mode: str = "joint",
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """x, y float32 (P,), mask int32 (P,); P divisible by ``block``.
+
+    Returns (knn (P, LANES) — k smallest selected distances ascending in
+    lanes [0, k), +inf beyond — and cnt (P, LANES) — same-class
+    neighborhood size broadcast along lanes; zeros in joint mode).
+    """
+    P = x.shape[0]
+    assert P % block == 0, (P, block)
+    assert 1 <= k <= LANES, k
+    grid = (P // block, P // block)
+    xc, xr = x.reshape(P, 1), x.reshape(1, P)
+    yc, yr = y.reshape(P, 1), y.reshape(1, P)
+    mc = mask.astype(jnp.int32).reshape(P, 1)
+    mr = mask.astype(jnp.int32).reshape(1, P)
+    col, row = _row_col_specs(block)
+    out = pl.BlockSpec((block, LANES), lambda i, j: (i, 0))
+    shape = jax.ShapeDtypeStruct((P, LANES), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_knn_kernel, bm=block, bn=block, k=k, mode=mode),
+        grid=grid,
+        in_specs=[col, row, col, row, col, row],
+        out_specs=(out, out),
+        out_shape=(shape, shape),
+        scratch_shapes=[
+            pltpu.VMEM((block, LANES), jnp.float32),
+            pltpu.VMEM((block, LANES), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xc, xr, yc, yr, mc, mr)
+
+
+@functools.partial(jax.jit, static_argnames=("which", "block", "interpret"))
+def ball_counts_padded(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    r: jax.Array,
+    *,
+    which: str = "all",
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """x, y, r float32 (P,), mask int32 (P,); P divisible by ``block``.
+
+    Returns cnt (P, LANES) float32 with lanes 0..4 holding, per row i
+    over valid j ≠ i:  #|dx|<r_i, #|dy|<r_i, #dx==0, #dy==0, #joint==0.
+    ``which="y"`` computes only lane 1 (the others stay zero), skipping
+    every dx tile — the DC-KSG second pass needs nothing else.
+    """
+    P = x.shape[0]
+    assert P % block == 0, (P, block)
+    grid = (P // block, P // block)
+    xc, xr = x.reshape(P, 1), x.reshape(1, P)
+    yc, yr = y.reshape(P, 1), y.reshape(1, P)
+    mc = mask.astype(jnp.int32).reshape(P, 1)
+    mr = mask.astype(jnp.int32).reshape(1, P)
+    rc = r.reshape(P, 1)
+    col, row = _row_col_specs(block)
+    out = pl.BlockSpec((block, LANES), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_counts_kernel, bm=block, bn=block, which=which),
+        grid=grid,
+        in_specs=[col, row, col, row, col, row, col],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((P, LANES), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block, LANES), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xc, xr, yc, yr, mc, mr, rc)

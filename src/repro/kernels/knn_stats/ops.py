@@ -1,0 +1,241 @@
+"""Public knn_stats API: fused streaming kNN radii + ball counts.
+
+Two entry points shared by every KSG-family estimator:
+
+  * :func:`knn_smallest` — per-row k smallest selected distances
+    (ascending) and, in class mode, the within-class neighborhood size.
+  * :func:`ball_counts`  — per-row marginal ball / tie counts for a
+    per-row radius.
+
+Both stream (P, block) column tiles instead of materializing any P×P
+distance matrix: peak intermediate memory is O(P · block).  On TPU the
+Pallas kernel (``kernel.py``) keeps the accumulators in VMEM; elsewhere
+a tiled ``lax.scan`` with identical semantics (bit-equal selected
+distances, identical tie handling) is the production path — it is NOT a
+validation-only oracle.  The naive materializing oracle lives in
+``ref.py`` and is used by tests only.
+
+Inputs are fixed-shape padded samples (x, y, mask); invalid entries and
+the diagonal are fenced to +inf before any reduction, so padding never
+affects radii or counts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn_stats.kernel import (
+    LANES,
+    ball_counts_padded,
+    knn_smallest_padded,
+)
+
+__all__ = ["BallCounts", "ball_counts", "knn_smallest", "DEFAULT_BLOCK"]
+
+# Fallback column-tile width: keeps the streamed tile (P, 128) well under
+# the materialized P×P footprint for every production sketch capacity.
+DEFAULT_BLOCK = 128
+
+
+class BallCounts(NamedTuple):
+    """Per-row counts over valid j ≠ i (int32, shape (P,))."""
+
+    x_lt: jax.Array  # |x_i − x_j| <  r_i
+    y_lt: jax.Array  # |y_i − y_j| <  r_i
+    x_eq: jax.Array  # x_j == x_i
+    y_eq: jax.Array  # y_j == y_i
+    j_eq: jax.Array  # x_j == x_i and y_j == y_i
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_cols(P: int, block: int) -> int:
+    return -(-P // block) * block
+
+
+def _tile_starts(Pp: int, block: int) -> jax.Array:
+    return jnp.arange(Pp // block, dtype=jnp.int32) * block
+
+
+def _knn_smallest_scan(xf, yf, mask, *, k, mode, block):
+    """Tiled lax.scan fallback: identical semantics to the TPU kernel."""
+    P = xf.shape[0]
+    Pp = _pad_cols(P, block)
+    pad = Pp - P
+    xp = jnp.pad(xf, (0, pad))
+    yp = jnp.pad(yf, (0, pad))
+    mp = jnp.pad(mask.astype(bool), (0, pad))
+    rows = jnp.arange(P, dtype=jnp.int32)
+    inf = jnp.float32(jnp.inf)
+
+    def step(carry, c0):
+        knn, cnt = carry
+        xs = jax.lax.dynamic_slice(xp, (c0,), (block,))
+        ys = jax.lax.dynamic_slice(yp, (c0,), (block,))
+        ms = jax.lax.dynamic_slice(mp, (c0,), (block,))
+        cols = c0 + jnp.arange(block, dtype=jnp.int32)
+        dy = jnp.abs(yf[:, None] - ys[None, :])  # (P, block)
+        valid = mask[:, None] & ms[None, :] & (rows[:, None] != cols[None, :])
+        if mode == "joint":
+            dx = jnp.abs(xf[:, None] - xs[None, :])
+            d_sel = jnp.where(valid, jnp.maximum(dx, dy), inf)
+        else:  # class: neighborhoods restricted to equal x codes
+            sel = valid & (xf[:, None] == xs[None, :])
+            d_sel = jnp.where(sel, dy, inf)
+            cnt = cnt + jnp.sum(sel, axis=1, dtype=jnp.int32)
+        buf = jnp.concatenate([knn, d_sel], axis=1)
+        neg_top, _ = jax.lax.top_k(-buf, k)
+        return (-neg_top, cnt), None
+
+    init = (
+        jnp.full((P, k), inf, jnp.float32),
+        jnp.zeros(P, jnp.int32),
+    )
+    (knn, cnt), _ = jax.lax.scan(step, init, _tile_starts(Pp, block))
+    return knn, cnt
+
+
+def _ball_counts_scan(xf, yf, mask, r, *, which, block):
+    P = xf.shape[0]
+    Pp = _pad_cols(P, block)
+    pad = Pp - P
+    xp = jnp.pad(xf, (0, pad))
+    yp = jnp.pad(yf, (0, pad))
+    mp = jnp.pad(mask.astype(bool), (0, pad))
+    rows = jnp.arange(P, dtype=jnp.int32)
+    n_acc = 5 if which == "all" else 1
+
+    def step(acc, c0):
+        xs = jax.lax.dynamic_slice(xp, (c0,), (block,))
+        ys = jax.lax.dynamic_slice(yp, (c0,), (block,))
+        ms = jax.lax.dynamic_slice(mp, (c0,), (block,))
+        cols = c0 + jnp.arange(block, dtype=jnp.int32)
+        dy = jnp.abs(yf[:, None] - ys[None, :])
+        vo = mask[:, None] & ms[None, :] & (rows[:, None] != cols[None, :])
+
+        def _cnt(cond):
+            return jnp.sum(vo & cond, axis=1, dtype=jnp.int32)
+
+        upd = (_cnt(dy < r[:, None]),)
+        if which == "all":  # "y" skips every dx tile (DC-KSG second pass)
+            dx = jnp.abs(xf[:, None] - xs[None, :])
+            upd = (
+                _cnt(dx < r[:, None]),
+                upd[0],
+                _cnt(dx <= 0.0),
+                _cnt(dy <= 0.0),
+                _cnt(jnp.maximum(dx, dy) <= 0.0),
+            )
+        return tuple(a + u for a, u in zip(acc, upd)), None
+
+    init = tuple(jnp.zeros(P, jnp.int32) for _ in range(n_acc))
+    acc, _ = jax.lax.scan(step, init, _tile_starts(Pp, block))
+    if which == "y":
+        zero = jnp.zeros(P, jnp.int32)
+        return BallCounts(zero, acc[0], zero, zero, zero)
+    return BallCounts(*acc)
+
+
+def _pad_rows(a, Pk, fill):
+    P = a.shape[0]
+    return jnp.full(Pk, fill, a.dtype).at[:P].set(a)
+
+
+def knn_smallest(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    k: int,
+    mode: str = "joint",
+    use_kernel: bool | None = None,
+    block: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row k smallest selected distances, streaming in column tiles.
+
+    mode "joint": selected distance is the joint Chebyshev
+    max(|dx|, |dy|) — the KSG/MixedKSG radius space.  mode "class":
+    |dy| restricted to rows with equal x code (Ross DC-KSG); x must
+    carry exactly-float32-representable class codes (dense ranks).
+
+    Returns (knn (P, k) float32 ascending, +inf padding;
+    cnt (P,) int32 — valid same-class neighbors j ≠ i, zeros in joint
+    mode).  Never materializes a P×P matrix.
+    """
+    if mode not in ("joint", "class"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    P = xf.shape[0]
+    if not use_kernel:
+        return _knn_smallest_scan(
+            xf, yf, m, k=k, mode=mode, block=block or DEFAULT_BLOCK
+        )
+    blk = block or 256
+    Pk = _pad_cols(P, blk)
+    knn, cnt = knn_smallest_padded(
+        _pad_rows(xf, Pk, 0.0),
+        _pad_rows(yf, Pk, 0.0),
+        _pad_rows(m, Pk, False).astype(jnp.int32),
+        k=k,
+        mode=mode,
+        block=blk,
+        interpret=_use_interpret(),
+    )
+    return knn[:P, :k], cnt[:P, 0].astype(jnp.int32)
+
+
+def ball_counts(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    r: jax.Array,
+    *,
+    which: str = "all",
+    use_kernel: bool | None = None,
+    block: int | None = None,
+) -> BallCounts:
+    """Marginal ball / tie counts per row for a per-row radius ``r``.
+
+    Strict ``< r_i`` ball counts in both marginals plus exact-tie counts
+    (dx == 0, dy == 0, joint == 0) over valid j ≠ i — everything the
+    KSG-1, MixedKSG and DC-KSG estimators consume after the radius pass.
+    ``which="y"`` computes only ``y_lt`` (the rest are zeros), halving
+    the comparison work for consumers like DC-KSG that ignore the x
+    marginal.  Never materializes a P×P matrix.
+    """
+    if which not in ("all", "y"):
+        raise ValueError(f"unknown which {which!r}")
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    rf = r.astype(jnp.float32)
+    P = xf.shape[0]
+    if not use_kernel:
+        return _ball_counts_scan(
+            xf, yf, m, rf, which=which, block=block or DEFAULT_BLOCK
+        )
+    blk = block or 256
+    Pk = _pad_cols(P, blk)
+    cnt = ball_counts_padded(
+        _pad_rows(xf, Pk, 0.0),
+        _pad_rows(yf, Pk, 0.0),
+        _pad_rows(m, Pk, False).astype(jnp.int32),
+        _pad_rows(rf, Pk, 0.0),
+        which=which,
+        block=blk,
+        interpret=_use_interpret(),
+    )
+    c = cnt[:P, :5].astype(jnp.int32)
+    return BallCounts(c[:, 0], c[:, 1], c[:, 2], c[:, 3], c[:, 4])

@@ -1,0 +1,57 @@
+"""Naive materializing oracle for knn_stats — tests only.
+
+Builds the full P×P distance matrices (exactly what the streaming path
+must never do) and derives the same statistics, so kernel and scan
+fallback can be validated against an independent implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fenced(xf, yf, mask, mode):
+    P = xf.shape[0]
+    dx = jnp.abs(xf[:, None] - xf[None, :])
+    dy = jnp.abs(yf[:, None] - yf[None, :])
+    valid = mask[:, None] & mask[None, :] & ~jnp.eye(P, dtype=bool)
+    inf = jnp.float32(jnp.inf)
+    if mode == "joint":
+        sel = valid
+        d_sel = jnp.where(sel, jnp.maximum(dx, dy), inf)
+    else:
+        sel = valid & (xf[:, None] == xf[None, :])
+        d_sel = jnp.where(sel, dy, inf)
+    return dx, dy, valid, sel, d_sel
+
+
+def knn_smallest_ref(x, y, mask, *, k, mode="joint"):
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    _, _, _, sel, d_sel = _fenced(xf, yf, m, mode)
+    neg_top, _ = jax.lax.top_k(-d_sel, k)
+    cnt = jnp.sum(sel, axis=1, dtype=jnp.int32) if mode == "class" else (
+        jnp.zeros(xf.shape[0], jnp.int32)
+    )
+    return -neg_top, cnt
+
+
+def ball_counts_ref(x, y, mask, r):
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    rf = r.astype(jnp.float32)
+    dx, dy, valid, _, _ = _fenced(xf, yf, m, "joint")
+
+    def _cnt(cond):
+        return jnp.sum(valid & cond, axis=1, dtype=jnp.int32)
+
+    return (
+        _cnt(dx < rf[:, None]),
+        _cnt(dy < rf[:, None]),
+        _cnt(dx <= 0.0),
+        _cnt(dy <= 0.0),
+        _cnt(jnp.maximum(dx, dy) <= 0.0),
+    )

@@ -78,3 +78,129 @@ class TestDistributedTopk:
         mi, _ = score_batch(train, cands)
         best = np.argsort(-np.asarray(mi))[:3]
         np.testing.assert_array_equal(np.sort(gi), np.sort(best))
+
+
+def _mixed_corpus(index: SketchIndex, keys, y):
+    """Candidates spanning all four estimator branches."""
+    index.add("cont_strong", "k", "v", keys,
+              (2 * y + 0.05 * RNG.normal(size=N_ROWS)).astype(np.float32), False)
+    index.add("cont_noise", "k", "v", keys,
+              RNG.normal(size=N_ROWS).astype(np.float32), False)
+    index.add("disc_dep", "k", "v", keys,
+              (y > 0).astype(np.int64), True)
+    index.add("disc_noise", "k", "v", keys,
+              RNG.integers(0, 6, size=N_ROWS), True)
+
+
+class TestPartitionedScoring:
+    def _setup(self, y_discrete):
+        from repro.core.discovery import score_batch_partitioned
+
+        keys_raw = np.arange(N_ROWS, dtype=np.uint32)
+        keys = np.asarray(hashing.murmur3_32_np(keys_raw, seed=np.uint32(9)))
+        y_cont = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = SketchIndex(n=128, method="tupsk")
+        _mixed_corpus(index, keys, y_cont)
+        yv = (y_cont > 0.5).astype(np.int64) if y_discrete else y_cont
+        train_sk = build_sketch(keys, yv, n=128, method="tupsk", side="train",
+                                value_is_discrete=y_discrete)
+        train = SketchIndex.train_arrays(train_sk)
+        cands = index.stacked(y_discrete)
+        return score_batch_partitioned, train, cands
+
+    @pytest.mark.parametrize("y_discrete", [False, True])
+    def test_matches_seed_scorer_bitwise(self, y_discrete):
+        """Partitioned scorer == switch scorer, bit for bit, on a corpus
+        exercising all four estimator groups (both target dtypes)."""
+        score_batch_partitioned, train, cands = self._setup(y_discrete)
+        # all four estimator ids present across the two parametrizations
+        mi_switch, js_switch = score_batch(train, cands)
+        mi_part, js_part = score_batch_partitioned(train, cands)
+        np.testing.assert_array_equal(np.asarray(mi_switch), np.asarray(mi_part))
+        np.testing.assert_array_equal(np.asarray(js_switch), np.asarray(js_part))
+
+    def test_group_padding_rows_invisible(self):
+        """Pow2 group padding must not leak into results (3 cands in a
+        group -> padded to 4 with a masked duplicate)."""
+        from repro.core.discovery import score_batch_partitioned
+
+        keys_raw = np.arange(N_ROWS, dtype=np.uint32)
+        keys = np.asarray(hashing.murmur3_32_np(keys_raw, seed=np.uint32(9)))
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = SketchIndex(n=64, method="tupsk")
+        for i in range(3):
+            index.add(f"c{i}", "k", "v", keys,
+                      (y + i * RNG.normal(size=N_ROWS)).astype(np.float32), False)
+        train_sk = build_sketch(keys, y, n=64, method="tupsk", side="train",
+                                value_is_discrete=False)
+        train = SketchIndex.train_arrays(train_sk)
+        cands = index.stacked(False)
+        mi_a, _ = score_batch_partitioned(train, cands)
+        mi_b, _ = score_batch(train, cands)
+        assert mi_a.shape == (3,)
+        np.testing.assert_array_equal(np.asarray(mi_a), np.asarray(mi_b))
+
+
+class TestStackedCache:
+    def test_cache_hit_and_invalidation(self):
+        keys_raw = np.arange(N_ROWS, dtype=np.uint32)
+        keys = np.asarray(hashing.murmur3_32_np(keys_raw, seed=np.uint32(9)))
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = SketchIndex(n=64, method="tupsk")
+        index.add("a", "k", "v", keys, y.copy(), False)
+        first = index.stacked(False)
+        assert index.stacked(False) is first  # cached, no re-copy
+        assert index.stacked(True) is not first  # distinct target dtype
+        index.add("b", "k", "v", keys, y.copy(), False)
+        fresh = index.stacked(False)
+        assert fresh is not first  # add() invalidates
+        assert fresh["keys"].shape[0] == 2
+
+    def test_sorted_invariant_enforced(self):
+        index = SketchIndex(n=64, method="tupsk")
+        keys = np.asarray(hashing.murmur3_32_np(
+            np.arange(500, dtype=np.uint32), seed=np.uint32(1)))
+        index.add("a", "k", "v", keys,
+                  RNG.normal(size=500).astype(np.float32), False)
+        kh = index._keys[0]
+        size = int(index._masks[0].sum())
+        assert np.all(np.diff(kh[:size].astype(np.int64)) > 0)
+
+
+class TestShardTopkPlan:
+    """Regression: k_eff = min(top_k*4, C // shards) silently returned
+    fewer than top_k global results whenever shard_size < top_k."""
+
+    def test_shard_smaller_than_topk(self):
+        from repro.core.discovery import _shard_topk_plan
+
+        # 8 candidates over 4 shards, user asks for 10: the seed formula
+        # returned k_eff = 2 -> only 2 global results.  All 8 must come.
+        k_shard, k_final = _shard_topk_plan(8, 4, 10)
+        assert k_shard == 2  # lax.top_k cannot exceed the shard
+        assert k_final == 8  # but globally every candidate is kept
+
+    def test_shard_larger_than_topk(self):
+        from repro.core.discovery import _shard_topk_plan
+
+        k_shard, k_final = _shard_topk_plan(1024, 4, 10)
+        assert k_shard == 10 and k_final == 10
+
+    def test_degenerate_single_candidate(self):
+        from repro.core.discovery import _shard_topk_plan
+
+        k_shard, k_final = _shard_topk_plan(4, 4, 3)
+        assert k_shard == 1 and k_final == 3
+
+    def test_query_returns_all_valid_when_topk_exceeds_corpus(self):
+        """End-to-end: top_k far above the corpus size still surfaces
+        every valid candidate through the mesh path."""
+        mesh = jax.make_mesh((1,), ("data",))
+        index = SketchIndex(n=128, method="tupsk")
+        keys, y = _corpus(index)
+        train_sk = build_sketch(keys, y, n=128, method="tupsk", side="train",
+                                value_is_discrete=False)
+        results = index.query(train_sk, top_k=50, mesh=mesh)
+        # 5 candidates, one with a disjoint (empty) join -> 4 valid
+        assert len(results) == 4
+        assert results[0][0].table == "strong"

@@ -2,12 +2,17 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
 from repro.core import synthetic
-from repro.core.join import full_left_join, sketch_join, sketch_join_jax
+from repro.core.join import (
+    full_left_join,
+    sketch_join,
+    sketch_join_jax,
+    sketch_join_presorted,
+)
 from repro.core.sketch import build_sketch
 from repro.core import hashing
 
@@ -76,3 +81,69 @@ class TestFullJoinRecovery:
         np.testing.assert_allclose(fj.x[fj.mask], [3.0, 3.0, 5.0])
         fj = full_left_join(tk, ty, ck, cx, agg="count")
         np.testing.assert_allclose(fj.x[fj.mask], [2.0, 2.0, 3.0])
+
+
+class TestPresortedJoin:
+    """The presorted fast path must equal the lexsort join exactly, for
+    both value views, from one searchsorted."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+    def test_matches_lexsort_join(self, seed):
+        r = np.random.default_rng(seed)
+        n_rows = int(r.integers(20, 800))
+        raw = r.integers(0, 200, size=n_rows).astype(np.uint32)
+        keys = np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(5)))
+        yv = r.normal(size=n_rows).astype(np.float32)
+        xv = r.normal(size=n_rows).astype(np.float32)
+        st_ = build_sketch(keys, yv, n=64, method="tupsk", side="train")
+        sc_ = build_sketch(keys, xv, n=64, method="tupsk", side="cand")
+
+        tk = jnp.asarray(st_.key_hashes)
+        tm = jnp.asarray(st_.mask)
+        tv_f = jnp.asarray(st_.values.astype(np.float32))
+        tv_u = jnp.asarray(st_.values.astype(np.float32).view(np.uint32))
+        ck = jnp.asarray(sc_.key_hashes)
+        cm = jnp.asarray(sc_.mask)
+        cv_f = jnp.asarray(sc_.values.astype(np.float32))
+        cv_u = jnp.asarray(sc_.values.astype(np.float32).view(np.uint32))
+
+        jx, jy, jm = sketch_join_jax(tk, tv_f, tm, ck, cv_f, cm)
+        (px_f, px_u), (py_f, py_u), pm = sketch_join_presorted(
+            tk, tm, ck, cm, (cv_f, cv_u), (tv_f, tv_u)
+        )
+        np.testing.assert_array_equal(np.asarray(jm), np.asarray(pm))
+        np.testing.assert_array_equal(np.asarray(jx), np.asarray(px_f))
+        np.testing.assert_array_equal(np.asarray(jy), np.asarray(py_f))
+        # uint view gathered from the SAME positions in the same pass
+        np.testing.assert_array_equal(
+            np.asarray(px_u), np.asarray(px_f).view(np.uint32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(py_u), np.asarray(py_f).view(np.uint32)
+        )
+
+    def test_key_max_padding_collision(self):
+        """A valid candidate key of 0xFFFFFFFF (the padding sentinel)
+        must still be matched; probes landing on padding must not."""
+        tk = jnp.asarray(np.array([5, 0xFFFFFFFF, 9, 0], np.uint32))
+        tm = jnp.asarray(np.array([True, True, True, False]))
+        tv = jnp.asarray(np.array([1.0, 2.0, 3.0, 4.0], np.float32))
+        # sorted valid prefix [5, 0xFFFFFFFF], padding last
+        ck = jnp.asarray(np.array([5, 0xFFFFFFFF, 0, 0], np.uint32))
+        cm = jnp.asarray(np.array([True, True, False, False]))
+        cv = jnp.asarray(np.array([10.0, 20.0, 0.0, 0.0], np.float32))
+        (x,), (y,), m = sketch_join_presorted(tk, tm, ck, cm, (cv,), (tv,))
+        np.testing.assert_array_equal(np.asarray(m), [True, True, False, False])
+        np.testing.assert_allclose(np.asarray(x)[:2], [10.0, 20.0])
+
+    def test_probe_key_max_without_valid_entry(self):
+        """Probe == 0xFFFFFFFF with only padding there -> no match."""
+        tk = jnp.asarray(np.array([0xFFFFFFFF, 3], np.uint32))
+        tm = jnp.asarray(np.array([True, True]))
+        tv = jnp.asarray(np.array([1.0, 2.0], np.float32))
+        ck = jnp.asarray(np.array([3, 0, 0], np.uint32))
+        cm = jnp.asarray(np.array([True, False, False]))
+        cv = jnp.asarray(np.array([30.0, 0.0, 0.0], np.float32))
+        (x,), _, m = sketch_join_presorted(tk, tm, ck, cm, (cv,), (tv,))
+        np.testing.assert_array_equal(np.asarray(m), [False, True])
+        assert float(x[1]) == 30.0

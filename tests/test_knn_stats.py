@@ -1,0 +1,200 @@
+"""Flash-KSG knn_stats tests: kernel/fallback/oracle parity, estimator
+equivalence with the materialized pairwise_cheb path, and the O(P·block)
+memory guarantee (no P×P intermediate, asserted on the jaxpr)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators
+from repro.kernels.knn_stats.ops import ball_counts, knn_smallest
+from repro.kernels.knn_stats.ref import ball_counts_ref, knn_smallest_ref
+
+RNG = np.random.default_rng(11)
+
+
+def _sample(P, tie_frac=0.3):
+    """Continuous marginals with repeated-value plateaus and padding."""
+    x = RNG.normal(size=P).astype(np.float32)
+    y = np.round(RNG.normal(size=P), 1).astype(np.float32)  # ties in y
+    ties = RNG.uniform(size=P) < tie_frac
+    x[ties] = np.round(x[ties], 0)  # ties in x too
+    mask = RNG.uniform(size=P) > 0.15
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+
+
+class TestKnnSmallest:
+    @pytest.mark.parametrize("P", [7, 64, 200, 513])
+    @pytest.mark.parametrize("mode", ["joint", "class"])
+    def test_fallback_matches_oracle(self, P, mode):
+        x, y, m = _sample(P)
+        if mode == "class":
+            x = jnp.asarray(RNG.integers(0, 5, size=P).astype(np.float32))
+        knn, cnt = knn_smallest(x, y, m, k=3, mode=mode, use_kernel=False)
+        knn_r, cnt_r = knn_smallest_ref(x, y, m, k=3, mode=mode)
+        np.testing.assert_array_equal(np.asarray(knn), np.asarray(knn_r))
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+        # ascending per row (inf padding -> finite sentinel, else inf-inf=nan)
+        kk = np.where(np.isinf(np.asarray(knn)), np.float32(3e38), np.asarray(knn))
+        assert np.all(np.diff(kk, axis=1) >= 0)
+
+    @pytest.mark.parametrize("P,block", [(64, 128), (300, 128), (256, 256)])
+    @pytest.mark.parametrize("mode", ["joint", "class"])
+    def test_kernel_matches_oracle(self, P, block, mode):
+        """Pallas kernel (interpret on CPU) == naive oracle, both modes."""
+        x, y, m = _sample(P)
+        if mode == "class":
+            x = jnp.asarray(RNG.integers(0, 5, size=P).astype(np.float32))
+        knn, cnt = knn_smallest(
+            x, y, m, k=4, mode=mode, use_kernel=True, block=block
+        )
+        knn_r, cnt_r = knn_smallest_ref(x, y, m, k=4, mode=mode)
+        np.testing.assert_array_equal(np.asarray(knn), np.asarray(knn_r))
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+
+    def test_all_invalid_rows_are_inf(self):
+        x, y, _ = _sample(16)
+        m = jnp.zeros(16, bool)
+        knn, cnt = knn_smallest(x, y, m, k=3, use_kernel=False)
+        assert np.all(np.isinf(np.asarray(knn)))
+        assert np.all(np.asarray(cnt) == 0)
+
+
+class TestBallCounts:
+    @pytest.mark.parametrize("P", [7, 64, 200, 513])
+    def test_fallback_matches_oracle(self, P):
+        x, y, m = _sample(P)
+        r = jnp.asarray(RNG.uniform(0, 2, size=P).astype(np.float32))
+        got = ball_counts(x, y, m, r, use_kernel=False)
+        want = ball_counts_ref(x, y, m, r)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("P,block", [(64, 128), (300, 128)])
+    def test_kernel_matches_oracle(self, P, block):
+        x, y, m = _sample(P)
+        r = jnp.asarray(RNG.uniform(0, 2, size=P).astype(np.float32))
+        got = ball_counts(x, y, m, r, use_kernel=True, block=block)
+        want = ball_counts_ref(x, y, m, r)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_y_only_mode(self, use_kernel):
+        """which='y' returns the same y_lt with zeroed x/tie counts."""
+        P = 100
+        x, y, m = _sample(P)
+        r = jnp.asarray(RNG.uniform(0, 2, size=P).astype(np.float32))
+        got = ball_counts(x, y, m, r, which="y",
+                          use_kernel=use_kernel, block=128)
+        want = ball_counts_ref(x, y, m, r)
+        np.testing.assert_array_equal(np.asarray(got.y_lt), np.asarray(want[1]))
+        for field in (got.x_lt, got.x_eq, got.y_eq, got.j_eq):
+            assert not np.any(np.asarray(field))
+
+
+def _iter_eqn_shapes(jaxpr):
+    """All output shapes of all equations, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                yield aval.shape
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                yield from _iter_eqn_shapes(sub)
+
+
+def _sub_jaxprs(val):
+    if hasattr(val, "jaxpr"):  # ClosedJaxpr
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):  # Jaxpr
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for item in val:
+            yield from _sub_jaxprs(item)
+
+
+class TestMemoryModel:
+    """The flash-KSG guarantee: no P×P intermediate, O(P·block) only."""
+
+    P = 512
+    BLOCK = 128
+
+    def _assert_no_pxp(self, fn, *args):
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        shapes = list(_iter_eqn_shapes(jaxpr.jaxpr))
+        offenders = [s for s in shapes if len(s) >= 2 and
+                     s[-1] == self.P and s[-2] == self.P]
+        assert not offenders, f"P×P intermediates found: {offenders}"
+        # sanity: the streamed (P, block) tiles DO appear
+        assert any(s[-2:] == (self.P, self.BLOCK) for s in shapes
+                   if len(s) >= 2)
+
+    def test_knn_smallest_never_materializes(self):
+        x, y, m = _sample(self.P)
+        self._assert_no_pxp(
+            lambda a, b, c: knn_smallest(
+                a, b, c, k=3, use_kernel=False, block=self.BLOCK
+            )[0],
+            x, y, m,
+        )
+
+    def test_ball_counts_never_materializes(self):
+        x, y, m = _sample(self.P)
+        r = jnp.asarray(RNG.uniform(0, 2, size=self.P).astype(np.float32))
+        self._assert_no_pxp(
+            lambda a, b, c, d: ball_counts(
+                a, b, c, d, use_kernel=False, block=self.BLOCK
+            ).x_lt,
+            x, y, m, r,
+        )
+
+    def test_fused_estimators_never_materialize(self):
+        x, y, m = _sample(self.P)
+        for fn in [
+            lambda a, b, c: estimators.ksg_mi(a, b, c, k=3),
+            lambda a, b, c: estimators.mixed_ksg_mi(a, b, c, k=3),
+            lambda a, b, c: estimators.dc_ksg_mi(
+                estimators.dense_rank(a, c), b, c, k=3
+            ),
+        ]:
+            self._assert_no_pxp(fn, x, y, m)
+
+
+class TestEstimatorParity:
+    """Fused streaming estimators == seed materialized estimators."""
+
+    @pytest.mark.parametrize("P", [50, 300, 700])
+    def test_ksg(self, P):
+        x, y, m = _sample(P)
+        a = estimators.ksg_mi(x, y, m, k=3, impl="fused")
+        b = estimators.ksg_mi(x, y, m, k=3, impl="materialized")
+        assert float(a) == pytest.approx(float(b), abs=1e-5)
+
+    @pytest.mark.parametrize("P", [50, 300, 700])
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    def test_mixed_ksg(self, P, k):
+        x, y, m = _sample(P)
+        a = estimators.mixed_ksg_mi(x, y, m, k=k, impl="fused")
+        b = estimators.mixed_ksg_mi(x, y, m, k=k, impl="materialized")
+        assert float(a) == pytest.approx(float(b), abs=1e-5)
+
+    @pytest.mark.parametrize("P", [50, 300, 700])
+    def test_dc_ksg(self, P):
+        codes = jnp.asarray(RNG.integers(0, 6, size=P).astype(np.int32))
+        _, y, m = _sample(P)
+        a = estimators.dc_ksg_mi(codes, y, m, k=3, impl="fused")
+        b = estimators.dc_ksg_mi(codes, y, m, k=3, impl="materialized")
+        assert float(a) == pytest.approx(float(b), abs=1e-5)
+
+    def test_dc_ksg_singleton_classes(self):
+        """Classes with one member are excluded in both impls."""
+        P = 40
+        codes = jnp.asarray(np.arange(P) // 15, jnp.int32)  # class 2 tiny
+        _, y, m = _sample(P, tie_frac=0.0)
+        a = estimators.dc_ksg_mi(codes, y, m, k=5, impl="fused")
+        b = estimators.dc_ksg_mi(codes, y, m, k=5, impl="materialized")
+        assert float(a) == pytest.approx(float(b), abs=1e-5)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import hashing
 from repro.core.join import sketch_join
@@ -131,4 +131,30 @@ class TestAggregation:
             int(_hashed_keys([3])[0]): 6.0,
             int(_hashed_keys([1])[0]): 9.0,
         }
+        assert got == pytest.approx(expect)
+
+
+class TestSortedAtIngest:
+    """Candidate sketches guarantee valid keys ascending, padding last —
+    the invariant the presorted discovery join relies on."""
+
+    @pytest.mark.parametrize("method", SKETCH_METHODS)
+    def test_cand_keys_sorted(self, method):
+        r = np.random.default_rng(17)
+        raw = r.integers(0, 5000, size=3000).astype(np.uint32)
+        keys = _hashed_keys(raw)
+        vals = r.normal(size=3000).astype(np.float32)
+        sk = build_sketch(keys, vals, n=128, method=method, side="cand")
+        size = sk.size
+        assert np.all(sk.mask[:size]) and not np.any(sk.mask[size:])
+        assert np.all(np.diff(sk.key_hashes[:size].astype(np.int64)) > 0)
+
+    def test_sorting_preserves_key_value_pairing(self):
+        raw = np.array([9, 2, 5, 2, 9, 5, 1], dtype=np.uint32)
+        keys = _hashed_keys(raw)
+        vals = np.array([1.0, 2.0, 3.0, 2.0, 1.0, 3.0, 4.0], np.float32)
+        sk = build_sketch(keys, vals, n=8, method="tupsk", side="cand", agg="first")
+        got = dict(zip(sk.key_hashes[sk.mask].tolist(), sk.values[sk.mask].tolist()))
+        expect = {int(_hashed_keys(np.array([k], np.uint32))[0]): v
+                  for k, v in [(9, 1.0), (2, 2.0), (5, 3.0), (1, 4.0)]}
         assert got == pytest.approx(expect)
