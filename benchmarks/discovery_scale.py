@@ -6,12 +6,15 @@ This benchmark measures:
 
   * per-pair python-loop scoring (the paper's implied execution model),
   * the batched vmapped single-program scorer (``score_batch``),
+  * the estimator-partitioned planned path and the multi-query (Q=16)
+    batched executor — concurrent queries against the cached plan,
   * the mesh-sharded top-k scorer (``distributed_topk``) on the local
     device mesh (device-parallel on real hardware; on 1 CPU device this
     measures the shard_map overhead floor).
 
-Derived metric: candidates/second — the number that determines whether
-MI-based discovery over millions of column pairs is interactive.
+Derived metrics: candidates/second, and for the multi-query row
+candidates·queries/second — the numbers that determine whether MI-based
+discovery over millions of column pairs serves interactive traffic.
 """
 
 from __future__ import annotations
@@ -24,11 +27,13 @@ import jax
 
 from repro.core import hashing
 from repro.core.discovery import (
+    BatchedExecutor,
     SketchIndex,
     distributed_topk,
     score_batch,
     score_batch_partitioned,
     score_batch_reference,
+    stack_trains,
 )
 from repro.core.sketch import build_sketch
 from repro.launch.mesh import make_host_mesh
@@ -97,12 +102,113 @@ def bench_discovery_throughput(quick: bool = False) -> list[tuple]:
                  f"speedup_vs_loop={us_loop / us_batch:.1f}x;"
                  f"new_vs_seed={us_seed / us_batch:.1f}x"))
 
-    # 3. mesh-sharded top-k (collective-merged)
-    mesh = make_host_mesh(model=1)
-    v, gi, _ = distributed_topk(train, cands, mesh, top_k=8)
+    # 2c. multi-query batched executor, serving regime: Q=16 concurrent
+    # queries against a mixed-estimator repository of paper-scale
+    # sketches (n=64), where per-query plan/pack/dispatch overhead — not
+    # raw estimator FLOPs — bounds QPS.  Baseline: Q sequential
+    # score_batch_partitioned calls, the naive way a service would drain
+    # its query queue (each call re-packs the estimator groups).  The
+    # batched executor runs one compiled program per group with a
+    # leading Q axis over the index's cached plan, so that overhead is
+    # paid once per batch; on TPU the compute term shrinks further,
+    # widening the gap at larger corpora.
+    Q, q_n, q_cands = 16, 64, 16
+    q_rng = np.random.default_rng(11)
+    q_keys = np.asarray(hashing.murmur3_32_np(
+        np.arange(4000, dtype=np.uint32), seed=np.uint32(3)))
+    y_base = q_rng.normal(size=4000).astype(np.float32)
+    q_index = SketchIndex(n=q_n, method="tupsk")
+    for c in range(q_cands):
+        alpha = c / max(q_cands - 1, 1)
+        if c % 4 == 3:  # a discrete group: 4 estimator programs total
+            vals, disc = q_rng.integers(0, 8, size=4000), True
+        else:
+            vals = (alpha * y_base
+                    + (1 - alpha) * q_rng.normal(size=4000)).astype(np.float32)
+            disc = False
+        perm = q_rng.permutation(4000)
+        q_index.add(f"q{c}", "k", "v", q_keys[perm], np.asarray(vals)[perm],
+                    disc)
+    train_dicts = [
+        SketchIndex.train_arrays(build_sketch(
+            q_keys,
+            (y_base + 0.3 * (q + 1) * q_rng.normal(size=4000))
+            .astype(np.float32),
+            n=q_n, method="tupsk", side="train", value_is_discrete=False,
+        ))
+        for q in range(Q)
+    ]
+    q_cands_stacked = q_index.stacked(False)
+    trains16 = stack_trains(train_dicts)
+    q_plan = q_index.plan(False)
+    ex = BatchedExecutor()
+
+    from repro.core.discovery import PartitionedLocalExecutor
+    ex_local = PartitionedLocalExecutor()
+
+    def _seq():
+        return [score_batch_partitioned(t, q_cands_stacked)
+                for t in train_dicts]
+
+    def _seq_planned():
+        # Plan-cached sequential loop (query()'s own path): isolates the
+        # Q-axis batching win from the per-call replanning the naive
+        # functional loop pays on top.
+        return [ex_local.execute(q_plan, t) for t in train_dicts]
+
+    def _batched():
+        return ex.execute(q_plan, trains16)  # np output = already synced
+
+    _seq(); _seq_planned(); _batched()  # warmup all paths
     t0 = time.perf_counter()
     for _ in range(reps):
-        v, gi, _ = distributed_topk(train, cands, mesh, top_k=8)
+        _seq()
+    us_seq = (time.perf_counter() - t0) / reps / (q_cands * Q) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _seq_planned()
+    us_planned = (time.perf_counter() - t0) / reps / (q_cands * Q) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _batched()
+    us_multi = (time.perf_counter() - t0) / reps / (q_cands * Q) * 1e6
+    # Regression gate: batching must hold >=3x over the naive sequential
+    # loop.  Wall-clock on shared CI runners is noisy, so a miss is
+    # re-measured once before failing (explicit raise, not assert —
+    # python -O must not disable the gate).
+    if us_seq / us_multi < 3.0:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _seq()
+        us_seq = (time.perf_counter() - t0) / reps / (q_cands * Q) * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _batched()
+        us_multi = (time.perf_counter() - t0) / reps / (q_cands * Q) * 1e6
+        if us_seq / us_multi < 3.0:
+            raise RuntimeError(
+                f"multi-query batching regressed: "
+                f"{us_seq / us_multi:.2f}x < 3x (twice)"
+            )
+    rows.append(("discovery/multi_query_q16", us_multi,
+                 f"cq_per_s={1e6 / us_multi:.0f};"
+                 f"speedup_vs_sequential={us_seq / us_multi:.1f}x;"
+                 f"speedup_vs_plan_cached={us_planned / us_multi:.1f}x"))
+
+    # 3. mesh-sharded top-k (collective-merged), through the serving
+    # path a repeat caller uses: the index's cached plan + a held
+    # group-major executor (the ad-hoc distributed_topk function
+    # rebuilds the plan per call and is measured once for reference).
+    from repro.core.discovery import GroupMajorDistributedExecutor
+
+    mesh = make_host_mesh(model=1)
+    v, gi, _ = distributed_topk(train, cands, mesh, top_k=8)  # ad-hoc warm
+    dist_plan = index.plan(False)
+    ex_dist = GroupMajorDistributedExecutor(mesh)
+    ex_dist.topk(dist_plan, train, 8)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        v, gi, _ = ex_dist.topk(dist_plan, train, 8)[0]
     us_dist = (time.perf_counter() - t0) / reps / n_cands * 1e6
     # ranking sanity: the strongest planted candidate wins
     assert int(gi[0]) == n_cands - 1, gi[:4]

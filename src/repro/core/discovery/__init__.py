@@ -1,0 +1,88 @@
+"""MI-based data discovery engine (the paper's end application), as a
+layered serving architecture.
+
+A discovery *service* answers many concurrent queries — "which of
+millions of candidate column pairs has high MI with my target?" — while
+the repository keeps growing underneath it.  The engine is split into
+three layers, one module each:
+
+  * :mod:`~repro.core.discovery.index` — **storage**.
+    :class:`SketchIndex` holds candidate sketches in device-resident
+    preallocated arrays (row capacity doubles along a power-of-two
+    ladder).  ``add`` appends; the next query flushes only the pending
+    rows — ingest-while-serving is amortized O(1) per candidate, and no
+    cache is ever invalidated wholesale.  Keys are stored pre-fenced
+    (effective form) so the hot join does one ``searchsorted`` and
+    nothing else per candidate.
+  * :mod:`~repro.core.discovery.planner` — **layout**.  A
+    :class:`QueryPlan` fixes estimator partitioning, group-major
+    candidate order, and padded bucket shapes (shared pow-two ladder ->
+    stable compiled-program cache keys) once per corpus version; every
+    executor consumes the same plan.
+  * :mod:`~repro.core.discovery.executors` — **compute**.  Three
+    backends behind one ``execute(plan, trains)`` interface: a local
+    per-query partitioned scorer (all group programs dispatched before
+    the first host transfer), a multi-query batched scorer (leading Q
+    axis vmapped over train sketches, one (Q, C) score matrix per
+    compiled program — bit-identical to Q single queries), and a
+    group-major distributed scorer (estimator partitioning *outside*
+    ``shard_map``, so every shard runs homogeneous programs and the
+    top-k merge moves O(groups · shards · k) scalars).
+
+Entry points: :meth:`SketchIndex.query` (single query — exact signature
+and results of the pre-layered engine), :meth:`SketchIndex.query_many`
+(concurrent query batch), and the functional back-compat wrappers
+(:func:`score_batch`, :func:`score_batch_partitioned`,
+:func:`distributed_topk`) for callers holding raw stacked arrays.
+
+The KSG-family estimators underneath stream kNN statistics through the
+fused ``knn_stats`` kernel — no P×P distance matrix per candidate; see
+``repro.kernels.knn_stats``.
+"""
+
+from repro.core.discovery.executors import (
+    BatchedExecutor,
+    Executor,
+    GroupMajorDistributedExecutor,
+    PartitionedLocalExecutor,
+    _score_group,
+    _shard_topk_plan,
+    distributed_topk,
+    get_executor,
+    score_batch,
+    score_batch_partitioned,
+    score_batch_reference,
+    stack_trains,
+)
+from repro.core.discovery.index import CandidateMeta, SketchIndex
+from repro.core.discovery.planner import (
+    GroupPlan,
+    QueryPlan,
+    bucket_rows,
+    estimator_id,
+    make_plan,
+    pack_group,
+    partition_by_estimator,
+)
+
+__all__ = [
+    "CandidateMeta",
+    "SketchIndex",
+    "QueryPlan",
+    "GroupPlan",
+    "make_plan",
+    "pack_group",
+    "partition_by_estimator",
+    "estimator_id",
+    "bucket_rows",
+    "Executor",
+    "PartitionedLocalExecutor",
+    "BatchedExecutor",
+    "GroupMajorDistributedExecutor",
+    "get_executor",
+    "stack_trains",
+    "score_batch",
+    "score_batch_partitioned",
+    "score_batch_reference",
+    "distributed_topk",
+]

@@ -1,0 +1,557 @@
+"""Execution backends for planned discovery queries.
+
+Three executors run the same :class:`~repro.core.discovery.planner.QueryPlan`
+behind one ``execute(plan, trains)`` interface; all return dense
+``(Q, C)`` score / join-size matrices in the original candidate order
+(and ``topk`` for collective-light ranked retrieval):
+
+  * :class:`PartitionedLocalExecutor` — one homogeneous compiled program
+    per estimator group per query.  All per-group programs for all
+    queries are **dispatched before the first host transfer**, so jax's
+    async dispatch overlaps estimator groups on device instead of
+    serializing compute behind each group's device->host copy.
+  * :class:`BatchedExecutor` — the multi-query fast path: one compiled
+    program per estimator group with a leading Q axis vmapped over the
+    train sketches, scoring Q concurrent queries against the same cached
+    candidate arrays.  Bit-identical to Q single-query runs (vmap lanes
+    are data-parallel); amortizes dispatch, join layout, and transfer
+    overhead over the whole query batch.
+  * :class:`GroupMajorDistributedExecutor` — shards each group's
+    candidate rows over the mesh 'data' axis.  Because candidates were
+    partitioned by estimator *before* ``shard_map``, every shard of
+    every program is homogeneous — the seed path ran the 4-way
+    ``lax.switch`` scorer inside ``shard_map``, paying all branches on
+    every shard.  ``topk`` keeps the collective payload at
+    O(groups · shards · k) via per-shard ``lax.top_k``.
+
+The estimator-id -> estimator mapping lives in exactly one place
+(:func:`_estimate`); the legacy switch scorer (`score_batch`), the seed
+reference (`score_batch_reference`), and every partitioned program
+dispatch through it, so they cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import estimators
+from repro.core.join import effective_keys, sketch_join_jax, sketch_join_presorted
+from repro.core.discovery.planner import (
+    EST_DC_XD,
+    EST_DC_YD,
+    EST_MIXED,
+    EST_MLE,
+    GroupPlan,
+    QueryPlan,
+    make_plan,
+    pack_group,
+    partition_by_estimator,
+)
+from repro.parallel.compat import shard_map
+
+__all__ = [
+    "score_batch",
+    "score_batch_reference",
+    "score_batch_partitioned",
+    "distributed_topk",
+    "stack_trains",
+    "Executor",
+    "PartitionedLocalExecutor",
+    "BatchedExecutor",
+    "GroupMajorDistributedExecutor",
+    "get_executor",
+]
+
+
+def _estimate(est_id: int, xf, xu, y_f, y_u, mask, k: int, impl: str = "fused"):
+    """One estimator on one joined sample; ``est_id`` is a static int."""
+    if est_id == EST_MLE:
+        return estimators.mle_mi(xu, y_u, mask)
+    if est_id == EST_MIXED:
+        return estimators.mixed_ksg_mi(xf, y_f, mask, k=k, impl=impl)
+    if est_id == EST_DC_XD:  # discrete X (candidate feature), continuous Y
+        return estimators.dc_ksg_mi(
+            estimators.dense_rank(xu, mask), y_f, mask, k=k, impl=impl
+        )
+    # continuous X, discrete Y
+    return estimators.dc_ksg_mi(
+        estimators.dense_rank(y_u, mask), xf, mask, k=k, impl=impl
+    )
+
+
+def _score_one(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask, est_id, k,
+    impl: str = "fused",
+):
+    """Join one candidate sketch against the train sketch and estimate MI.
+
+    ``est_id`` picks the estimator branch via ``lax.switch`` so a single
+    compiled program serves heterogeneous corpora.  NOTE: under ``vmap``
+    the switch lowers to ``select_n`` — ALL branches execute for every
+    candidate; the partitioned executors are the fast path.
+    """
+    xf, y_f, mask = sketch_join_jax(
+        train_keys, train_vals_f, train_mask, cand_keys, cand_vals_f, cand_mask
+    )
+    xu, y_u, _ = sketch_join_jax(
+        train_keys, train_vals_u, train_mask, cand_keys, cand_vals_u, cand_mask
+    )
+    branches = [
+        (lambda _, i=i: _estimate(i, xf, xu, y_f, y_u, mask, k, impl))
+        for i in (EST_MLE, EST_MIXED, EST_DC_XD, EST_DC_YD)
+    ]
+    mi = jax.lax.switch(est_id, branches, operand=None)
+    return mi, jnp.sum(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def score_batch(train: dict, cands: dict, k: int = 3):
+    """MI scores of a stacked candidate batch against one train sketch
+    (switch-dispatch scorer — all estimator branches under vmap; prefer
+    the partitioned executors on the host-driven path).
+    Returns (mi_scores (C,), join_sizes (C,))."""
+    f = jax.vmap(
+        lambda ck, cf, cu, cm, eid: _score_one(
+            train["keys"], train["vals_f"], train["vals_u"], train["mask"],
+            ck, cf, cu, cm, eid, k,
+        )
+    )
+    return f(
+        cands["keys"], cands["vals_f"], cands["vals_u"], cands["mask"],
+        cands["est_id"],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def score_batch_reference(train: dict, cands: dict, k: int = 3):
+    """Seed-identical scoring path, kept for benchmark comparison:
+    double lexsort join per candidate + 4-way switch over the
+    *materialized* (P×P) estimators."""
+    f = jax.vmap(
+        lambda ck, cf, cu, cm, eid: _score_one(
+            train["keys"], train["vals_f"], train["vals_u"], train["mask"],
+            ck, cf, cu, cm, eid, k,
+            impl="materialized",
+        )
+    )
+    return f(
+        cands["keys"], cands["vals_f"], cands["vals_u"], cands["mask"],
+        cands["est_id"],
+    )
+
+
+def _score_group_impl(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+    *, est_id: int, k: int,
+):
+    """Homogeneous scorer body: every candidate shares one estimator, so
+    no switch and no redundant branches are compiled.  Candidate keys
+    must be in effective (ingest-fenced) form — the index store and
+    :func:`~repro.core.discovery.planner.pack_group` both guarantee it."""
+
+    def one(ck, cf, cu, cm):
+        (xf, xu), (y_f, y_u), mask = sketch_join_presorted(
+            train_keys, train_mask, ck, cm,
+            (cf, cu), (train_vals_f, train_vals_u),
+            keys_effective=True,
+        )
+        return _estimate(est_id, xf, xu, y_f, y_u, mask, k), jnp.sum(mask)
+
+    return jax.vmap(one)(cand_keys, cand_vals_f, cand_vals_u, cand_mask)
+
+
+# Single-query compiled program: (G,) scores for one train sketch.
+_score_group = jax.jit(
+    _score_group_impl, static_argnames=("est_id", "k")
+)
+
+
+@functools.partial(jax.jit, static_argnames=("est_id", "k"))
+def _score_group_many(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+    *, est_id: int, k: int,
+):
+    """Multi-query homogeneous scorer: the train arrays carry a leading
+    Q axis vmapped over the same candidate group arrays — one compiled
+    program returns the (Q, G) score block.  vmap lanes are
+    data-parallel, so each row is bit-identical to the single-query
+    program on that train sketch."""
+    return jax.vmap(
+        lambda tk, tf, tu, tm: _score_group_impl(
+            tk, tf, tu, tm,
+            cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+            est_id=est_id, k=k,
+        )
+    )(train_keys, train_vals_f, train_vals_u, train_mask)
+
+
+def stack_trains(trains: list[dict]) -> dict:
+    """Stack single-query train dicts into one leading-Q-axis dict."""
+    if not trains:
+        raise ValueError("no train sketches")
+    y_disc = {bool(t.get("y_discrete", False)) for t in trains}
+    if len(y_disc) != 1:
+        raise ValueError(
+            "query_many requires all train targets to share one dtype "
+            "(got both discrete and continuous); split the batch"
+        )
+    out = {
+        key: jnp.stack([t[key] for t in trains])
+        for key in ("keys", "vals_f", "vals_u", "mask")
+    }
+    out["y_discrete"] = y_disc.pop()
+    return out
+
+
+def _as_stacked_trains(trains: dict | list[dict]) -> dict:
+    if isinstance(trains, dict):
+        if trains["keys"].ndim == 1:  # single query -> Q == 1
+            return {
+                **{key: trains[key][None] for key in
+                   ("keys", "vals_f", "vals_u", "mask")},
+                "y_discrete": bool(trains.get("y_discrete", False)),
+            }
+        return trains
+    return stack_trains(trains)
+
+
+def _train_row(trains: dict, q: int) -> tuple:
+    return (trains["keys"][q], trains["vals_f"][q],
+            trains["vals_u"][q], trains["mask"][q])
+
+
+def _cand_args(gp: GroupPlan) -> tuple:
+    a = gp.arrays
+    return (a["keys"], a["vals_f"], a["vals_u"], a["mask"])
+
+
+def _scatter(plan: QueryPlan, blocks, Q: int):
+    """Device results -> dense (Q, C) host matrices in candidate order.
+
+    ``blocks`` entries are (group, mi, js) with mi/js of shape
+    (Q, bucket).  np.asarray here is the first host sync — callers
+    dispatch every group program before building the output.
+    """
+    mi_out = np.zeros((Q, plan.n_candidates), np.float32)
+    js_out = np.zeros((Q, plan.n_candidates), np.int32)
+    for gp, mi, js in blocks:
+        g = gp.size
+        mi_out[:, gp.index[:g]] = np.asarray(mi)[:, :g]
+        js_out[:, gp.index[:g]] = np.asarray(js)[:, :g]
+    return mi_out, js_out
+
+
+class Executor:
+    """Backend interface: dense scoring + ranked retrieval of a plan."""
+
+    def execute(self, plan: QueryPlan, trains: dict | list[dict]):
+        """Score every (query, candidate) pair.
+
+        ``trains`` is a stacked leading-Q-axis dict (see
+        :func:`stack_trains`), a list of per-query train dicts, or a
+        single train dict.  Returns (mi (Q, C), js (Q, C)) numpy arrays
+        in the original candidate order.
+        """
+        raise NotImplementedError
+
+    def topk(self, plan: QueryPlan, trains: dict | list[dict], top_k: int):
+        """Per-query top-k: list of (values, global indices, join sizes),
+        one triple per query, best first.  Default = dense + argsort;
+        the distributed executor overrides with the per-shard merge."""
+        trains = _as_stacked_trains(trains)
+        mi, js = self.execute(plan, trains)
+        out = []
+        for q in range(mi.shape[0]):
+            order = np.argsort(-mi[q], kind="stable")[:min(top_k, mi.shape[1])]
+            out.append((mi[q][order], order.astype(np.int64), js[q][order]))
+        return out
+
+
+class PartitionedLocalExecutor(Executor):
+    """Per-query estimator-partitioned scoring (the single-query path).
+
+    Every (query, group) program is dispatched before any result is
+    copied to the host, so group programs overlap on device instead of
+    running compute -> transfer -> compute lockstep.
+    """
+
+    def __init__(self, k: int = 3):
+        self.k = k
+
+    def execute(self, plan, trains):
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        blocks = []
+        for gp in plan.groups:
+            per_q = [
+                _score_group(
+                    *_train_row(trains, q), *_cand_args(gp),
+                    est_id=gp.est_id, k=self.k,
+                )
+                for q in range(Q)
+            ]
+            blocks.append((
+                gp,
+                jnp.stack([mi for mi, _ in per_q]),
+                jnp.stack([js for _, js in per_q]),
+            ))
+        return _scatter(plan, blocks, Q)
+
+
+class BatchedExecutor(Executor):
+    """Multi-query batched scoring: one program per group, leading Q axis."""
+
+    def __init__(self, k: int = 3):
+        self.k = k
+
+    def execute(self, plan, trains):
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        blocks = [
+            (gp, *_score_group_many(*t_args, *_cand_args(gp),
+                                    est_id=gp.est_id, k=self.k))
+            for gp in plan.groups
+        ]
+        return _scatter(plan, blocks, Q)
+
+
+def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
+    """Per-shard and global result counts for a distributed top-k.
+
+    ``lax.top_k`` inside a shard cannot exceed the shard's candidate
+    count, but clamping must never shrink the *global* result below
+    ``min(top_k, C)``: every shard keeps ``min(top_k, shard_size)``
+    (all global top-k could live in one shard), and the merge returns
+    ``min(top_k, shards · per_shard)``.
+    """
+    shard_size = c_padded // n_shards
+    k_shard = max(min(top_k, shard_size), 1)
+    k_final = min(top_k, n_shards * k_shard)
+    return k_shard, k_final
+
+
+@functools.lru_cache(maxsize=128)
+def _make_group_shard_scorer(mesh: Mesh, est_id: int, k_shard: int, k: int):
+    """Compiled homogeneous shard_map scorer for one estimator group.
+
+    The candidate rows of the group are sharded over the 'data' axis;
+    the (Q, cap) train arrays are replicated.  ``k_shard == 0`` returns
+    the dense (Q, rows) scores; otherwise each shard emits its top
+    ``k_shard`` per query (dead rows fenced to -inf via ``live``).
+    Cached per (mesh, est_id, k_shard, k) so repeat queries re-trace
+    nothing; jit's shape cache handles the bucket ladder underneath.
+    """
+    axis = "data"
+    sh = P(None, axis)  # (Q, rows) outputs / (rows, cap) inputs use P(axis)
+    rep = P()
+
+    def local(tk, tf, tu, tm, ck, cf, cu, cm, live):
+        mi, js = jax.vmap(
+            lambda a, b, c, d: _score_group_impl(
+                a, b, c, d, ck, cf, cu, cm, est_id=est_id, k=k
+            )
+        )(tk, tf, tu, tm)
+        if k_shard == 0:
+            return mi, js
+        fenced = jnp.where(live[None, :], mi, -jnp.inf)
+        v, i = jax.lax.top_k(fenced, k_shard)
+        return v, i, jnp.take_along_axis(js, i, axis=1)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, rep,
+                  P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(sh, sh) if k_shard == 0 else (sh, sh, sh),
+        check=False,
+    )
+    return jax.jit(fn)
+
+
+def _pad_group_to_shards(
+    gp: GroupPlan, n_shards: int, sentinel: int
+) -> GroupPlan:
+    """Zero-pad a group bucket whose row count doesn't divide the shard
+    count (only reachable for non-power-of-two meshes on plans built
+    without the mesh hint — the planner ladder normally absorbs this).
+    ``sentinel`` is the dead-row global index (= plan.n_candidates)."""
+    b = gp.bucket
+    if b % n_shards == 0:
+        return gp
+    b_new = -(-b // n_shards) * n_shards
+    pad = b_new - b
+    arrays = {
+        name: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        for name, a in gp.arrays.items()
+    }
+    # Padded key rows must stay searchsorted-safe: re-fence through the
+    # one effective-keys helper (idempotent for the live rows).
+    arrays["keys"] = effective_keys(arrays["keys"], arrays["mask"])
+    index = np.concatenate([gp.index, np.full(pad, sentinel, np.int64)])
+    live = jnp.pad(gp.live, (0, pad))
+    return GroupPlan(gp.est_id, arrays, index, live, gp.size)
+
+
+class GroupMajorDistributedExecutor(Executor):
+    """Mesh-sharded scoring with estimator partitioning *outside* the
+    collective: one homogeneous shard_map program per group, candidates
+    sharded over the 'data' axis, train replicated.  ``topk`` reduces
+    the merge payload to O(groups · shards · k_shard) scalars."""
+
+    # One live plan per target dtype is the steady state (the index
+    # caches exactly that), so two entries suffice; a deeper cache would
+    # pin superseded plans' device buffers during ingest-while-serving.
+    _PAD_CACHE_MAX = 2
+
+    def __init__(self, mesh: Mesh, k: int = 3):
+        self.mesh = mesh
+        self.k = k
+        # Shard-padded groups per plan: keyed by plan identity, holding a
+        # strong reference to the plan so the id cannot be recycled while
+        # the entry lives.  Repeat queries against a cached plan re-pad
+        # nothing (pad is a no-op device-array passthrough for buckets
+        # that already divide the shard count, a jnp.pad per group
+        # otherwise).
+        self._pad_cache: dict[int, tuple[QueryPlan, list[GroupPlan]]] = {}
+
+    def _groups(self, plan):
+        n_shards = self.mesh.shape["data"]
+        hit = self._pad_cache.get(id(plan))
+        if hit is not None and hit[0] is plan:
+            return n_shards, hit[1]
+        groups = [
+            _pad_group_to_shards(gp, n_shards, plan.n_candidates)
+            for gp in plan.groups
+        ]
+        while len(self._pad_cache) >= self._PAD_CACHE_MAX:
+            self._pad_cache.pop(next(iter(self._pad_cache)))
+        self._pad_cache[id(plan)] = (plan, groups)
+        return n_shards, groups
+
+    def execute(self, plan, trains):
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        _, groups = self._groups(plan)
+        blocks = []
+        for gp in groups:
+            fn = _make_group_shard_scorer(self.mesh, gp.est_id, 0, self.k)
+            mi, js = fn(*t_args, *_cand_args(gp), gp.live)
+            blocks.append((gp, mi, js))
+        return _scatter(plan, blocks, Q)
+
+    def topk(self, plan, trains, top_k):
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        n_shards, groups = self._groups(plan)
+        pend = []
+        for gp in groups:
+            k_shard, _ = _shard_topk_plan(gp.bucket, n_shards, top_k)
+            fn = _make_group_shard_scorer(self.mesh, gp.est_id, k_shard, self.k)
+            pend.append((gp, k_shard, fn(*t_args, *_cand_args(gp), gp.live)))
+        out = []
+        for q in range(Q):
+            vs, gis, jss = [], [], []
+            for gp, k_shard, (v, i, js) in pend:
+                shard_rows = gp.bucket // n_shards
+                v_q = np.asarray(v)[q].reshape(n_shards, k_shard)
+                i_q = np.asarray(i)[q].reshape(n_shards, k_shard)
+                js_q = np.asarray(js)[q].reshape(n_shards, k_shard)
+                rows = i_q + (np.arange(n_shards) * shard_rows)[:, None]
+                vs.append(v_q.reshape(-1))
+                gis.append(gp.index[rows.reshape(-1)])
+                jss.append(js_q.reshape(-1))
+            flat_v = np.concatenate(vs)
+            flat_gi = np.concatenate(gis)
+            flat_js = np.concatenate(jss)
+            k_final = min(top_k, len(flat_v))
+            order = np.argsort(-flat_v, kind="stable")[:k_final]
+            out.append((flat_v[order], flat_gi[order], flat_js[order]))
+        return out
+
+
+def get_executor(
+    spec: str | Executor | None, mesh: Mesh | None = None, k: int = 3
+) -> Executor:
+    """Resolve an executor: an instance passes through; None picks the
+    distributed backend when a mesh is given, else the local one."""
+    if isinstance(spec, Executor):
+        return spec
+    if spec is None:
+        spec = "distributed" if mesh is not None else "partitioned"
+    if spec == "partitioned":
+        return PartitionedLocalExecutor(k=k)
+    if spec == "batched":
+        return BatchedExecutor(k=k)
+    if spec == "distributed":
+        if mesh is None:
+            raise ValueError("distributed executor requires a mesh")
+        return GroupMajorDistributedExecutor(mesh, k=k)
+    raise ValueError(f"unknown executor {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# Back-compat functional entry points (pre-planner API).
+# ---------------------------------------------------------------------------
+
+
+def score_batch_partitioned(
+    train: dict, cands: dict, k: int = 3,
+    groups: list[tuple] | None = None,
+):
+    """Estimator-partitioned batch scoring of raw stacked arrays.
+
+    Plans the corpus ad hoc (``groups`` — legacy ``(est_id, indices)``
+    entries — overrides the partition when given) and runs the local
+    partitioned executor.  Matches :func:`score_batch` output exactly.
+    Prefer ``SketchIndex.query`` / ``query_many``, which reuse the
+    incrementally-maintained plan instead of re-packing per call.
+    Returns (mi_scores (C,), join_sizes (C,)).
+    """
+    C = int(np.asarray(cands["est_id"]).shape[0])
+    y_disc = bool(train.get("y_discrete", False))
+    if groups is None:
+        plan = make_plan(cands, y_discrete=y_disc)
+    else:
+        plan = QueryPlan(y_disc, C, [
+            pack_group(cands, int(entry[0]), np.asarray(entry[1]), C)
+            for entry in groups
+        ])
+    mi, js = PartitionedLocalExecutor(k=k).execute(plan, train)
+    return jnp.asarray(mi[0]), jnp.asarray(js[0])
+
+
+def distributed_topk(train: dict, cands: dict, mesh: Mesh, top_k: int, k: int = 3):
+    """Mesh-sharded discovery query with per-shard top-k merge.
+
+    Group-major: candidates are partitioned by estimator *before*
+    ``shard_map`` (each shard runs homogeneous programs), sharded over
+    the 'data' mesh axis, and merged on the host from O(groups · shards
+    · k_shard) scalars.  Returns (values, global indices, join sizes) of
+    the global top ``min(top_k, C)``, best first.
+
+    Ad-hoc entry point: the plan (per-group gather + pad) is rebuilt on
+    every call.  Repeated callers should hold a
+    :class:`GroupMajorDistributedExecutor` and the index's cached
+    ``plan()`` instead — that is what ``SketchIndex.query(mesh=...)``
+    does.
+    """
+    plan = make_plan(cands, y_discrete=bool(train.get("y_discrete", False)),
+                     pad_multiple=mesh.shape["data"])
+    ex = GroupMajorDistributedExecutor(mesh, k=k)
+    v, gi, js = ex.topk(plan, train, top_k)[0]
+    return v, gi, js

@@ -1,0 +1,457 @@
+"""Device-resident candidate index with amortized-O(1) ingest-while-serving.
+
+The repository side of the discovery service lives in a
+:class:`SketchIndex`.  Two device-resident representations of the corpus
+are maintained *incrementally*:
+
+  * the **stacked store** — candidate sketches in original order,
+    backing the legacy ``stacked()`` API and the switch scorer; and
+  * per-target-dtype **group-major stores** — one contiguous device
+    buffer per estimator group, the layout every planned executor runs
+    on (see ``planner.py`` / ``executors.py``).
+
+``add`` is a host-side append (build + validate the sketch, extend the
+host lists) — no device work.  The next ``stacked()`` / ``plan()`` call
+flushes only the *pending* rows into preallocated device arrays via one
+``dynamic_update_slice`` per array, doubling row capacity (power-of-two
+ladder, so compiled-program shapes are reused) when full.  The seed
+behavior — clearing every cache on ``add`` and re-uploading the whole
+corpus on the next query — is gone: ingest-while-serving moves O(new
+rows) bytes host->device, amortized O(1) per added candidate.
+``ingest_stats`` counts exactly those transfers so tests can assert the
+absence of full re-stacks.
+
+Candidate keys are stored in *effective* form (masked slots fenced to
+0xFFFFFFFF at flush time — :func:`repro.core.join.effective_keys`), so
+the per-query key remap disappears from every scorer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.discovery import executors as _ex
+from repro.core.discovery.planner import (
+    EST_MLE,
+    GroupPlan,
+    MIN_BUCKET,
+    QueryPlan,
+    estimator_id,
+)
+from repro.core.sketch import Sketch, build_sketch
+
+__all__ = ["CandidateMeta", "SketchIndex"]
+
+_KEY_MAX = np.uint32(0xFFFFFFFF)
+
+
+@dataclass
+class CandidateMeta:
+    table: str
+    key_column: str
+    value_column: str
+    value_is_discrete: bool
+
+
+@jax.jit
+def _write_block(buf, block, row0):
+    """Append ``block`` rows at ``row0`` (traced scalar — one compiled
+    program per block shape serves every offset)."""
+    return jax.lax.dynamic_update_slice(buf, block, (row0, 0))
+
+
+_DTYPES = {
+    "keys": np.uint32,
+    "vals_f": np.float32,
+    "vals_u": np.uint32,
+    "mask": bool,
+}
+_FILL = {"keys": _KEY_MAX, "vals_f": 0, "vals_u": 0, "mask": False}
+
+
+class _DeviceStore:
+    """Preallocated device arrays with power-of-two row-capacity doubling.
+
+    Rows [0, rows) are live; rows beyond carry an all-False mask (and
+    KEY_MAX keys), so they join empty and score 0.0 wherever they leak
+    into a padded batch.
+    """
+
+    def __init__(self, cap_cols: int):
+        self.cap_cols = cap_cols
+        self.cap_rows = 0
+        self.rows = 0
+        self.arrays: dict[str, jax.Array] = {}
+        self.grows = 0
+        self.h2d_rows = 0
+
+    def _pad_rows(self, name: str, arr: jax.Array, new_rows: int) -> jax.Array:
+        pad = jnp.full(
+            (new_rows - arr.shape[0], self.cap_cols),
+            _FILL[name], _DTYPES[name],
+        )
+        return jnp.concatenate([arr, pad], axis=0)
+
+    def ensure_rows(self, need: int) -> None:
+        if need <= self.cap_rows:
+            return
+        new_cap = max(self.cap_rows, MIN_BUCKET)
+        while new_cap < need:
+            new_cap *= 2
+        if self.cap_rows == 0:
+            self.arrays = {
+                name: jnp.full((new_cap, self.cap_cols), _FILL[name], dt)
+                for name, dt in _DTYPES.items()
+            }
+        else:
+            self.arrays = {
+                name: self._pad_rows(name, a, new_cap)
+                for name, a in self.arrays.items()
+            }
+            self.grows += 1
+        self.cap_rows = new_cap
+
+    def append_block(self, block: dict[str, np.ndarray]) -> None:
+        n_new = block["keys"].shape[0]
+        if n_new == 0:
+            return
+        self.ensure_rows(self.rows + n_new)
+        row0 = np.int32(self.rows)
+        self.arrays = {
+            name: _write_block(a, jnp.asarray(block[name]), row0)
+            for name, a in self.arrays.items()
+        }
+        self.rows += n_new
+        self.h2d_rows += n_new
+
+
+class _GroupState:
+    """Incrementally-maintained group-major layout for one target dtype."""
+
+    def __init__(self):
+        self.stores: dict[int, _DeviceStore] = {}
+        self.index: dict[int, list[int]] = {}
+        self.flushed = 0  # candidates consumed from the host lists
+
+
+class SketchIndex:
+    """Repository-side index: candidate sketches, device-resident, with
+    incremental ingest and plan-cached group-major batch layouts."""
+
+    def __init__(self, n: int = 256, method: str = "tupsk", agg: str = "first"):
+        self.n = n
+        self.method = method
+        self.agg = agg
+        self.meta: list[CandidateMeta] = []
+        self._keys: list[np.ndarray] = []
+        self._vals_f: list[np.ndarray] = []
+        self._vals_u: list[np.ndarray] = []
+        self._masks: list[np.ndarray] = []
+        self._discrete: list[bool] = []
+        self._cap_cols: int | None = None
+        self._version = 0
+        self._store: _DeviceStore | None = None
+        self._groups: dict[bool, _GroupState] = {}
+        self._stacked_cache: dict[tuple[bool, int], tuple[int, dict]] = {}
+        self._plan_cache: dict[bool, tuple[int, QueryPlan]] = {}
+        # One distributed executor per mesh, held across queries so its
+        # shard-padded-group cache actually hits on repeat calls.
+        self._dist_executors: dict[Mesh, "_ex.GroupMajorDistributedExecutor"] = {}
+
+    def __len__(self) -> int:
+        return len(self.meta)
+
+    # ------------------------------------------------------------------
+    # Ingest (host-side append; device flush is deferred and incremental)
+    # ------------------------------------------------------------------
+
+    def add(self, table: str, key_column: str, value_column: str,
+            key_hashes: np.ndarray, values: np.ndarray,
+            value_is_discrete: bool | None = None, agg: str | None = None) -> None:
+        sk = build_sketch(
+            key_hashes, values, n=self.n, method=self.method, side="cand",
+            agg=agg or self.agg, value_is_discrete=value_is_discrete,
+        )
+        size = sk.size
+        # Presorted-join contract: valid keys strictly ascending.  A
+        # real exception (not assert): correctness of every subsequent
+        # query depends on it, including under python -O.
+        if not np.all(np.diff(sk.key_hashes[:size].astype(np.int64)) > 0):
+            raise ValueError(
+                "candidate sketch violates the sorted-at-ingest key invariant"
+            )
+        if self._cap_cols is None:
+            self._cap_cols = sk.capacity
+        elif sk.capacity != self._cap_cols:
+            raise ValueError(
+                f"sketch capacity {sk.capacity} != index capacity "
+                f"{self._cap_cols} (one n/method per index)"
+            )
+        self.meta.append(
+            CandidateMeta(table, key_column, value_column, sk.value_is_discrete)
+        )
+        vf, vu = sk.value_views()
+        self._keys.append(sk.key_hashes)
+        self._vals_f.append(vf)
+        self._vals_u.append(vu)
+        self._masks.append(sk.mask)
+        self._discrete.append(sk.value_is_discrete)
+        self._version += 1
+
+    def add_table(self, table, key_column: str) -> None:
+        """Index every (key, value) column pair of a Table."""
+        key_codes = table[key_column].key_codes()
+        for _, val_col in table.pairs(key_column):
+            col = table[val_col]
+            self.add(table.name, key_column, val_col, key_codes,
+                     col.value_array(), col.is_discrete)
+
+    @property
+    def ingest_stats(self) -> dict:
+        """Host->device transfer accounting: ``h2d_rows`` counts candidate
+        rows ever uploaded into the stacked store (a full re-stack on
+        every add would make this quadratic; incremental ingest keeps it
+        equal to the number of candidates), ``group_h2d_rows`` the same
+        for the group-major stores (per cached target dtype)."""
+        g_rows = sum(
+            st.h2d_rows
+            for state in self._groups.values()
+            for st in state.stores.values()
+        )
+        g_grows = sum(
+            st.grows
+            for state in self._groups.values()
+            for st in state.stores.values()
+        )
+        # A row is "pending" while it has reached NO device representation
+        # yet — a plan()-only service keeps the stacked store empty by
+        # design, which is not a backlog.
+        flushed = max(
+            [self._store.rows if self._store else 0]
+            + [state.flushed for state in self._groups.values()]
+        )
+        return {
+            "h2d_rows": self._store.h2d_rows if self._store else 0,
+            "store_grows": self._store.grows if self._store else 0,
+            "group_h2d_rows": g_rows,
+            "group_store_grows": g_grows,
+            "pending_rows": len(self.meta) - flushed,
+        }
+
+    # ------------------------------------------------------------------
+    # Device flush
+    # ------------------------------------------------------------------
+
+    def _host_row(self, i: int) -> dict[str, np.ndarray]:
+        keys_eff = np.where(self._masks[i], self._keys[i], _KEY_MAX)
+        return {
+            "keys": keys_eff.astype(np.uint32),
+            "vals_f": self._vals_f[i],
+            "vals_u": self._vals_u[i],
+            "mask": self._masks[i],
+        }
+
+    def _host_block(self, idx: list[int]) -> dict[str, np.ndarray]:
+        rows = [self._host_row(i) for i in idx]
+        return {
+            name: np.stack([r[name] for r in rows]).astype(_DTYPES[name])
+            for name in _DTYPES
+        }
+
+    def _flush_store(self) -> _DeviceStore:
+        if self._store is None:
+            self._store = _DeviceStore(self._cap_cols)
+        pending = list(range(self._store.rows, len(self.meta)))
+        if pending:
+            self._store.append_block(self._host_block(pending))
+        return self._store
+
+    def _flush_groups(self, y_discrete: bool) -> _GroupState:
+        state = self._groups.setdefault(bool(y_discrete), _GroupState())
+        C = len(self.meta)
+        if state.flushed < C:
+            by_eid: dict[int, list[int]] = {}
+            for i in range(state.flushed, C):
+                eid = estimator_id(self._discrete[i], y_discrete)
+                by_eid.setdefault(eid, []).append(i)
+            for eid, idx in by_eid.items():
+                store = state.stores.setdefault(
+                    eid, _DeviceStore(self._cap_cols)
+                )
+                store.append_block(self._host_block(idx))
+                state.index.setdefault(eid, []).extend(idx)
+            state.flushed = C
+        return state
+
+    # ------------------------------------------------------------------
+    # Batch layouts
+    # ------------------------------------------------------------------
+
+    def stacked(self, y_is_discrete: bool, pad_to_multiple: int = 1) -> dict:
+        """Candidate sketches as dense device arrays in original order.
+
+        Cached per (target dtype, padding) and maintained incrementally:
+        an ``add`` after ``stacked()`` uploads only the new rows on the
+        next call — never the whole corpus.  The candidate axis pads
+        (all-False-mask rows, ``est_id`` = MLE) to a multiple of
+        ``pad_to_multiple`` so it shards evenly over a mesh.  ``keys``
+        are in effective form (masked slots = 0xFFFFFFFF).
+        """
+        C = len(self.meta)
+        if C == 0:
+            raise ValueError("empty index")
+        cache_key = (bool(y_is_discrete), int(pad_to_multiple))
+        hit = self._stacked_cache.get(cache_key)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        store = self._flush_store()
+        padded_c = -(-C // pad_to_multiple) * pad_to_multiple
+        store.ensure_rows(padded_c)
+        est_ids = np.array(
+            [estimator_id(d, y_is_discrete) for d in self._discrete]
+            + [EST_MLE] * (padded_c - C),
+            dtype=np.int32,
+        )
+        out = {
+            **{name: store.arrays[name][:padded_c] for name in _DTYPES},
+            "est_id": jnp.asarray(est_ids),
+        }
+        self._stacked_cache[cache_key] = (self._version, out)
+        return out
+
+    def plan(self, y_is_discrete: bool, k: int = 3) -> QueryPlan:
+        """The executor-ready query plan for this corpus + target dtype.
+
+        Built from the incrementally-maintained group-major stores —
+        zero per-query gather/pack work — and cached until the next
+        ``add``.  Group buckets ride the store's power-of-two capacity
+        ladder; executors re-pad on the fly for non-power-of-two shard
+        counts.  (``k`` is accepted for signature stability; the plan
+        itself is estimator-layout only.)
+        """
+        C = len(self.meta)
+        if C == 0:
+            raise ValueError("empty index")
+        y_is_discrete = bool(y_is_discrete)
+        hit = self._plan_cache.get(y_is_discrete)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        state = self._flush_groups(y_is_discrete)
+        groups = []
+        for eid in sorted(state.stores):
+            store = state.stores[eid]
+            g = store.rows
+            index = np.concatenate([
+                np.asarray(state.index[eid], np.int64),
+                np.full(store.cap_rows - g, C, np.int64),
+            ])
+            live = jnp.asarray(np.arange(store.cap_rows) < g)
+            groups.append(GroupPlan(eid, store.arrays, index, live, g))
+        plan = QueryPlan(y_is_discrete, C, groups)
+        self._plan_cache[y_is_discrete] = (self._version, plan)
+        return plan
+
+    @staticmethod
+    def train_arrays(sk: Sketch) -> dict:
+        """Train-side sketch formatted for the scorers."""
+        vf, vu = sk.value_views()
+        return {
+            "keys": jnp.asarray(sk.key_hashes),
+            "vals_f": jnp.asarray(vf),
+            "vals_u": jnp.asarray(vu),
+            "mask": jnp.asarray(sk.mask),
+            "y_discrete": sk.value_is_discrete,
+        }
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+
+    def _distributed_executor(self, mesh: Mesh):
+        ex = self._dist_executors.get(mesh)
+        if ex is None:
+            ex = self._dist_executors[mesh] = \
+                _ex.GroupMajorDistributedExecutor(mesh)
+        return ex
+
+    def _rank(self, v, gi, js, top_k: int, min_join: int) -> list:
+        C = len(self.meta)
+        order = np.argsort(-np.where(js >= min_join, v, -np.inf))
+        out = []
+        for idx in order:
+            if gi[idx] >= C or js[idx] < min_join:
+                continue
+            out.append((self.meta[gi[idx]], float(v[idx]), int(js[idx])))
+            if len(out) >= top_k:
+                break
+        return out
+
+    def query(self, train_sketch: Sketch, top_k: int = 10,
+              mesh: Mesh | None = None, min_join: int = 8):
+        """Rank candidates by estimated MI with the train target.
+
+        Returns a list of (CandidateMeta, mi, join_size), best first.
+        """
+        train = self.train_arrays(train_sketch)
+        C = len(self.meta)
+        plan = self.plan(train_sketch.value_is_discrete)
+        if mesh is not None:
+            ex = self._distributed_executor(mesh)
+            # Oversample 4x so the min_join post-filter can discard
+            # high-MI/low-support candidates without starving the
+            # result list; the executor clamps per shard itself.
+            want = max(min(top_k * 4, C), 1)
+            v, gi, js = ex.topk(plan, train, want)[0]
+        else:
+            mi, jsz = _ex.PartitionedLocalExecutor().execute(plan, train)
+            v, gi, js = mi[0], np.arange(C), jsz[0]
+        return self._rank(v, gi, js, top_k, min_join)
+
+    def query_many(self, train_sketches: list[Sketch], top_k: int = 10,
+                   min_join: int = 8, mesh: Mesh | None = None,
+                   executor=None):
+        """Answer Q concurrent discovery queries in one executor pass.
+
+        All train sketches must share one target dtype (the estimator
+        layout is per-dtype; split mixed batches).  The default local
+        backend is the multi-query :class:`~repro.core.discovery.executors
+        .BatchedExecutor` — one compiled program per estimator group with
+        a leading Q axis — whose scores are bit-identical to Q looped
+        :meth:`query` calls.  Returns one result list per train sketch.
+        """
+        if not train_sketches:
+            return []
+        y_disc = {bool(sk.value_is_discrete) for sk in train_sketches}
+        if len(y_disc) != 1:
+            raise ValueError(
+                "query_many requires one target dtype per batch; split "
+                "discrete and continuous targets"
+            )
+        y_disc = y_disc.pop()
+        trains = _ex.stack_trains(
+            [self.train_arrays(sk) for sk in train_sketches]
+        )
+        plan = self.plan(y_disc)
+        C = len(self.meta)
+        if executor is None:
+            ex = (self._distributed_executor(mesh) if mesh is not None
+                  else _ex.BatchedExecutor())
+        else:
+            ex = _ex.get_executor(executor, mesh=mesh)
+        if mesh is not None:
+            want = max(min(top_k * 4, C), 1)
+            triples = ex.topk(plan, trains, want)
+        else:
+            mi, js = ex.execute(plan, trains)
+            triples = [
+                (mi[q], np.arange(C), js[q]) for q in range(mi.shape[0])
+            ]
+        return [
+            self._rank(v, gi, js, top_k, min_join) for v, gi, js in triples
+        ]

@@ -1,0 +1,174 @@
+"""Query planner: estimator partitioning, group-major candidate layout,
+and the shared power-of-two group-size bucket ladder.
+
+A discovery query's work is fixed the moment the corpus and the target
+dtype are known: which estimator scores each candidate, how candidates
+are grouped into homogeneous batches, and what padded shapes those
+batches compile to.  The planner captures all of it in a
+:class:`QueryPlan` — an immutable, device-resident description that any
+executor (local, multi-query batched, or distributed — see
+``executors.py``) can run without re-deriving layout per query.
+
+Layout decisions made here:
+
+  * **Estimator partitioning** — the candidate axis is split by
+    estimator id at plan time, so executors compile one homogeneous
+    program per group instead of a ``lax.switch`` per candidate (which
+    under ``vmap`` lowers to ``select_n`` and pays for all four
+    estimator branches on every candidate).
+  * **Group-major order** — each group's candidate rows live in their
+    own contiguous device arrays.  This is what lets the distributed
+    executor shard *within* a group, so every shard of every
+    ``shard_map`` program is homogeneous too (the seed ran the 4-way
+    switch inside ``shard_map``).
+  * **Bucket ladder** — group row counts are padded up a shared ladder
+    of power-of-two sizes (min :data:`MIN_BUCKET`), so a corpus that
+    grows from 37 to 52 candidates in a group recompiles nothing: both
+    sizes land in the 64-row bucket, and the compiled program cache is
+    keyed on bucket shape.  Dead rows carry an all-False mask (their
+    joins come out empty and every estimator maps an empty join to 0.0)
+    and are fenced out of top-k merges via :attr:`GroupPlan.live`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.join import effective_keys
+
+__all__ = [
+    "EST_MLE",
+    "EST_MIXED",
+    "EST_DC_XD",
+    "EST_DC_YD",
+    "estimator_id",
+    "partition_by_estimator",
+    "bucket_rows",
+    "MIN_BUCKET",
+    "GroupPlan",
+    "QueryPlan",
+    "pack_group",
+    "make_plan",
+]
+
+# Estimator ids used in per-candidate dispatch (stable across the repo).
+EST_MLE, EST_MIXED, EST_DC_XD, EST_DC_YD = 0, 1, 2, 3
+
+# Smallest bucket on the shared group-size ladder.  Every group pads to
+# the next power of two >= max(size, MIN_BUCKET); compiled scorers are
+# keyed on the bucket, so rapidly-changing corpora stop recompiling.
+MIN_BUCKET = 8
+
+
+def estimator_id(x_discrete: bool, y_discrete: bool) -> int:
+    """Estimator for a (candidate dtype, target dtype) pair."""
+    if x_discrete and y_discrete:
+        return EST_MLE
+    if not x_discrete and not y_discrete:
+        return EST_MIXED
+    return EST_DC_XD if x_discrete else EST_DC_YD
+
+
+def partition_by_estimator(est_id: np.ndarray) -> list[tuple[int, np.ndarray]]:
+    """Stable partition of the candidate axis by estimator id."""
+    est_id = np.asarray(est_id)
+    return [
+        (int(eid), np.flatnonzero(est_id == eid))
+        for eid in np.unique(est_id)
+    ]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def bucket_rows(n: int, multiple: int = 1) -> int:
+    """Shared ladder: next power of two >= max(n, MIN_BUCKET), rounded up
+    to ``multiple`` (a mesh shard count) when it does not already divide
+    — for power-of-two shard counts the ladder is unchanged."""
+    b = _next_pow2(max(n, MIN_BUCKET))
+    if multiple > 1 and b % multiple:
+        b = -(-b // multiple) * multiple
+    return b
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    """One homogeneous estimator group in group-major device layout.
+
+    ``arrays`` rows [0, size) hold live candidates (keys already in
+    effective form — see :func:`repro.core.join.effective_keys`); rows
+    [size, bucket) are dead (mask all-False, join empty, score 0.0).
+    ``index`` maps group row -> global candidate index; dead rows map to
+    the sentinel ``n_candidates`` so result filters drop them.
+    """
+
+    est_id: int
+    arrays: dict  # keys / vals_f / vals_u / mask, each (bucket, cap)
+    index: np.ndarray  # (bucket,) int64, dead rows -> n_candidates
+    live: jax.Array  # (bucket,) bool
+    size: int  # live rows
+
+    @property
+    def bucket(self) -> int:
+        return int(self.live.shape[0])
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    """Everything an executor needs to score one corpus layout."""
+
+    y_discrete: bool
+    n_candidates: int  # live candidates (original order length)
+    groups: list[GroupPlan] = field(default_factory=list)
+    pad_multiple: int = 1  # shard-count multiple baked into buckets
+
+
+def pack_group(
+    cands: dict, eid: int, idx: np.ndarray, n_candidates: int,
+    pad_multiple: int = 1,
+) -> GroupPlan:
+    """Gather one estimator group from stacked candidate arrays into its
+    group-major bucket (ad-hoc path for raw stacked dicts; the
+    device-resident index maintains group buckets incrementally and
+    never calls this per query)."""
+    g = len(idx)
+    bucket = bucket_rows(g, pad_multiple)
+    idx_pad = np.concatenate([idx, np.full(bucket - g, idx[0], idx.dtype)])
+    gathered = jnp.asarray(idx_pad)
+    live = jnp.asarray(np.arange(bucket) < g)
+    mask = jnp.asarray(cands["mask"])[gathered] & live[:, None]
+    arrays = {
+        "keys": effective_keys(jnp.asarray(cands["keys"])[gathered], mask),
+        "vals_f": jnp.asarray(cands["vals_f"])[gathered],
+        "vals_u": jnp.asarray(cands["vals_u"])[gathered],
+        "mask": mask,
+    }
+    index = np.concatenate(
+        [idx.astype(np.int64), np.full(bucket - g, n_candidates, np.int64)]
+    )
+    return GroupPlan(eid, arrays, index, live, g)
+
+
+def make_plan(
+    cands: dict, y_discrete: bool, pad_multiple: int = 1,
+    n_candidates: int | None = None,
+) -> QueryPlan:
+    """Plan from raw stacked candidate arrays (must carry ``est_id``).
+
+    Candidates whose mask is entirely False (stack padding) still join
+    empty and score 0.0, exactly as in the original order — the plan
+    keeps them so executors reproduce ``score_batch`` output shapes.
+    """
+    est = np.asarray(cands["est_id"])
+    C = int(est.shape[0]) if n_candidates is None else int(n_candidates)
+    groups = [
+        pack_group(cands, eid, idx, C, pad_multiple)
+        for eid, idx in partition_by_estimator(est[:C])
+    ]
+    return QueryPlan(bool(y_discrete), C, groups, pad_multiple)

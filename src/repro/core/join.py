@@ -39,6 +39,7 @@ from repro.core.sketch import Sketch
 
 __all__ = [
     "JoinSample",
+    "effective_keys",
     "sketch_join",
     "sketch_join_jax",
     "sketch_join_presorted",
@@ -46,6 +47,18 @@ __all__ = [
 ]
 
 _KEY_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def effective_keys(keys: jax.Array, mask: jax.Array) -> jax.Array:
+    """Remap masked-out key slots to 0xFFFFFFFF (the presorted-join fence).
+
+    Applied once at ingest (the device-resident index stores candidate
+    keys in this form) so the per-query, per-candidate ``where`` inside
+    :func:`sketch_join_presorted` disappears from the hot path.  The
+    transform is idempotent: applying it to already-effective keys is a
+    no-op, so packing paths may apply it unconditionally.
+    """
+    return jnp.where(mask, keys.astype(jnp.uint32), _KEY_MAX)
 
 
 @dataclass
@@ -126,6 +139,7 @@ def sketch_join_presorted(
     cand_mask: jax.Array,
     cand_values: tuple[jax.Array, ...],
     train_values: tuple[jax.Array, ...],
+    keys_effective: bool = False,
 ) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...], jax.Array]:
     """Single-searchsorted join for key-sorted candidate sketches.
 
@@ -143,11 +157,15 @@ def sketch_join_presorted(
     are gathered from the one set of match positions, replacing the seed
     path's two independent lexsort joins per candidate.
 
+    ``keys_effective=True`` asserts the caller already stored
+    :func:`effective_keys` output (the device-resident index does, at
+    ingest), skipping the per-query remap.
+
     Returns (gathered candidate views, masked train views, match mask).
     """
     tk = train_keys.astype(jnp.uint32)
     ck = cand_keys.astype(jnp.uint32)
-    ck_eff = jnp.where(cand_mask, ck, _KEY_MAX)
+    ck_eff = ck if keys_effective else jnp.where(cand_mask, ck, _KEY_MAX)
     pos = jnp.searchsorted(ck_eff, tk)
     pos_c = jnp.clip(pos, 0, ck.shape[0] - 1)
     matched = train_mask & (ck_eff[pos_c] == tk) & cand_mask[pos_c]

@@ -79,6 +79,22 @@ class Sketch:
     def size(self) -> int:
         return int(self.mask.sum())
 
+    def value_views(self) -> tuple[np.ndarray, np.ndarray]:
+        """The (float32, uint32) views of ``values`` the scorers consume.
+
+        Discrete values travel as exact uint32 codes plus a float32 cast
+        (for estimators that rank them); continuous values as float32
+        plus their bit-pattern reinterpretation — one pair of arrays per
+        sketch, shared by the train and candidate ingest paths.
+        """
+        if self.value_is_discrete:
+            vu = (self.values.astype(np.int64) & 0xFFFFFFFF).astype(np.uint32)
+            vf = self.values.astype(np.float32)
+        else:
+            vf = self.values.astype(np.float32)
+            vu = vf.view(np.uint32)
+        return vf, vu
+
     def _pad_to(self, capacity: int) -> "Sketch":
         pad = capacity - len(self.key_hashes)
         if pad < 0:

@@ -120,7 +120,7 @@ def _knn_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref,
 
 
 def _counts_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref, rc_ref,
-                   cnt_ref, cnt_scr, *, bm: int, bn: int, which: str):
+                   cnt_ref, cnt_scr, *, bm: int, bn: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
     nj = pl.num_programs(1)
@@ -140,17 +140,50 @@ def _counts_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref, rc_ref,
         return jnp.sum((vo & cond).astype(jnp.float32), axis=1, keepdims=True)
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
-    upd = jnp.where(lane == 1, _acc(dy < r), 0.0)
-    if which == "all":  # DC-KSG only consumes y_lt; skip the dx work
-        dx = jnp.abs(xc_ref[...] - xr_ref[...])
-        upd = (
-            upd
-            + jnp.where(lane == 0, _acc(dx < r), 0.0)
-            + jnp.where(lane == 2, _acc(dx <= 0.0), 0.0)
-            + jnp.where(lane == 3, _acc(dy <= 0.0), 0.0)
-            + jnp.where(lane == 4, _acc(jnp.maximum(dx, dy) <= 0.0), 0.0)
-        )
+    dx = jnp.abs(xc_ref[...] - xr_ref[...])
+    upd = (
+        jnp.where(lane == 1, _acc(dy < r), 0.0)
+        + jnp.where(lane == 0, _acc(dx < r), 0.0)
+        + jnp.where(lane == 2, _acc(dx <= 0.0), 0.0)
+        + jnp.where(lane == 3, _acc(dy <= 0.0), 0.0)
+        + jnp.where(lane == 4, _acc(jnp.maximum(dx, dy) <= 0.0), 0.0)
+    )
     cnt_scr[...] = cnt_scr[...] + upd
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        cnt_ref[...] = cnt_scr[...]
+
+
+def _counts_kernel_y(yc_ref, yr_ref, mc_ref, mr_ref, rc_ref,
+                     cnt_ref, cnt_scr, *, bm: int, bn: int):
+    """y-only ball counts (lane 1 == #|dy| < r_i; other lanes stay 0).
+
+    A dedicated ``pallas_call`` signature without the x operands: the
+    DC-KSG second pass never reads x, so its column/row tiles are not
+    DMA'd into VMEM at all (the previous single kernel still streamed
+    them and merely skipped the arithmetic).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    dy = jnp.abs(yc_ref[...] - yr_ref[...])  # (bm, bn)
+    valid = (mc_ref[...] > 0) & (mr_ref[...] > 0)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    vo = valid & (rows != cols)
+    r = rc_ref[...]  # (bm, 1) per-row radius
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    hit = jnp.sum(
+        (vo & (dy < r)).astype(jnp.float32), axis=1, keepdims=True
+    )
+    cnt_scr[...] = cnt_scr[...] + jnp.where(lane == 1, hit, 0.0)
 
     @pl.when(j == nj - 1)
     def _finalize():
@@ -225,23 +258,21 @@ def ball_counts_padded(
 
     Returns cnt (P, LANES) float32 with lanes 0..4 holding, per row i
     over valid j ≠ i:  #|dx|<r_i, #|dy|<r_i, #dx==0, #dy==0, #joint==0.
-    ``which="y"`` computes only lane 1 (the others stay zero), skipping
-    every dx tile — the DC-KSG second pass needs nothing else.
+    ``which="y"`` computes only lane 1 (the others stay zero) through a
+    dedicated x-free ``pallas_call`` signature, so the x tiles are never
+    DMA'd — the DC-KSG second pass needs nothing else.
     """
     P = x.shape[0]
     assert P % block == 0, (P, block)
     grid = (P // block, P // block)
-    xc, xr = x.reshape(P, 1), x.reshape(1, P)
     yc, yr = y.reshape(P, 1), y.reshape(1, P)
     mc = mask.astype(jnp.int32).reshape(P, 1)
     mr = mask.astype(jnp.int32).reshape(1, P)
     rc = r.reshape(P, 1)
     col, row = _row_col_specs(block)
     out = pl.BlockSpec((block, LANES), lambda i, j: (i, 0))
-    return pl.pallas_call(
-        functools.partial(_counts_kernel, bm=block, bn=block, which=which),
+    common = dict(
         grid=grid,
-        in_specs=[col, row, col, row, col, row, col],
         out_specs=out,
         out_shape=jax.ShapeDtypeStruct((P, LANES), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block, LANES), jnp.float32)],
@@ -249,4 +280,16 @@ def ball_counts_padded(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
+    )
+    if which == "y":
+        return pl.pallas_call(
+            functools.partial(_counts_kernel_y, bm=block, bn=block),
+            in_specs=[col, row, col, row, col],
+            **common,
+        )(yc, yr, mc, mr, rc)
+    xc, xr = x.reshape(P, 1), x.reshape(1, P)
+    return pl.pallas_call(
+        functools.partial(_counts_kernel, bm=block, bn=block),
+        in_specs=[col, row, col, row, col, row, col],
+        **common,
     )(xc, xr, yc, yr, mc, mr, rc)

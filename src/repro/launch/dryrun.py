@@ -347,7 +347,12 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
             mem_report = {"error": str(e)}
 
         try:
-            cost = dict(compiled.cost_analysis())
+            # jax <= 0.4.x returns a single-element list of dicts;
+            # newer releases return the dict directly.
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            cost = dict(ca)
             cost_report = {k: float(v) for k, v in cost.items()
                            if isinstance(v, (int, float)) and (
                                "flops" in k or "bytes" in k or k == "utilization")}

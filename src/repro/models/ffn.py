@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.common import dense_init, linear, shard
+from repro.parallel.compat import shard_map
 from repro.parallel.sharding import current_mesh
 
 __all__ = ["dense_ffn", "moe_ffn"]
@@ -159,14 +160,14 @@ class moe_ffn:
                 )
                 return jax.lax.psum(out, "model")
 
-            out = jax.shard_map(
+            out = shard_map(
                 body, mesh=mesh,
                 in_specs=(P(("pod", "data") if "pod" in mesh.shape else "data"),
                           P(("pod", "data") if "pod" in mesh.shape else "data"),
                           P(("pod", "data") if "pod" in mesh.shape else "data"),
                           P("model"), P("model"), P("model")),
                 out_specs=P(("pod", "data") if "pod" in mesh.shape else "data"),
-                check_vma=False,
+                check=False,
             )(x_flat, top_p, top_i,
               p["experts"]["w_gate"], p["experts"]["w_up"],
               p["experts"]["w_down"])

@@ -1,0 +1,77 @@
+"""Version-compatibility shims for the jax distribution APIs.
+
+The repo targets a range of jax releases whose SPMD surface moved twice:
+
+  * ``shard_map`` migrated from ``jax.experimental.shard_map`` to the
+    top-level ``jax.shard_map`` export, and its replication-check kwarg
+    was renamed ``check_rep`` -> ``check_vma`` independently of the
+    import location — resolve both by signature, not version string.
+  * ``jax.sharding.AbstractMesh`` changed its constructor from a tuple
+    of ``(name, size)`` pairs to parallel ``(sizes, names)`` tuples.
+
+Every shard_map call site in the repo (decode attention, expert-parallel
+MoE, the discovery executors) goes through :func:`shard_map` so the
+version dance lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= ~0.5: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in _PARAMS
+    else ("check_rep" if "check_rep" in _PARAMS else None)
+)
+
+__all__ = ["shard_map", "abstract_mesh", "axis_size"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False,
+              axis_names: set[str] | None = None):
+    """``jax.shard_map`` across jax versions (import location + the
+    check_rep/check_vma kwarg rename).
+
+    ``axis_names`` requests *partial* manual sharding (only those axes
+    become manual; the rest stay automatic/GSPMD).  Newer jax spells it
+    ``axis_names``; older jax spells the complement ``auto`` — translate
+    by signature.
+    """
+    kwargs = {_CHECK_KW: check} if _CHECK_KW is not None else {}
+    if axis_names is not None:
+        if "axis_names" in _PARAMS:
+            kwargs["axis_names"] = set(axis_names)
+        else:
+            kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` for jax versions that predate it (the psum
+    of 1 over the axis is the portable spelling)."""
+    import jax.lax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``jax.sharding.AbstractMesh`` across the constructor change from
+    ``((name, size), ...)`` pairs to ``(sizes, names)`` tuples."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes))
+        )

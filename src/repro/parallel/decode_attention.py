@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import shard_map
 from repro.parallel.sharding import current_mesh
 
 __all__ = ["decode_attention"]
@@ -103,20 +104,23 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     S_l = S // seq_div
 
     def body(q_l, k_l, v_l, pos_l):
+        # Axis sizes come from the (static) mesh shape: jax.lax.axis_size
+        # only exists on newer jax, and the sizes are compile-time
+        # constants here anyway.
         idx = jnp.int32(0)
         for a in seq_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         return _local_decode(
             q_l, k_l, v_l, pos_l[0], scale,
             global_offset=idx * S_l, axis_names=seq_axes,
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, sspec, None, None),
                   P(bspec, sspec, None, None), P(None)),
         out_specs=P(bspec, None, None),
-        check_vma=False,
+        check=False,
     )
     return fn(q, k_cache, v_cache, jnp.asarray(pos, jnp.int32).reshape(1))

@@ -29,6 +29,7 @@ from repro.train.optimizer import (
     Schedule,
     clip_by_global_norm,
 )
+from repro.parallel.compat import axis_size, shard_map
 from repro.parallel.sharding import current_mesh
 
 __all__ = ["TrainState", "init_train_state", "build_train_step"]
@@ -82,7 +83,7 @@ def _compress_psum_pod(grads, err_fb):
         # int32 psum of codes + psum of scales — ~1 B/elem on DCI.
         q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
         s_sum = jax.lax.psum(safe, "pod")
-        npods = jax.lax.axis_size("pod")
+        npods = axis_size("pod")
         avg = q_sum.astype(jnp.float32) * (s_sum / npods) / npods
         return avg, new_e
 
@@ -183,13 +184,13 @@ def build_train_step(
             return grads, new_err, metrics
 
         batch_spec = jax.tree_util.tree_map(lambda _: P("pod"), batch)
-        grads, new_err, metrics = jax.shard_map(
+        grads, new_err, metrics = shard_map(
             pod_local,
             mesh=mesh,
             in_specs=(P(), P(), batch_spec),
             out_specs=(P(), P(), P()),
             axis_names={"pod"},  # data/model stay automatic (GSPMD)
-            check_vma=False,
+            check=False,
         )(state.params, state.err_fb, batch)
         return _finish(state, grads, metrics, new_err)
 

@@ -1,0 +1,384 @@
+"""Serving-architecture tests: planner buckets, executors, multi-query
+batching, and incremental ingest-while-serving.
+
+The two load-bearing properties (ISSUE 2 acceptance):
+
+  (a) ``query_many`` over Q train sketches is bit-identical to Q looped
+      ``query`` calls (the batched executor's vmap lanes are
+      data-parallel), and
+  (b) incremental ``add`` after ``stacked()`` equals a from-scratch
+      rebuild of the index — and moves only the new rows host->device
+      (no full re-stack), asserted via the ingest transfer counters.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from repro.core import hashing
+from repro.core.discovery import (
+    BatchedExecutor,
+    GroupMajorDistributedExecutor,
+    PartitionedLocalExecutor,
+    SketchIndex,
+    bucket_rows,
+    score_batch_partitioned,
+    stack_trains,
+)
+from repro.core.discovery.planner import MIN_BUCKET
+from repro.core.sketch import build_sketch
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RNG = np.random.default_rng(11)
+N_ROWS = 2000
+SK_N = 64
+
+
+def _keys(seed=9):
+    raw = np.arange(N_ROWS, dtype=np.uint32)
+    return np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+
+
+def _mixed_adds(keys, y, rng):
+    """Candidate set spanning all four estimator groups."""
+    return [
+        ("cont_strong", keys,
+         (2 * y + 0.05 * rng.normal(size=N_ROWS)).astype(np.float32), False),
+        ("cont_noise", keys, rng.normal(size=N_ROWS).astype(np.float32), False),
+        ("cont_weak", keys,
+         (y + 2.0 * rng.normal(size=N_ROWS)).astype(np.float32), False),
+        ("disc_dep", keys, (y > 0).astype(np.int64), True),
+        ("disc_noise", keys, rng.integers(0, 6, size=N_ROWS), True),
+    ]
+
+
+def _build(adds):
+    index = SketchIndex(n=SK_N, method="tupsk")
+    for name, k, v, disc in adds:
+        index.add(name, "k", "v", k, v, disc)
+    return index
+
+
+def _train(keys, y, y_discrete=False):
+    return build_sketch(keys, y, n=SK_N, method="tupsk", side="train",
+                        value_is_discrete=y_discrete)
+
+
+def _trains(keys, y, q, y_discrete=False):
+    rng = np.random.default_rng(100 + q)
+    out = []
+    for i in range(q):
+        yq = (y + (0.1 + 0.3 * i) * rng.normal(size=N_ROWS)).astype(np.float32)
+        if y_discrete:
+            out.append(_train(keys, (yq > 0).astype(np.int64), True))
+        else:
+            out.append(_train(keys, yq, False))
+    return out
+
+
+class TestPlannerBuckets:
+    def test_ladder_is_pow2_and_shared(self):
+        assert bucket_rows(1) == MIN_BUCKET
+        assert bucket_rows(MIN_BUCKET) == MIN_BUCKET
+        # every size in (b/2, b] lands on the same bucket b
+        for g in (5, 8, 9, 13, 16, 17, 100):
+            b = bucket_rows(g)
+            assert b >= max(g, MIN_BUCKET)
+            assert b & (b - 1) == 0  # power of two
+            assert bucket_rows(b) == b
+        # shard-count multiples are respected
+        assert bucket_rows(10, multiple=4) % 4 == 0
+        assert bucket_rows(10, multiple=3) % 3 == 0
+
+    def test_group_shapes_stable_across_adds_within_bucket(self):
+        """Adding a candidate inside the current bucket must not change
+        any compiled-program input shape (no recompiles)."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(0)))
+        p1 = index.plan(False)
+        shapes1 = {g.est_id: g.arrays["keys"].shape for g in p1.groups}
+        index.add("late", "k", "v", keys,
+                  RNG.normal(size=N_ROWS).astype(np.float32), False)
+        p2 = index.plan(False)
+        shapes2 = {g.est_id: g.arrays["keys"].shape for g in p2.groups}
+        assert shapes1 == shapes2  # 3 -> 4 continuous: same 8-row bucket
+
+    def test_plan_cached_until_add(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(0)))
+        p1 = index.plan(False)
+        assert index.plan(False) is p1
+        index.add("late", "k", "v", keys, y.copy(), False)
+        assert index.plan(False) is not p1
+
+
+class TestExecutorsAgree:
+    @pytest.mark.parametrize("y_discrete", [False, True])
+    def test_three_backends_identical(self, y_discrete):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(1)))
+        sks = _trains(keys, y, 3, y_discrete)
+        trains = stack_trains([index.train_arrays(sk) for sk in sks])
+        plan = index.plan(y_discrete)
+        mi_p, js_p = PartitionedLocalExecutor().execute(plan, trains)
+        mi_b, js_b = BatchedExecutor().execute(plan, trains)
+        np.testing.assert_array_equal(mi_p, mi_b)
+        np.testing.assert_array_equal(js_p, js_b)
+        mesh = jax.make_mesh((1,), ("data",))
+        mi_d, js_d = GroupMajorDistributedExecutor(mesh).execute(plan, trains)
+        np.testing.assert_array_equal(mi_p, mi_d)
+        np.testing.assert_array_equal(js_p, js_d)
+
+    def test_distributed_topk_matches_dense(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(1)))
+        sk = _train(keys, y)
+        trains = stack_trains([index.train_arrays(sk)])
+        plan = index.plan(False)
+        mesh = jax.make_mesh((1,), ("data",))
+        ex = GroupMajorDistributedExecutor(mesh)
+        mi, js = ex.execute(plan, trains)
+        v, gi, jsz = ex.topk(plan, trains, 3)[0]
+        best = np.argsort(-mi[0], kind="stable")[:3]
+        np.testing.assert_array_equal(np.sort(gi), np.sort(best))
+        np.testing.assert_array_equal(np.sort(v), np.sort(mi[0][best]))
+
+    def test_mixed_target_batch_rejected(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(1)))
+        sks = [_train(keys, y, False),
+               _train(keys, (y > 0).astype(np.int64), True)]
+        with pytest.raises(ValueError, match="target dtype"):
+            index.query_many(sks)
+
+
+class TestQueryManyBitIdentity:
+    """Acceptance (a): query_many == Q looped query calls, bitwise."""
+
+    @pytest.mark.parametrize("y_discrete", [False, True])
+    @pytest.mark.parametrize("q", [1, 4])
+    def test_query_many_equals_looped_query(self, y_discrete, q):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(2)))
+        sks = _trains(keys, y, q, y_discrete)
+        many = index.query_many(sks, top_k=5, min_join=4)
+        loop = [index.query(sk, top_k=5, min_join=4) for sk in sks]
+        assert len(many) == q
+        for res_m, res_l in zip(many, loop):
+            assert [(m.table, mi, js) for m, mi, js in res_m] == \
+                   [(m.table, mi, js) for m, mi, js in res_l]
+
+    def test_scores_bitwise_at_executor_level(self):
+        """The raw (Q, C) matrix rows equal single-query runs bit for
+        bit — stronger than result-list equality (no argsort slack)."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(3)))
+        sks = _trains(keys, y, 4)
+        trains = [index.train_arrays(sk) for sk in sks]
+        plan = index.plan(False)
+        mi_many, js_many = BatchedExecutor().execute(plan, stack_trains(trains))
+        for qi, t in enumerate(trains):
+            mi_one, js_one = PartitionedLocalExecutor().execute(plan, t)
+            np.testing.assert_array_equal(mi_many[qi], mi_one[0])
+            np.testing.assert_array_equal(js_many[qi], js_one[0])
+
+    @given(seed=st.integers(0, 2**16), q=st.integers(1, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_corpora(self, seed, q):
+        rng = np.random.default_rng(seed)
+        keys = _keys(seed % 7 + 1)
+        y = rng.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, rng))
+        sks = _trains(keys, y, q)
+        many = index.query_many(sks, top_k=4, min_join=2)
+        loop = [index.query(sk, top_k=4, min_join=2) for sk in sks]
+        for res_m, res_l in zip(many, loop):
+            assert [(m.table, mi, js) for m, mi, js in res_m] == \
+                   [(m.table, mi, js) for m, mi, js in res_l]
+
+
+class TestIncrementalIngest:
+    """Acceptance (b): add-after-stacked is incremental and exact."""
+
+    def test_add_after_stacked_moves_only_new_rows(self):
+        """Cache-identity: an add between two stacked() calls uploads
+        exactly one row — the device store is appended, never rebuilt."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(4)))
+        C = len(index)
+        first = index.stacked(False)
+        assert index.stacked(False) is first  # cached, no re-copy
+        assert index.ingest_stats["h2d_rows"] == C
+        index.add("late", "k", "v", keys, y.copy(), False)
+        fresh = index.stacked(False)
+        assert fresh is not first  # version bump -> new view
+        assert fresh["keys"].shape[0] == C + 1
+        # THE no-full-re-stack assertion: one new row crossed the bus,
+        # not C + 1 (the seed cleared the cache and re-uploaded all).
+        assert index.ingest_stats["h2d_rows"] == C + 1
+        assert index.ingest_stats["pending_rows"] == 0
+
+    def test_add_after_plan_appends_group_store(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(4)))
+        C = len(index)
+        index.plan(False)
+        assert index.ingest_stats["group_h2d_rows"] == C
+        index.add("late", "k", "v", keys, y.copy(), False)
+        index.plan(False)
+        assert index.ingest_stats["group_h2d_rows"] == C + 1
+
+    @pytest.mark.parametrize("y_discrete", [False, True])
+    def test_incremental_equals_rebuild(self, y_discrete):
+        """stacked() and query() after interleaved add/serve cycles match
+        a from-scratch index holding the same candidates."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        adds = _mixed_adds(keys, y, np.random.default_rng(5))
+        sk = _train(keys, (y > 0).astype(np.int64) if y_discrete else y,
+                    y_discrete)
+        index = _build(adds[:2])
+        index.query(sk, top_k=3, min_join=2)  # force flush mid-growth
+        index.stacked(y_discrete)
+        for name, _, v, disc in adds[2:]:
+            index.add(name, "k", "v", keys, v, disc)
+        rebuilt = _build(adds)
+        inc = index.stacked(y_discrete)
+        ref = rebuilt.stacked(y_discrete)
+        for name in ("keys", "vals_f", "vals_u", "mask", "est_id"):
+            np.testing.assert_array_equal(
+                np.asarray(inc[name]), np.asarray(ref[name]))
+        r_inc = index.query(sk, top_k=5, min_join=2)
+        r_ref = rebuilt.query(sk, top_k=5, min_join=2)
+        assert [(m.table, mi, js) for m, mi, js in r_inc] == \
+               [(m.table, mi, js) for m, mi, js in r_ref]
+
+    def test_capacity_doubling_preserves_rows(self):
+        """Grow past several capacity doublings; all rows intact."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(6)
+        index = SketchIndex(n=SK_N, method="tupsk")
+        index.add("c0", "k", "v", keys, y.copy(), False)
+        index.stacked(False)  # flush at 1 row (bucket MIN_BUCKET)
+        for i in range(1, 20):  # crosses 8 -> 16 -> 32
+            index.add(f"c{i}", "k", "v", keys,
+                      (y + i * rng.normal(size=N_ROWS)).astype(np.float32),
+                      False)
+        inc = index.stacked(False)
+        assert index.ingest_stats["store_grows"] >= 1
+        rebuilt = SketchIndex(n=SK_N, method="tupsk")
+        rng = np.random.default_rng(6)
+        rebuilt.add("c0", "k", "v", keys, y.copy(), False)
+        for i in range(1, 20):
+            rebuilt.add(f"c{i}", "k", "v", keys,
+                        (y + i * rng.normal(size=N_ROWS)).astype(np.float32),
+                        False)
+        ref = rebuilt.stacked(False)
+        for name in ("keys", "vals_f", "vals_u", "mask", "est_id"):
+            np.testing.assert_array_equal(
+                np.asarray(inc[name]), np.asarray(ref[name]))
+
+    @given(order=st.lists(st.integers(0, 4), min_size=2, max_size=5,
+                          unique=True))
+    @settings(max_examples=8, deadline=None)
+    def test_property_any_ingest_order(self, order):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        adds = _mixed_adds(keys, y, np.random.default_rng(7))
+        chosen = [adds[i] for i in order]
+        index = _build(chosen[:1])
+        index.stacked(False)
+        for a in chosen[1:]:
+            index.add(a[0], "k", "v", keys, a[2], a[3])
+        rebuilt = _build(chosen)
+        inc, ref = index.stacked(False), rebuilt.stacked(False)
+        for name in ("keys", "vals_f", "vals_u", "mask", "est_id"):
+            np.testing.assert_array_equal(
+                np.asarray(inc[name]), np.asarray(ref[name]))
+
+
+class TestBackCompatScorers:
+    def test_score_batch_partitioned_on_effective_stacked(self):
+        """The functional wrapper still matches the switch scorer on the
+        (now effective-key) stacked arrays."""
+        from repro.core.discovery import score_batch
+
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _build(_mixed_adds(keys, y, np.random.default_rng(8)))
+        train = index.train_arrays(_train(keys, y))
+        cands = index.stacked(False)
+        mi_s, js_s = score_batch(train, cands)
+        mi_p, js_p = score_batch_partitioned(train, cands)
+        np.testing.assert_array_equal(np.asarray(mi_s), np.asarray(mi_p))
+        np.testing.assert_array_equal(np.asarray(js_s), np.asarray(js_p))
+
+
+class TestMultiShardParity:
+    """Group-major distributed scoring on 4 fake CPU devices equals the
+    local executor (subprocess — device count is fixed at jax init)."""
+
+    SCRIPT = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax
+        from repro.core import hashing
+        from repro.core.discovery import (
+            GroupMajorDistributedExecutor, PartitionedLocalExecutor,
+            SketchIndex, stack_trains,
+        )
+        from repro.core.sketch import build_sketch
+
+        N = 1200
+        rng = np.random.default_rng(3)
+        keys = np.asarray(hashing.murmur3_32_np(
+            np.arange(N, dtype=np.uint32), seed=np.uint32(5)))
+        y = rng.normal(size=N).astype(np.float32)
+        index = SketchIndex(n=64, method="tupsk")
+        for i in range(6):
+            index.add(f"c{i}", "k", "v", keys,
+                      (y + i * rng.normal(size=N)).astype(np.float32), False)
+        index.add("d", "k", "v", keys, (y > 0).astype(np.int64), True)
+        sk = build_sketch(keys, y, n=64, method="tupsk", side="train",
+                          value_is_discrete=False)
+        trains = stack_trains([index.train_arrays(sk)])
+        plan = index.plan(False)
+        mesh = jax.make_mesh((4,), ("data",))
+        ex = GroupMajorDistributedExecutor(mesh)
+        mi_d, js_d = ex.execute(plan, trains)
+        mi_l, js_l = PartitionedLocalExecutor().execute(plan, trains)
+        np.testing.assert_array_equal(mi_d, mi_l)
+        np.testing.assert_array_equal(js_d, js_l)
+        v, gi, js = ex.topk(plan, trains, 3)[0]
+        best = np.argsort(-mi_l[0], kind="stable")[:3]
+        np.testing.assert_array_equal(np.sort(gi), np.sort(best))
+        res = index.query(sk, top_k=3, mesh=mesh, min_join=4)
+        assert res[0][0].table == "c0", res
+        print("SHARD-PARITY-OK")
+    """)
+
+    def test_four_shard_parity(self):
+        out = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, timeout=420,
+            env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")),
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "SHARD-PARITY-OK" in out.stdout

@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.parallel import sharding as SH
+from repro.parallel.compat import abstract_mesh
 from repro.parallel.decode_attention import decode_attention, _local_decode
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -44,7 +45,7 @@ class TestParamSpecs:
     def test_divisibility_validation(self):
         mesh = jax.make_mesh((1,), ("model",))
         # fake a 16-way axis via abstract mesh is awkward; test the logic
-        mesh16 = jax.sharding.AbstractMesh((16,), ("model",))
+        mesh16 = abstract_mesh((16,), ("model",))
         spec = SH.validate_spec(P("model"), (8,), mesh16)
         assert spec == P(None)  # 8 not divisible by 16 -> replicate
         spec = SH.validate_spec(P("model"), (32,), mesh16)
@@ -53,7 +54,7 @@ class TestParamSpecs:
     def test_embedding_padded_vocab_shards(self):
         cfg = M.get_config("internvl2-26b")  # vocab 92553 (odd)
         assert cfg.padded_vocab_size % 256 == 0
-        mesh16 = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh16 = abstract_mesh((16, 16), ("data", "model"))
         spec = SH.validate_spec(
             P("model", "data"), (cfg.padded_vocab_size, cfg.d_model), mesh16
         )
