@@ -1,22 +1,28 @@
 """Discovery service example: index a repository, answer top-k MI
 queries — including a NON-monotone relationship that correlation-based
 discovery (the paper's Section I motivation) cannot see — then exercise
-the two serving-architecture scenarios the layered engine exists for:
+the serving-architecture scenarios the layered engine exists for:
 
   1. **Concurrent queries**: many users ask at once; ``query_many``
      scores the whole batch through one compiled program per estimator
      group (bit-identical to looping ``query``).
   2. **Live ingest**: new tables arrive while the service is answering;
      ``add`` appends into the device-resident index (amortized O(1) —
-     only the new rows cross the host->device bus) and the very next
-     query sees them.
+     only the new rows cross the host->device bus, in place where the
+     backend honors buffer donation) and the very next query sees them.
+  3. **The service front-end**: a mixed, bursty queue — discrete and
+     continuous targets interleaved, arbitrary batch sizes, ingest in
+     between — submitted to ``DiscoveryService``, which admission-
+     controls it (per-estimator-signature splitting, pow-2 Q-axis
+     bucketing, dispatch-before-transfer) and still answers every query
+     bit-identically to a solo ``query()`` call.
 
     PYTHONPATH=src python examples/discovery_service.py
 """
 
 import numpy as np
 
-from repro.core.discovery import SketchIndex
+from repro.core.discovery import DiscoveryService, SketchIndex
 from repro.core.sketch import build_sketch
 from repro.data.tables import Table
 
@@ -112,3 +118,58 @@ for meta, mi, join in res:
     marker = "  <- just ingested" if meta.table == "fresh_signal" else ""
     print(f"  MI={mi:5.2f}  join={join:4d}   "
           f"{meta.table}.{meta.value_column}{marker}")
+
+# ---------------------------------------------------------------------------
+# Scenario 3: the admission-controlled service front-end.  A bursty
+# *mixed* queue — continuous and discrete targets interleaved, a shape
+# query_many rejects outright — goes through DiscoveryService.submit:
+# split per estimator signature, padded up the pow-2 Q-bucket ladder,
+# every admitted bucket dispatched before the first transfer.  Answers
+# come back in arrival order, bit-identical to solo query() calls, and
+# ingest keeps landing between submits.
+# ---------------------------------------------------------------------------
+
+service = DiscoveryService(index=index)  # wrap the live corpus
+
+def discrete_train_for(target):
+    return build_sketch(base["k"].key_codes(), target, n=512,
+                        method="tupsk", side="train",
+                        value_is_discrete=True)
+
+mixed_queue = []
+for q in range(7):
+    noisy = y + 0.3 * (q + 1) * rng.normal(size=N)
+    if q % 3 == 2:  # every third user asks about a categorical target
+        mixed_queue.append(discrete_train_for(np.where(noisy > 0, 1, 0)))
+    else:
+        mixed_queue.append(train_sketch_for(noisy.astype(np.float32)))
+
+answers = service.submit(mixed_queue, top_k=3)
+print(f"\nDiscoveryService.submit: {len(mixed_queue)} mixed-dtype queries "
+      "admitted as homogeneous Q-bucketed batches:")
+for q, res in enumerate(answers):
+    kind = "disc" if mixed_queue[q].value_is_discrete else "cont"
+    tops = ", ".join(f"{m.table}({mi:.2f})" for m, mi, _ in res[:2])
+    print(f"  user {q} ({kind}): {tops}")
+
+solo = index.query(mixed_queue[2], top_k=3)
+assert [(m.table, mi) for m, mi, _ in answers[2]] == \
+       [(m.table, mi) for m, mi, _ in solo]
+print("  (user 2's admitted answer == solo query, bit for bit)")
+
+# one more table lands mid-traffic; the next submit serves it
+service.add_table(
+    Table("hot_update", {"k": keys,
+                         "v": (0.7 * y + 0.2 * rng.normal(size=N))
+                         .astype(np.float32)}), "k")
+answers2 = service.submit(mixed_queue[:3], top_k=3)
+stats = service.stats()
+adm, cache = stats["admission"], stats["plan_cache"]
+print(f"\nservice stats after {adm['submits']} submits: "
+      f"{adm['submitted']} queries -> {adm['batches']} batches "
+      f"({adm['signatures']} estimator signatures, "
+      f"Q-buckets {adm['q_buckets']}, {adm['padded_lanes']} padded lanes); "
+      f"plan cache {cache['hits']} hits / {cache['misses']} misses; "
+      f"ingest in-place flushes: "
+      f"{stats['ingest']['inplace_flushes']} "
+      f"(copied: {stats['ingest']['copied_flushes']})")

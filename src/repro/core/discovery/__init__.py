@@ -29,10 +29,19 @@ three layers, one module each:
     ``shard_map``, so every shard runs homogeneous programs and the
     top-k merge moves O(groups · shards · k) scalars).
 
-Entry points: :meth:`SketchIndex.query` (single query — exact signature
+On top of the three layers sits the serving front-end,
+:mod:`~repro.core.discovery.service`: :class:`DiscoveryService` runs
+admission control over arbitrary mixed/bursty query queues — per-
+estimator-signature batch splitting, pow-two Q-axis bucketing with a
+(corpus version, dtype, Q-bucket) plan cache, and dispatch-before-
+transfer scheduling across the admitted buckets — while ``add`` ingests
+live through the index underneath.
+
+Entry points: :meth:`DiscoveryService.submit` / ``.add`` (the service
+surface), :meth:`SketchIndex.query` (single query — exact signature
 and results of the pre-layered engine), :meth:`SketchIndex.query_many`
-(concurrent query batch), and the functional back-compat wrappers
-(:func:`score_batch`, :func:`score_batch_partitioned`,
+(concurrent single-dtype query batch), and the functional back-compat
+wrappers (:func:`score_batch`, :func:`score_batch_partitioned`,
 :func:`distributed_topk`) for callers holding raw stacked arrays.
 
 The KSG-family estimators underneath stream kNN statistics through the
@@ -47,40 +56,59 @@ from repro.core.discovery.executors import (
     PartitionedLocalExecutor,
     _score_group,
     _shard_topk_plan,
+    compile_count,
     distributed_topk,
     get_executor,
+    pad_trains_q,
     score_batch,
     score_batch_partitioned,
     score_batch_reference,
     stack_trains,
+    stack_trains_host,
 )
 from repro.core.discovery.index import CandidateMeta, SketchIndex
 from repro.core.discovery.planner import (
+    MAX_Q_BUCKET,
     GroupPlan,
+    PlanCache,
     QueryPlan,
+    ServicePlan,
+    bucket_queries,
     bucket_rows,
     estimator_id,
     make_plan,
     pack_group,
     partition_by_estimator,
+    plan_signature,
 )
+from repro.core.discovery.service import AdmissionStats, DiscoveryService
 
 __all__ = [
     "CandidateMeta",
     "SketchIndex",
+    "DiscoveryService",
+    "AdmissionStats",
     "QueryPlan",
     "GroupPlan",
+    "ServicePlan",
+    "PlanCache",
     "make_plan",
     "pack_group",
     "partition_by_estimator",
     "estimator_id",
+    "plan_signature",
     "bucket_rows",
+    "bucket_queries",
+    "MAX_Q_BUCKET",
     "Executor",
     "PartitionedLocalExecutor",
     "BatchedExecutor",
     "GroupMajorDistributedExecutor",
     "get_executor",
     "stack_trains",
+    "stack_trains_host",
+    "pad_trains_q",
+    "compile_count",
     "score_batch",
     "score_batch_partitioned",
     "score_batch_reference",

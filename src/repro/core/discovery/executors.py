@@ -15,14 +15,31 @@ behind one ``execute(plan, trains)`` interface; all return dense
     train sketches, scoring Q concurrent queries against the same cached
     candidate arrays.  Bit-identical to Q single-query runs (vmap lanes
     are data-parallel); amortizes dispatch, join layout, and transfer
-    overhead over the whole query batch.
+    overhead over the whole query batch.  Supports *padded-Q* execution
+    (``q_bucket=``): the admission controller pads every batch up the
+    pow-two Q-ladder, the executor repeats a live query lane into the
+    dead lanes and slices them off at collect time — live results stay
+    bit-identical to the unpadded run while compile count stays bounded
+    under bursty traffic.
   * :class:`GroupMajorDistributedExecutor` — shards each group's
     candidate rows over the mesh 'data' axis.  Because candidates were
     partitioned by estimator *before* ``shard_map``, every shard of
     every program is homogeneous — the seed path ran the 4-way
     ``lax.switch`` scorer inside ``shard_map``, paying all branches on
     every shard.  ``topk`` keeps the collective payload at
-    O(groups · shards · k) via per-shard ``lax.top_k``.
+    O(groups · shards · k) via per-shard ``lax.top_k`` and merges the
+    per-shard/per-group winners **on device** — one ``lax.top_k`` over
+    the concatenated group results for all Q queries at once — so the
+    host sees O(Q · top_k) scalars per batch instead of
+    O(Q · groups · shards · k_shard) (Q-fold less merge traffic than
+    the per-query host merge it replaces).
+
+Both batch executors split execution into ``dispatch`` (enqueue every
+device program, return a pending handle) and the handle's ``collect``
+(first host sync).  A scheduler draining several admission buckets
+dispatches them all before collecting any — dispatch-before-transfer
+across buckets, the same discipline the partitioned executor applies
+across groups.
 
 The estimator-id -> estimator mapping lives in exactly one place
 (:func:`_estimate`); the legacy switch scorer (`score_batch`), the seed
@@ -61,11 +78,14 @@ __all__ = [
     "score_batch_partitioned",
     "distributed_topk",
     "stack_trains",
+    "stack_trains_host",
+    "pad_trains_q",
     "Executor",
     "PartitionedLocalExecutor",
     "BatchedExecutor",
     "GroupMajorDistributedExecutor",
     "get_executor",
+    "compile_count",
 ]
 
 
@@ -212,6 +232,106 @@ def stack_trains(trains: list[dict]) -> dict:
     return out
 
 
+def stack_trains_host(sketches: list) -> dict:
+    """Stack Q train ``Sketch`` objects into one leading-Q-axis device
+    dict with a *single* host->device upload per field.
+
+    The per-query path (``train_arrays`` + :func:`stack_trains`) pays
+    4 small uploads per query plus a device-side stack; a service
+    admitting a 32-query bucket turns that into 128 dispatches of bus
+    traffic before any scoring starts.  Stacking on the host first makes
+    it 4 uploads per *bucket*.  Values are bit-identical — the same
+    bytes, batched.
+    """
+    if not sketches:
+        raise ValueError("no train sketches")
+    y_disc = {bool(sk.value_is_discrete) for sk in sketches}
+    if len(y_disc) != 1:
+        raise ValueError(
+            "a train batch must share one target dtype "
+            "(got both discrete and continuous); split the batch"
+        )
+    views = [sk.value_views() for sk in sketches]
+    return {
+        "keys": jnp.asarray(np.stack([sk.key_hashes for sk in sketches])),
+        "vals_f": jnp.asarray(np.stack([vf for vf, _ in views])),
+        "vals_u": jnp.asarray(np.stack([vu for _, vu in views])),
+        "mask": jnp.asarray(np.stack([sk.mask for sk in sketches])),
+        "y_discrete": y_disc.pop(),
+    }
+
+
+def pad_trains_q(trains: dict, q_bucket: int) -> dict:
+    """Pad a stacked train dict up to ``q_bucket`` query lanes.
+
+    Dead lanes repeat lane 0 — real data, so every lane runs the exact
+    program a live lane runs (no special-cased masks, no NaN paths) and
+    the padded program is shape-wise indistinguishable from a full
+    bucket.  vmap lanes are data-parallel, so live lanes are
+    bit-identical to the unpadded run; callers slice ``[:Q]``.
+    """
+    Q = int(trains["keys"].shape[0])
+    if q_bucket < Q:
+        raise ValueError(f"q_bucket {q_bucket} < batch size {Q}")
+    if q_bucket == Q:
+        return trains
+    pad = q_bucket - Q
+    out = {
+        key: jnp.concatenate(
+            [trains[key],
+             jnp.broadcast_to(trains[key][:1],
+                              (pad,) + trains[key].shape[1:])]
+        )
+        for key in ("keys", "vals_f", "vals_u", "mask")
+    }
+    out["y_discrete"] = bool(trains.get("y_discrete", False))
+    return out
+
+
+def _cut_q(a, q_live: int):
+    """Drop padded query lanes *on device* so they never cross the bus
+    (row-slice before the host transfer; a no-op for unpadded runs)."""
+    return a if int(a.shape[0]) == q_live else a[:q_live]
+
+
+class _PendingScores:
+    """Dispatched-but-untransferred dense batch: ``collect`` is the
+    first host sync, returning (mi (Q, C), js (Q, C)) with padded query
+    lanes already sliced off."""
+
+    def __init__(self, plan: QueryPlan, blocks: list, q_live: int):
+        self._plan = plan
+        self._blocks = blocks
+        self._q_live = q_live
+
+    def collect(self):
+        q = self._q_live
+        blocks = [
+            (gp, _cut_q(mi, q), _cut_q(js, q))
+            for gp, mi, js in self._blocks
+        ]
+        return _scatter(self._plan, blocks, q)
+
+
+class _PendingTopk:
+    """Dispatched distributed top-k: device-merged (Q, k_final) triples
+    pending transfer.  ``collect`` syncs once and returns one
+    (values, global indices, join sizes) triple per live query."""
+
+    def __init__(self, vals, gidx, jsz, q_live: int):
+        self._vals = vals
+        self._gidx = gidx
+        self._jsz = jsz
+        self._q_live = q_live
+
+    def collect(self):
+        q = self._q_live
+        v = np.asarray(_cut_q(self._vals, q))
+        gi = np.asarray(_cut_q(self._gidx, q)).astype(np.int64)
+        js = np.asarray(_cut_q(self._jsz, q))
+        return [(v[i], gi[i], js[i]) for i in range(q)]
+
+
 def _as_stacked_trains(trains: dict | list[dict]) -> dict:
     if isinstance(trains, dict):
         if trains["keys"].ndim == 1:  # single query -> Q == 1
@@ -308,14 +428,25 @@ class PartitionedLocalExecutor(Executor):
 
 
 class BatchedExecutor(Executor):
-    """Multi-query batched scoring: one program per group, leading Q axis."""
+    """Multi-query batched scoring: one program per group, leading Q
+    axis, with optional admission-controlled Q padding."""
 
     def __init__(self, k: int = 3):
         self.k = k
 
-    def execute(self, plan, trains):
+    def dispatch(self, plan, trains, *, q_bucket: int | None = None):
+        """Enqueue every group program without syncing; returns a
+        pending handle whose ``collect`` performs the first transfer.
+
+        ``q_bucket`` pads the query axis up the pow-two ladder (see
+        :func:`pad_trains_q`); results for the live lanes are
+        bit-identical to the unpadded run and the dead lanes never
+        leave the device.
+        """
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
         t_args = (trains["keys"], trains["vals_f"],
                   trains["vals_u"], trains["mask"])
         blocks = [
@@ -323,7 +454,10 @@ class BatchedExecutor(Executor):
                                     est_id=gp.est_id, k=self.k))
             for gp in plan.groups
         ]
-        return _scatter(plan, blocks, Q)
+        return _PendingScores(plan, blocks, Q)
+
+    def execute(self, plan, trains, *, q_bucket: int | None = None):
+        return self.dispatch(plan, trains, q_bucket=q_bucket).collect()
 
 
 def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
@@ -376,7 +510,63 @@ def _make_group_shard_scorer(mesh: Mesh, est_id: int, k_shard: int, k: int):
         out_specs=(sh, sh) if k_shard == 0 else (sh, sh, sh),
         check=False,
     )
-    return jax.jit(fn)
+    jitted = jax.jit(fn)
+    _SHARD_SCORERS.append(jitted)
+    if len(_SHARD_SCORERS) > _SHARD_SCORER_REGISTRY_MAX:
+        del _SHARD_SCORERS[0]
+    return jitted
+
+
+# Every jitted shard scorer built, so compile_count() can see them (the
+# lru_cache above does not expose its values).  Scorers the lru_cache
+# evicts are deliberately retained up to the registry cap so
+# compile_count() stays monotone for delta assertions; past the cap the
+# oldest entry (and its compiled executables) is dropped to bound
+# memory — far beyond any workload the bounded-compile tests model.
+_SHARD_SCORERS: list = []
+_SHARD_SCORER_REGISTRY_MAX = 512
+
+
+def compile_count() -> int:
+    """Total compiled specializations across the discovery scorer
+    programs — the admission-control test hook.
+
+    Sums the jit-cache entry counts of every scorer entry point (each
+    entry is one traced+compiled (est_id, shape) specialization), so a
+    test can assert that a bursty mixed workload compiles at most
+    |estimator signatures| x |Q-buckets| x |group buckets| programs.
+    """
+    fns = [_score_group, _score_group_many, score_batch,
+           score_batch_reference, _globalize_rows, _merge_topk_device,
+           *_SHARD_SCORERS]
+    return sum(
+        f._cache_size() for f in fns if hasattr(f, "_cache_size")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k_shard", "shard_rows"))
+def _globalize_rows(i, index_dev, *, k_shard: int, shard_rows: int):
+    """Map per-shard top-k row indices (Q, shards·k_shard) to global
+    candidate indices on device: undo the shard-local numbering, then
+    gather through the group's row->candidate index (dead rows hit the
+    sentinel and are filtered by the ranking layer)."""
+    total = i.shape[1]
+    shard = jnp.arange(total, dtype=jnp.int32) // k_shard
+    return index_dev[i + (shard * shard_rows)[None, :]]
+
+
+@functools.partial(jax.jit, static_argnames=("k_final",))
+def _merge_topk_device(v, gi, js, *, k_final: int):
+    """Cross-group merge on device: one ``lax.top_k`` over the
+    concatenated per-group/per-shard winners, all Q rows at once.  The
+    host then transfers O(Q · k_final) scalars instead of the full
+    O(Q · groups · shards · k_shard) winner set."""
+    vals, pos = jax.lax.top_k(v, k_final)
+    return (
+        vals,
+        jnp.take_along_axis(gi, pos, axis=1),
+        jnp.take_along_axis(js, pos, axis=1),
+    )
 
 
 def _pad_group_to_shards(
@@ -417,34 +607,42 @@ class GroupMajorDistributedExecutor(Executor):
     def __init__(self, mesh: Mesh, k: int = 3):
         self.mesh = mesh
         self.k = k
-        # Shard-padded groups per plan: keyed by plan identity, holding a
-        # strong reference to the plan so the id cannot be recycled while
-        # the entry lives.  Repeat queries against a cached plan re-pad
-        # nothing (pad is a no-op device-array passthrough for buckets
-        # that already divide the shard count, a jnp.pad per group
-        # otherwise).
-        self._pad_cache: dict[int, tuple[QueryPlan, list[GroupPlan]]] = {}
+        # Shard-padded groups (+ device-resident row->candidate index
+        # arrays) per plan: keyed by plan identity, holding a strong
+        # reference to the plan so the id cannot be recycled while the
+        # entry lives.  Repeat queries against a cached plan re-pad and
+        # re-upload nothing (pad is a no-op device-array passthrough for
+        # buckets that already divide the shard count, a jnp.pad per
+        # group otherwise).
+        self._pad_cache: dict[
+            int, tuple[QueryPlan, list[GroupPlan], list[jax.Array]]
+        ] = {}
 
     def _groups(self, plan):
         n_shards = self.mesh.shape["data"]
         hit = self._pad_cache.get(id(plan))
         if hit is not None and hit[0] is plan:
-            return n_shards, hit[1]
+            return n_shards, hit[1], hit[2]
         groups = [
             _pad_group_to_shards(gp, n_shards, plan.n_candidates)
             for gp in plan.groups
         ]
+        # Device-resident row->candidate index per group, uploaded once
+        # per plan so the on-device merge never re-ships it per query.
+        gi_devs = [
+            jnp.asarray(gp.index.astype(np.int32)) for gp in groups
+        ]
         while len(self._pad_cache) >= self._PAD_CACHE_MAX:
             self._pad_cache.pop(next(iter(self._pad_cache)))
-        self._pad_cache[id(plan)] = (plan, groups)
-        return n_shards, groups
+        self._pad_cache[id(plan)] = (plan, groups, gi_devs)
+        return n_shards, groups, gi_devs
 
     def execute(self, plan, trains):
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         t_args = (trains["keys"], trains["vals_f"],
                   trains["vals_u"], trains["mask"])
-        _, groups = self._groups(plan)
+        _, groups, _ = self._groups(plan)
         blocks = []
         for gp in groups:
             fn = _make_group_shard_scorer(self.mesh, gp.est_id, 0, self.k)
@@ -452,36 +650,42 @@ class GroupMajorDistributedExecutor(Executor):
             blocks.append((gp, mi, js))
         return _scatter(plan, blocks, Q)
 
-    def topk(self, plan, trains, top_k):
+    def topk_dispatch(self, plan, trains, top_k: int,
+                      *, q_bucket: int | None = None):
+        """Enqueue per-group shard scorers and the on-device cross-group
+        merge; no host sync happens until the returned handle's
+        ``collect``.  One ``lax.top_k`` over the concatenated group
+        winners replaces the former per-query host merge loop, so merge
+        traffic no longer scales with Q."""
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
         t_args = (trains["keys"], trains["vals_f"],
                   trains["vals_u"], trains["mask"])
-        n_shards, groups = self._groups(plan)
-        pend = []
-        for gp in groups:
+        n_shards, groups, gi_devs = self._groups(plan)
+        vs, gis, jss = [], [], []
+        for gp, gi_dev in zip(groups, gi_devs):
             k_shard, _ = _shard_topk_plan(gp.bucket, n_shards, top_k)
             fn = _make_group_shard_scorer(self.mesh, gp.est_id, k_shard, self.k)
-            pend.append((gp, k_shard, fn(*t_args, *_cand_args(gp), gp.live)))
-        out = []
-        for q in range(Q):
-            vs, gis, jss = [], [], []
-            for gp, k_shard, (v, i, js) in pend:
-                shard_rows = gp.bucket // n_shards
-                v_q = np.asarray(v)[q].reshape(n_shards, k_shard)
-                i_q = np.asarray(i)[q].reshape(n_shards, k_shard)
-                js_q = np.asarray(js)[q].reshape(n_shards, k_shard)
-                rows = i_q + (np.arange(n_shards) * shard_rows)[:, None]
-                vs.append(v_q.reshape(-1))
-                gis.append(gp.index[rows.reshape(-1)])
-                jss.append(js_q.reshape(-1))
-            flat_v = np.concatenate(vs)
-            flat_gi = np.concatenate(gis)
-            flat_js = np.concatenate(jss)
-            k_final = min(top_k, len(flat_v))
-            order = np.argsort(-flat_v, kind="stable")[:k_final]
-            out.append((flat_v[order], flat_gi[order], flat_js[order]))
-        return out
+            v, i, js = fn(*t_args, *_cand_args(gp), gp.live)
+            vs.append(v)
+            gis.append(_globalize_rows(
+                i, gi_dev, k_shard=k_shard,
+                shard_rows=gp.bucket // n_shards,
+            ))
+            jss.append(js)
+        flat_v = jnp.concatenate(vs, axis=1)
+        flat_gi = jnp.concatenate(gis, axis=1)
+        flat_js = jnp.concatenate(jss, axis=1)
+        k_final = min(top_k, int(flat_v.shape[1]))
+        vals, gidx, jsz = _merge_topk_device(
+            flat_v, flat_gi, flat_js, k_final=k_final
+        )
+        return _PendingTopk(vals, gidx, jsz, Q)
+
+    def topk(self, plan, trains, top_k):
+        return self.topk_dispatch(plan, trains, top_k).collect()
 
 
 def get_executor(

@@ -17,9 +17,12 @@ flushes only the *pending* rows into preallocated device arrays via one
 ladder, so compiled-program shapes are reused) when full.  The seed
 behavior — clearing every cache on ``add`` and re-uploading the whole
 corpus on the next query — is gone: ingest-while-serving moves O(new
-rows) bytes host->device, amortized O(1) per added candidate.
-``ingest_stats`` counts exactly those transfers so tests can assert the
-absence of full re-stacks.
+rows) bytes host->device, amortized O(1) per added candidate.  The
+flush *donates* the store buffer to XLA, so on donation-honoring
+backends the append is in place — no cap-sized device clone per flush
+either.  ``ingest_stats`` counts exactly those transfers (plus the
+in-place/copied flush split) so tests can assert the absence of full
+re-stacks and of silent clones.
 
 Candidate keys are stored in *effective* form (masked slots fenced to
 0xFFFFFFFF at flush time — :func:`repro.core.join.effective_keys`), so
@@ -28,6 +31,7 @@ the per-query key remap disappears from every scorer.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -46,7 +50,19 @@ from repro.core.discovery.planner import (
 )
 from repro.core.sketch import Sketch, build_sketch
 
-__all__ = ["CandidateMeta", "SketchIndex"]
+__all__ = ["CandidateMeta", "SketchIndex", "topk_oversample"]
+
+
+def topk_oversample(top_k: int, n_candidates: int) -> int:
+    """Ranked-retrieval oversample for the distributed top-k path.
+
+    4x so the ``min_join`` post-filter can discard high-MI/low-support
+    candidates without starving the result list.  One definition shared
+    by ``query``, ``query_many`` and ``DiscoveryService.submit`` — the
+    bit-identity contract between those paths depends on them asking
+    the executor for the same ``k_final``.
+    """
+    return max(min(top_k * 4, n_candidates), 1)
 
 _KEY_MAX = np.uint32(0xFFFFFFFF)
 
@@ -59,10 +75,18 @@ class CandidateMeta:
     value_is_discrete: bool
 
 
-@jax.jit
-def _write_block(buf, block, row0):
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_block_donated(buf, block, row0):
     """Append ``block`` rows at ``row0`` (traced scalar — one compiled
-    program per block shape serves every offset)."""
+    program per block shape serves every offset).
+
+    The store buffer is *donated*: XLA aliases input to output, so on
+    backends that honor donation the flush updates the buffer in place
+    — zero-copy ingest — instead of cloning cap_rows x cap_cols bytes
+    per flush.  Whether donation actually happened is observable (the
+    donor array reports ``is_deleted()``), which is what the
+    ``ingest_stats`` in-place/copied flush counters report.
+    """
     return jax.lax.dynamic_update_slice(buf, block, (row0, 0))
 
 
@@ -90,6 +114,8 @@ class _DeviceStore:
         self.arrays: dict[str, jax.Array] = {}
         self.grows = 0
         self.h2d_rows = 0
+        self.inplace_flushes = 0
+        self.copied_flushes = 0
 
     def _pad_rows(self, name: str, arr: jax.Array, new_rows: int) -> jax.Array:
         pad = jnp.full(
@@ -118,15 +144,32 @@ class _DeviceStore:
         self.cap_rows = new_cap
 
     def append_block(self, block: dict[str, np.ndarray]) -> None:
+        """Flush ``block`` rows into the device store.
+
+        The store buffers are *donated* to the update program, so on
+        backends that honor donation the flush is in place — the only
+        bytes that move are the new rows' h2d upload, not a cap_rows-
+        sized device clone per flush.  Consequence: any stale external
+        reference to the pre-flush buffers (a plan captured before an
+        ``add``) is deleted by donation; all in-repo consumers re-fetch
+        through the version-checked caches, which is the supported path.
+        ``inplace_flushes``/``copied_flushes`` count what the backend
+        actually did (a donated donor array reports ``is_deleted()``).
+        """
         n_new = block["keys"].shape[0]
         if n_new == 0:
             return
         self.ensure_rows(self.rows + n_new)
         row0 = np.int32(self.rows)
+        old = self.arrays
         self.arrays = {
-            name: _write_block(a, jnp.asarray(block[name]), row0)
-            for name, a in self.arrays.items()
+            name: _write_block_donated(a, jnp.asarray(block[name]), row0)
+            for name, a in old.items()
         }
+        if all(a.is_deleted() for a in old.values()):
+            self.inplace_flushes += 1
+        else:
+            self.copied_flushes += 1
         self.rows += n_new
         self.h2d_rows += n_new
 
@@ -160,9 +203,13 @@ class SketchIndex:
         self._groups: dict[bool, _GroupState] = {}
         self._stacked_cache: dict[tuple[bool, int], tuple[int, dict]] = {}
         self._plan_cache: dict[bool, tuple[int, QueryPlan]] = {}
-        # One distributed executor per mesh, held across queries so its
-        # shard-padded-group cache actually hits on repeat calls.
-        self._dist_executors: dict[Mesh, "_ex.GroupMajorDistributedExecutor"] = {}
+        # One distributed executor per (mesh, k), held across queries so
+        # its shard-padded-group cache actually hits on repeat calls —
+        # and shared with the service front-end (same cache, same device
+        # arrays; see DiscoveryService).
+        self._dist_executors: dict[
+            tuple[Mesh, int], "_ex.GroupMajorDistributedExecutor"
+        ] = {}
 
     def __len__(self) -> int:
         return len(self.meta)
@@ -218,7 +265,18 @@ class SketchIndex:
         rows ever uploaded into the stacked store (a full re-stack on
         every add would make this quadratic; incremental ingest keeps it
         equal to the number of candidates), ``group_h2d_rows`` the same
-        for the group-major stores (per cached target dtype)."""
+        for the group-major stores (per cached target dtype).
+        ``inplace_flushes``/``copied_flushes`` (all stores pooled) count
+        whether each device flush updated the store buffer in place via
+        buffer donation or fell back to an XLA clone — on
+        donation-honoring backends every flush should land in the
+        in-place column, so a growing ``copied_flushes`` flags that
+        ingest is silently paying a cap_rows-sized copy per flush."""
+        all_stores = (
+            ([self._store] if self._store else [])
+            + [st for state in self._groups.values()
+               for st in state.stores.values()]
+        )
         g_rows = sum(
             st.h2d_rows
             for state in self._groups.values()
@@ -242,6 +300,8 @@ class SketchIndex:
             "group_h2d_rows": g_rows,
             "group_store_grows": g_grows,
             "pending_rows": len(self.meta) - flushed,
+            "inplace_flushes": sum(st.inplace_flushes for st in all_stores),
+            "copied_flushes": sum(st.copied_flushes for st in all_stores),
         }
 
     # ------------------------------------------------------------------
@@ -373,11 +433,11 @@ class SketchIndex:
     # Queries
     # ------------------------------------------------------------------
 
-    def _distributed_executor(self, mesh: Mesh):
-        ex = self._dist_executors.get(mesh)
+    def _distributed_executor(self, mesh: Mesh, k: int = 3):
+        ex = self._dist_executors.get((mesh, k))
         if ex is None:
-            ex = self._dist_executors[mesh] = \
-                _ex.GroupMajorDistributedExecutor(mesh)
+            ex = self._dist_executors[(mesh, k)] = \
+                _ex.GroupMajorDistributedExecutor(mesh, k=k)
         return ex
 
     def _rank(self, v, gi, js, top_k: int, min_join: int) -> list:
@@ -393,29 +453,31 @@ class SketchIndex:
         return out
 
     def query(self, train_sketch: Sketch, top_k: int = 10,
-              mesh: Mesh | None = None, min_join: int = 8):
+              mesh: Mesh | None = None, min_join: int = 8, k: int = 3):
         """Rank candidates by estimated MI with the train target.
 
-        Returns a list of (CandidateMeta, mi, join_size), best first.
+        ``k`` is the KSG-family neighbor count the estimators score
+        with (one compiled-program family per k).  Returns a list of
+        (CandidateMeta, mi, join_size), best first.
         """
         train = self.train_arrays(train_sketch)
         C = len(self.meta)
         plan = self.plan(train_sketch.value_is_discrete)
         if mesh is not None:
-            ex = self._distributed_executor(mesh)
-            # Oversample 4x so the min_join post-filter can discard
+            ex = self._distributed_executor(mesh, k)
+            # Oversample so the min_join post-filter can discard
             # high-MI/low-support candidates without starving the
             # result list; the executor clamps per shard itself.
-            want = max(min(top_k * 4, C), 1)
+            want = topk_oversample(top_k, C)
             v, gi, js = ex.topk(plan, train, want)[0]
         else:
-            mi, jsz = _ex.PartitionedLocalExecutor().execute(plan, train)
+            mi, jsz = _ex.PartitionedLocalExecutor(k=k).execute(plan, train)
             v, gi, js = mi[0], np.arange(C), jsz[0]
         return self._rank(v, gi, js, top_k, min_join)
 
     def query_many(self, train_sketches: list[Sketch], top_k: int = 10,
                    min_join: int = 8, mesh: Mesh | None = None,
-                   executor=None):
+                   executor=None, k: int = 3):
         """Answer Q concurrent discovery queries in one executor pass.
 
         All train sketches must share one target dtype (the estimator
@@ -434,18 +496,16 @@ class SketchIndex:
                 "discrete and continuous targets"
             )
         y_disc = y_disc.pop()
-        trains = _ex.stack_trains(
-            [self.train_arrays(sk) for sk in train_sketches]
-        )
+        trains = _ex.stack_trains_host(train_sketches)
         plan = self.plan(y_disc)
         C = len(self.meta)
         if executor is None:
-            ex = (self._distributed_executor(mesh) if mesh is not None
-                  else _ex.BatchedExecutor())
+            ex = (self._distributed_executor(mesh, k) if mesh is not None
+                  else _ex.BatchedExecutor(k=k))
         else:
-            ex = _ex.get_executor(executor, mesh=mesh)
+            ex = _ex.get_executor(executor, mesh=mesh, k=k)
         if mesh is not None:
-            want = max(min(top_k * 4, C), 1)
+            want = topk_oversample(top_k, C)
             triples = ex.topk(plan, trains, want)
         else:
             mi, js = ex.execute(plan, trains)

@@ -28,6 +28,22 @@ Layout decisions made here:
     keyed on bucket shape.  Dead rows carry an all-False mask (their
     joins come out empty and every estimator maps an empty join to 0.0)
     and are fenced out of top-k merges via :attr:`GroupPlan.live`.
+  * **Q-axis ladder** — the same pow-two discipline applies to the
+    *query* axis of a multi-query batch (:func:`bucket_queries`): an
+    admission controller pads every batch's Q up the ladder, so an
+    arbitrary bursty queue (3 queries, then 9, then 40, ...) compiles at
+    most one program per (estimator signature, Q-bucket, group bucket)
+    instead of one per observed batch size.  Padded query lanes repeat a
+    live lane and are sliced off before results leave the executor;
+    vmap lanes are data-parallel, so live lanes are bit-identical to an
+    unpadded run.
+
+The admission-control bookkeeping on top of the ladders lives in
+:class:`PlanCache`: one entry per (corpus version, target dtype,
+Q-bucket), each pinning the :class:`QueryPlan` together with its
+*estimator signature* — the (est_id, bucket) tuple that fully
+determines the compiled programs a batch will hit.  The service layer
+(``service.py``) keys its batches on that signature.
 """
 
 from __future__ import annotations
@@ -49,9 +65,14 @@ __all__ = [
     "estimator_id",
     "partition_by_estimator",
     "bucket_rows",
+    "bucket_queries",
     "MIN_BUCKET",
+    "MAX_Q_BUCKET",
     "GroupPlan",
     "QueryPlan",
+    "plan_signature",
+    "ServicePlan",
+    "PlanCache",
     "pack_group",
     "make_plan",
 ]
@@ -63,6 +84,12 @@ EST_MLE, EST_MIXED, EST_DC_XD, EST_DC_YD = 0, 1, 2, 3
 # the next power of two >= max(size, MIN_BUCKET); compiled scorers are
 # keyed on the bucket, so rapidly-changing corpora stop recompiling.
 MIN_BUCKET = 8
+
+# Largest Q-bucket an admission controller hands to one executor pass.
+# Batches beyond it are chunked, which caps both the compiled-program
+# shape set (Q-buckets = 1, 2, 4, ..., MAX_Q_BUCKET) and the device
+# memory a single burst can pin.
+MAX_Q_BUCKET = 64
 
 
 def estimator_id(x_discrete: bool, y_discrete: bool) -> int:
@@ -94,6 +121,24 @@ def bucket_rows(n: int, multiple: int = 1) -> int:
     b = _next_pow2(max(n, MIN_BUCKET))
     if multiple > 1 and b % multiple:
         b = -(-b // multiple) * multiple
+    return b
+
+
+def bucket_queries(q: int, cap: int = MAX_Q_BUCKET) -> int:
+    """Q-axis ladder bucket for a batch of ``q`` concurrent queries.
+
+    Next power of two >= q, clamped to ``cap`` — an admission controller
+    must chunk batches larger than ``cap`` *before* bucketing (see
+    ``service.py``), so the set of compiled leading-Q shapes is exactly
+    {1, 2, 4, ..., cap} no matter what the traffic looks like.
+    """
+    if q < 1:
+        raise ValueError(f"batch of {q} queries")
+    b = _next_pow2(q)
+    if b > cap:
+        raise ValueError(
+            f"Q={q} exceeds the bucket cap {cap}; chunk the batch first"
+        )
     return b
 
 
@@ -153,6 +198,89 @@ def pack_group(
         [idx.astype(np.int64), np.full(bucket - g, n_candidates, np.int64)]
     )
     return GroupPlan(eid, arrays, index, live, g)
+
+
+def plan_signature(plan: QueryPlan) -> tuple:
+    """Estimator signature of a plan: ((est_id, bucket), ...) in group
+    order, prefixed by the target dtype.
+
+    Two batches with equal signatures hit the *same* compiled scorer
+    programs (the programs are keyed on est_id + padded shapes), so the
+    admission controller batches queries by signature, not by corpus
+    identity — a corpus that grew within its buckets keeps its
+    signature and recompiles nothing.
+    """
+    return (bool(plan.y_discrete),) + tuple(
+        (gp.est_id, gp.bucket) for gp in plan.groups
+    )
+
+
+@dataclass(frozen=True)
+class ServicePlan:
+    """One admitted batch layout: a corpus plan plus its Q-bucket.
+
+    The pair pins everything that determines compiled-program identity
+    for a batch — ``signature`` for the candidate side, ``q_bucket`` for
+    the query side — so a :class:`PlanCache` hit guarantees zero new
+    compiles (jit's shape cache underneath sees only repeat shapes).
+    """
+
+    plan: QueryPlan
+    q_bucket: int
+    signature: tuple
+
+
+class PlanCache:
+    """Admission-control plan cache keyed on (corpus version, target
+    dtype, Q-bucket).
+
+    The :class:`~repro.core.discovery.index.SketchIndex` already caches
+    one ``QueryPlan`` per (dtype, version); this layer adds the Q axis
+    and the signature bookkeeping the service batches on, and counts
+    hits/misses so tests and ``DiscoveryService.stats()`` can assert
+    that steady-state traffic replans nothing.  Insertion-order LRU:
+    stale corpus versions age out first.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max_entries
+        self._entries: dict[tuple, ServicePlan] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(
+        self, version: int, y_discrete: bool, q_bucket: int,
+        build,
+    ) -> ServicePlan:
+        """Cached ServicePlan for the key, building via ``build()`` — a
+        zero-arg callable returning the current QueryPlan — on miss."""
+        key = (int(version), bool(y_discrete), int(q_bucket))
+        hit = self._entries.pop(key, None)
+        if hit is not None:
+            self.hits += 1
+            self._entries[key] = hit  # re-insert: LRU touch
+            return hit
+        self.misses += 1
+        plan = build()
+        sp = ServicePlan(plan, int(q_bucket), plan_signature(plan))
+        while len(self._entries) >= self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+        self._entries[key] = sp
+        return sp
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
 
 
 def make_plan(

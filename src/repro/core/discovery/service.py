@@ -1,0 +1,263 @@
+"""Admission-controlled discovery service: the serving front-end.
+
+Everything below this module answers *one* well-shaped batch fast: the
+planner fixes a layout per (corpus version, target dtype), the executors
+run one compiled program per estimator group, the index keeps the corpus
+device-resident under live ingest.  What none of them owns is the gap
+between "a list of user queries" and those well-shaped batches — a real
+queue is *mixed* (discrete and continuous targets interleaved), *bursty*
+(3 queries, then 40, then 9), and *concurrent with ingest*.  Fed raw to
+``query_many`` such a queue either raises (mixed dtypes) or compiles a
+fresh leading-Q program per observed batch size.
+
+:class:`DiscoveryService` is that missing layer — the online-service
+front-end that Correlation Sketches (Santos et al., 2021) and Table
+Enrichment (Dong & Oyamada, 2022) frame discovery as.  ``submit`` runs
+admission control over an arbitrary queue:
+
+  1. **Split** — queries are partitioned by target dtype and therefore
+     by *estimator signature* (the (est_id, group-bucket) tuple that
+     determines compiled-program identity; see
+     :func:`~repro.core.discovery.planner.plan_signature`).  Every
+     admitted batch is homogeneous, so the mixed-queue crash mode is
+     gone by construction.
+  2. **Chunk + Q-bucket** — each signature's queries are chunked to the
+     ``max_q_bucket`` cap and padded up the pow-two Q-ladder
+     (:func:`~repro.core.discovery.planner.bucket_queries`).  Compile
+     count under *any* traffic pattern is bounded by |signatures| x
+     |Q-buckets| x |group buckets| — asserted by the admission tests via
+     :func:`~repro.core.discovery.executors.compile_count`.
+  3. **Schedule** — every admitted bucket is dispatched before any
+     result is transferred (the executors' ``dispatch``/``collect``
+     split), so bucket programs overlap on device exactly like group
+     programs do within one bucket.  On a mesh the cross-group top-k
+     merge also stays on device (one ``lax.top_k`` per bucket for all
+     its queries), so collection moves O(Q · top_k) scalars.
+
+Results are scattered back to arrival order and are bit-identical to
+looping :meth:`SketchIndex.query` over the same queue — padded query
+lanes repeat a live lane and are sliced off on device; vmap lanes are
+data-parallel.  ``add``/``add_table`` delegate to the index's amortized
+O(1) ingest (buffer-donated in-place flushes where the backend supports
+it), so a queue interleaved with ingest serves from a corpus that is
+current as of each ``submit``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from jax.sharding import Mesh
+
+from repro.core.discovery import executors as _ex
+from repro.core.discovery.index import SketchIndex, topk_oversample
+from repro.core.discovery.planner import (
+    MAX_Q_BUCKET,
+    PlanCache,
+    bucket_queries,
+    plan_signature,
+)
+from repro.core.sketch import Sketch
+
+__all__ = ["AdmissionStats", "DiscoveryService"]
+
+
+@dataclass
+class AdmissionStats:
+    """What admission control did to the traffic so far."""
+
+    submitted: int = 0       # queries accepted across all submit() calls
+    submits: int = 0         # submit() calls
+    batches: int = 0         # admitted (signature, Q-bucket) dispatches
+    split_batches: int = 0   # chunks forced by the max_q_bucket cap
+    padded_lanes: int = 0    # dead query lanes paid to ride the ladder
+    signatures: set = field(default_factory=set)
+    q_buckets: set = field(default_factory=set)
+
+    def as_dict(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "submits": self.submits,
+            "batches": self.batches,
+            "split_batches": self.split_batches,
+            "padded_lanes": self.padded_lanes,
+            "signatures": len(self.signatures),
+            "q_buckets": sorted(self.q_buckets),
+        }
+
+
+class DiscoveryService:
+    """Serving surface: live ingest + concurrent mixed queries.
+
+    ``add``/``add_table`` ingest candidate columns; ``submit`` answers a
+    queue of train sketches.  One service owns one
+    :class:`SketchIndex` (pass ``index=`` to wrap an existing corpus)
+    and, optionally, one mesh — with ``mesh=`` every admitted bucket
+    runs the group-major distributed executor and returns ranked
+    results from the on-device top-k merge.
+    """
+
+    def __init__(
+        self,
+        index: SketchIndex | None = None,
+        *,
+        n: int = 256,
+        method: str = "tupsk",
+        agg: str = "first",
+        k: int = 3,
+        mesh: Mesh | None = None,
+        max_q_bucket: int = MAX_Q_BUCKET,
+        plan_cache_size: int = 32,
+    ):
+        self.index = index if index is not None else SketchIndex(
+            n=n, method=method, agg=agg
+        )
+        self.k = k
+        self.mesh = mesh
+        max_q_bucket = int(max_q_bucket)
+        # The chunker cuts queues to max_q_bucket and the ladder pads up
+        # to the next power of two <= the cap, so a non-pow-2 cap would
+        # make a full chunk unbucketable.
+        if max_q_bucket < 1 or max_q_bucket & (max_q_bucket - 1):
+            raise ValueError(
+                f"max_q_bucket must be a power of two >= 1 (the Q-axis "
+                f"bucket ladder is pow-2), got {max_q_bucket}"
+            )
+        self.max_q_bucket = max_q_bucket
+        self.plan_cache = PlanCache(plan_cache_size)
+        self.admission = AdmissionStats()
+        self._batched = _ex.BatchedExecutor(k=k)
+        # Share the index's per-(mesh, k) distributed executor so the
+        # service and direct index.query(mesh=...) callers hit one
+        # shard-pad cache (one set of padded device arrays per plan).
+        self._dist = (
+            self.index._distributed_executor(mesh, k)
+            if mesh is not None else None
+        )
+
+    # ------------------------------------------------------------------
+    # Ingest (delegates to the index; flushes ride the next submit)
+    # ------------------------------------------------------------------
+
+    def add(self, *args, **kwargs) -> None:
+        """Ingest one candidate column (see :meth:`SketchIndex.add`)."""
+        self.index.add(*args, **kwargs)
+
+    def add_table(self, table, key_column: str) -> None:
+        """Ingest every (key, value) pair of a table."""
+        self.index.add_table(table, key_column)
+
+    def __len__(self) -> int:
+        return len(self.index)
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+
+    def _chunks(self, idxs: list[int]):
+        cap = self.max_q_bucket
+        for lo in range(0, len(idxs), cap):
+            yield idxs[lo: lo + cap]
+
+    def submit(
+        self,
+        queries: list[Sketch],
+        *,
+        top_k: int = 10,
+        min_join: int = 8,
+    ) -> list[list]:
+        """Answer a mixed, arbitrarily-sized queue of discovery queries.
+
+        Returns one ranked result list per query, in arrival order —
+        each entry bit-identical to ``index.query(sk, top_k=...,
+        min_join=..., mesh=..., k=self.k)`` on the same corpus (the
+        estimator neighbor count must match for parity, which sharing
+        ``self.k`` guarantees).  Internally the
+        queue is admission-controlled (split per estimator signature,
+        chunked to ``max_q_bucket``, Q padded up the pow-two ladder) and
+        every admitted bucket is dispatched before the first transfer.
+        """
+        queries = list(queries)
+        if not queries:
+            return []
+        st = self.admission
+        st.submits += 1
+        st.submitted += len(queries)
+        C = len(self.index)
+        version = self.index._version
+
+        # 1. split the queue per target dtype -> estimator signature
+        # (constant per dtype within one submit: nothing can flush
+        # mid-call, so compute it once per dtype, not per query).
+        by_sig: dict[tuple, list[int]] = {}
+        plans: dict[bool, object] = {}
+        sigs: dict[bool, tuple] = {}
+        for qi, sk in enumerate(queries):
+            y_disc = bool(sk.value_is_discrete)
+            if y_disc not in plans:
+                plans[y_disc] = self.index.plan(y_disc, k=self.k)
+                sigs[y_disc] = plan_signature(plans[y_disc])
+            by_sig.setdefault(sigs[y_disc], []).append(qi)
+
+        # 2. chunk to the Q cap, bucket, and dispatch every batch before
+        # any collect (dispatch-before-transfer across buckets).
+        pending = []
+        for sig, idxs in by_sig.items():
+            y_disc = sig[0]
+            st.signatures.add(sig)
+            n_chunks = -(-len(idxs) // self.max_q_bucket)
+            st.split_batches += n_chunks - 1
+            for chunk in self._chunks(idxs):
+                q_bucket = bucket_queries(len(chunk), self.max_q_bucket)
+                sp = self.plan_cache.lookup(
+                    version, y_disc, q_bucket,
+                    lambda y=y_disc: self.index.plan(y, k=self.k),
+                )
+                st.batches += 1
+                st.q_buckets.add(q_bucket)
+                st.padded_lanes += q_bucket - len(chunk)
+                trains = _ex.stack_trains_host(
+                    [queries[i] for i in chunk]
+                )
+                if self._dist is not None:
+                    want = topk_oversample(top_k, C)
+                    handle = self._dist.topk_dispatch(
+                        sp.plan, trains, want, q_bucket=q_bucket
+                    )
+                else:
+                    handle = self._batched.dispatch(
+                        sp.plan, trains, q_bucket=q_bucket
+                    )
+                pending.append((chunk, handle))
+
+        # 3. collect (first host sync) and scatter to arrival order.
+        results: list = [None] * len(queries)
+        for chunk, handle in pending:
+            if self._dist is not None:
+                triples = handle.collect()
+            else:
+                mi, js = handle.collect()
+                gi = np.arange(C)
+                triples = [(mi[q], gi, js[q]) for q in range(len(chunk))]
+            for row, qi in enumerate(chunk):
+                v, gidx, jsz = triples[row]
+                results[qi] = self.index._rank(
+                    v, gidx, jsz, top_k, min_join
+                )
+        return results
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters: admission decisions, plan-cache traffic,
+        compiled-program population, and ingest transfer accounting."""
+        return {
+            "admission": self.admission.as_dict(),
+            "plan_cache": self.plan_cache.stats,
+            "compiled_programs": _ex.compile_count(),
+            "ingest": self.index.ingest_stats,
+        }

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
 
-from repro.kernels.knn_stats.ops import ball_counts, knn_smallest
+from repro.kernels.knn_stats.ops import knn_with_counts
 from repro.kernels.pairwise_cheb.ops import pairwise_cheb
 
 __all__ = [
@@ -180,9 +180,9 @@ def ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     if impl == "fused":
-        knn, _ = knn_smallest(xf, yf, mask, k=k, mode="joint")
-        eps = knn[:, k - 1]
-        c = ball_counts(xf, yf, mask, eps)
+        # Radius + counts in one streaming pass (single tile sweep for
+        # every sketch-sized sample — see knn_with_counts).
+        _, _, c = knn_with_counts(xf, yf, mask, k=k, mode="joint")
         return _ksg_tail(c.x_lt, c.y_lt, mask, M, k)
     eye = jnp.eye(x.shape[0], dtype=bool)
     # Materialized: DX/DY carry +inf at invalid pairs, DJ also fences the
@@ -215,16 +215,15 @@ def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
 
     with counts *including* the point itself, matching the reference
     implementation (query_ball_point semantics).  The fused path gets
-    the ρ radii plus all five tie/ball counts from two streaming
-    ``knn_stats`` passes.
+    the ρ radii plus all five tie/ball counts from one fused
+    ``knn_with_counts`` pass.
     """
     xf = x.astype(jnp.float32)
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     if impl == "fused":
-        knn, _ = knn_smallest(xf, yf, mask, k=k, mode="joint")
+        knn, _, c = knn_with_counts(xf, yf, mask, k=k, mode="joint")
         rho = knn[:, k - 1]
-        c = ball_counts(xf, yf, mask, rho)
         return _mixed_tail(
             rho, c.j_eq + 1, c.x_eq + 1, c.y_eq + 1,
             c.x_lt + 1, c.y_lt + 1, mask, M, k,
@@ -245,7 +244,7 @@ def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
 
 def dc_ksg_mi(
     x_codes: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
-    impl: Impl = "fused",
+    impl: Impl = "fused", k_i: int | None = None,
 ) -> jax.Array:
     """Ross (2014) estimator for (discrete X, continuous Y).
 
@@ -259,32 +258,57 @@ def dc_ksg_mi(
     Points whose class has a single member are excluded (as in the
     scikit-learn implementation); M' counts the points kept.
 
+    ``k_i`` overrides the per-point within-class neighbor budget
+    (default: ``k``).  It must satisfy ``k_i <= k``: the fused
+    class-mode kNN buffer holds exactly ``k`` within-class distances
+    per row (see ``repro.kernels.knn_stats.ops``), so a larger budget
+    would silently read +inf padding — requesting it raises a
+    ``ValueError`` instead of returning a wrong estimate.
+
     The fused path streams within-class kNN in class mode, so the seed's
-    full P×P sort of the same-class distance matrix disappears.
-    ``x_codes`` must be exactly float32-representable (dense ranks are;
-    raw uint32 codes above 2²⁴ may collide — rank them first).
+    full P×P sort of the same-class distance matrix disappears; the
+    radius extraction and the m_i count ride the same single fused
+    sweep (``knn_with_counts``).  ``x_codes`` must be exactly
+    float32-representable (dense ranks are; raw uint32 codes above 2²⁴
+    may collide — rank them first).
     """
+    if k_i is not None and k_i > k:
+        raise ValueError(
+            f"DC-KSG per-point neighbor budget k_i={k_i} exceeds k={k}: "
+            "the fused class-mode kNN buffer holds only the k smallest "
+            "within-class distances per row, so k_i > k cannot be "
+            "served — raise k to at least k_i (widening the buffer is "
+            "tracked on the ROADMAP)"
+        )
+    kk = k if k_i is None else k_i
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     P = y.shape[0]
     if impl == "fused":
         cf = x_codes.astype(jnp.float32)
-        knn, same_cnt = knn_smallest(cf, yf, mask, k=k, mode="class")
-        n_x = same_cnt + mask.astype(jnp.int32)  # includes self
-        k_i = jnp.minimum(k, n_x - 1)
-        idx = jnp.clip(k_i - 1, 0, k - 1)
-        d_i = jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
-        m_i = ball_counts(cf, yf, mask, d_i, which="y").y_lt
+        m_i32 = mask.astype(jnp.int32)
+
+        def _dc_radius(knn, same_cnt):
+            n_x_r = same_cnt + m_i32  # includes self
+            idx = jnp.clip(jnp.minimum(kk, n_x_r - 1) - 1, 0, k - 1)
+            return jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
+
+        _, same_cnt, counts = knn_with_counts(
+            cf, yf, mask, k=k, mode="class", which="y", radius=_dc_radius,
+        )
+        n_x = same_cnt + m_i32
+        k_eff = jnp.minimum(kk, n_x - 1)
+        m_i = counts.y_lt
     else:
         eye = jnp.eye(P, dtype=bool)
         valid_pair = mask[:, None] & mask[None, :]
         same = (x_codes[:, None] == x_codes[None, :]) & valid_pair
         n_x = jnp.sum(same, axis=1)  # includes self
-        k_i = jnp.minimum(k, n_x - 1)
+        k_eff = jnp.minimum(kk, n_x - 1)
         _, dy, _ = pairwise_cheb(yf, yf, mask)  # DY with +inf at invalid
         dy_same = jnp.where(same & ~eye, dy, jnp.inf)
         dy_sorted = jnp.sort(dy_same, axis=1)
-        idx = jnp.clip(k_i - 1, 0, P - 1)
+        idx = jnp.clip(k_eff - 1, 0, P - 1)
         d_i = jnp.take_along_axis(dy_sorted, idx[:, None], axis=1)[:, 0]
         m_i = jnp.sum((dy < d_i[:, None]) & ~eye, axis=1)
 
@@ -296,7 +320,7 @@ def dc_ksg_mi(
 
     est = (
         digamma(cnt.astype(jnp.float32))
-        + mean_of(digamma(jnp.maximum(k_i, 1).astype(jnp.float32)))
+        + mean_of(digamma(jnp.maximum(k_eff, 1).astype(jnp.float32)))
         - mean_of(digamma(n_x.astype(jnp.float32)))
         - mean_of(digamma(m_i.astype(jnp.float32) + 1.0))
     )

@@ -1,23 +1,37 @@
 """Public knn_stats API: fused streaming kNN radii + ball counts.
 
-Two entry points shared by every KSG-family estimator:
+Three entry points shared by every KSG-family estimator:
 
   * :func:`knn_smallest` — per-row k smallest selected distances
     (ascending) and, in class mode, the within-class neighborhood size.
   * :func:`ball_counts`  — per-row marginal ball / tie counts for a
     per-row radius.
+  * :func:`knn_with_counts` — the two in one: radii, a caller-derived
+    per-row radius, and the counts at that radius.  Off-TPU, when the
+    padded sample fits one column tile (every production sketch
+    capacity), the radius and count passes collapse into a *single*
+    tile sweep — the distance tiles are computed once and the only
+    selection primitive is the one ``lax.top_k`` of the radius merge,
+    instead of a top-k sweep plus a second recomputed-distance count
+    sweep.  Bit-identical to the sequential two-op call.
 
-Both stream (P, block) column tiles instead of materializing any P×P
-distance matrix: peak intermediate memory is O(P · block).  On TPU the
-Pallas kernel (``kernel.py``) keeps the accumulators in VMEM; elsewhere
-a tiled ``lax.scan`` with identical semantics (bit-equal selected
-distances, identical tie handling) is the production path — it is NOT a
-validation-only oracle.  The naive materializing oracle lives in
-``ref.py`` and is used by tests only.
+All of them stream (P, block) column tiles instead of materializing any
+P×P distance matrix: peak intermediate memory is O(P · block).  On TPU
+the Pallas kernel (``kernel.py``) keeps the accumulators in VMEM;
+elsewhere a tiled ``lax.scan`` with identical semantics (bit-equal
+selected distances, identical tie handling) is the production path — it
+is NOT a validation-only oracle.  The naive materializing oracle lives
+in ``ref.py`` and is used by tests only.
 
 Inputs are fixed-shape padded samples (x, y, mask); invalid entries and
 the diagonal are fenced to +inf before any reduction, so padding never
 affects radii or counts.
+
+Known limitation (class mode): the kNN buffer holds exactly ``k``
+within-class distances per row, so per-point neighbor requests are
+capped at ``k`` — a DC-KSG caller asking for ``k_i > k`` cannot be
+served from this buffer and must raise (``estimators.dc_ksg_mi``
+validates this); widening the buffer is a ROADMAP item.
 """
 
 from __future__ import annotations
@@ -34,7 +48,13 @@ from repro.kernels.knn_stats.kernel import (
     knn_smallest_padded,
 )
 
-__all__ = ["BallCounts", "ball_counts", "knn_smallest", "DEFAULT_BLOCK"]
+__all__ = [
+    "BallCounts",
+    "ball_counts",
+    "knn_smallest",
+    "knn_with_counts",
+    "DEFAULT_BLOCK",
+]
 
 # Fallback column-tile width: keeps the streamed tile (P, 128) well under
 # the materialized P×P footprint for every production sketch capacity.
@@ -163,6 +183,10 @@ def knn_smallest(
     max(|dx|, |dy|) — the KSG/MixedKSG radius space.  mode "class":
     |dy| restricted to rows with equal x code (Ross DC-KSG); x must
     carry exactly-float32-representable class codes (dense ranks).
+    NOTE the class-mode buffer holds exactly ``k`` within-class
+    distances per row — per-point neighbor indices beyond ``k`` (a
+    DC-KSG ``k_i > k`` request) are silently +inf; callers must raise
+    ``k`` (or be rejected — see ``estimators.dc_ksg_mi``).
 
     Returns (knn (P, k) float32 ascending, +inf padding;
     cnt (P,) int32 — valid same-class neighbors j ≠ i, zeros in joint
@@ -239,3 +263,115 @@ def ball_counts(
     )
     c = cnt[:P, :5].astype(jnp.int32)
     return BallCounts(c[:, 0], c[:, 1], c[:, 2], c[:, 3], c[:, 4])
+
+
+def _knn_counts_fused_tile(xf, yf, m, *, k, mode, which, radius_fn, block):
+    """Single-tile fused radius+count sweep (requires padded P <= block).
+
+    The distance tile is formed once; the radius merge is the only
+    ``lax.top_k``; the counts reuse the very same ``dx``/``dy``/``valid``
+    values the radius pass selected from.  Every expression matches the
+    two-scan fallback term for term, so the outputs are bit-identical —
+    the scans' per-tile dynamic slices just collapse to the whole tile.
+    """
+    P = xf.shape[0]
+    pad = block - P
+    xp = jnp.pad(xf, (0, pad))
+    yp = jnp.pad(yf, (0, pad))
+    mp = jnp.pad(m, (0, pad))
+    rows = jnp.arange(P, dtype=jnp.int32)
+    cols = jnp.arange(block, dtype=jnp.int32)
+    inf = jnp.float32(jnp.inf)
+    dy = jnp.abs(yf[:, None] - yp[None, :])  # (P, block)
+    valid = m[:, None] & mp[None, :] & (rows[:, None] != cols[None, :])
+    cnt = jnp.zeros(P, jnp.int32)
+    dx = None
+    if mode == "joint":
+        dx = jnp.abs(xf[:, None] - xp[None, :])
+        d_sel = jnp.where(valid, jnp.maximum(dx, dy), inf)
+    else:  # class: neighborhoods restricted to equal x codes
+        sel = valid & (xf[:, None] == xp[None, :])
+        d_sel = jnp.where(sel, dy, inf)
+        cnt = jnp.sum(sel, axis=1, dtype=jnp.int32)
+    neg_top, _ = jax.lax.top_k(-d_sel, k)
+    knn = -neg_top
+    r = radius_fn(knn, cnt).astype(jnp.float32)
+
+    def _cnt(cond):
+        return jnp.sum(valid & cond, axis=1, dtype=jnp.int32)
+
+    y_lt = _cnt(dy < r[:, None])
+    if which == "y":
+        zero = jnp.zeros(P, jnp.int32)
+        return knn, cnt, BallCounts(zero, y_lt, zero, zero, zero)
+    if dx is None:
+        dx = jnp.abs(xf[:, None] - xp[None, :])
+    counts = BallCounts(
+        _cnt(dx < r[:, None]),
+        y_lt,
+        _cnt(dx <= 0.0),
+        _cnt(dy <= 0.0),
+        _cnt(jnp.maximum(dx, dy) <= 0.0),
+    )
+    return knn, cnt, counts
+
+
+def knn_with_counts(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    k: int,
+    mode: str = "joint",
+    which: str = "all",
+    radius=None,
+    use_kernel: bool | None = None,
+    block: int | None = None,
+) -> tuple[jax.Array, jax.Array, BallCounts]:
+    """Fused radius+count pass: :func:`knn_smallest`, a per-row radius,
+    and :func:`ball_counts` at that radius, in one call.
+
+    ``radius`` is a traceable callable ``(knn, cnt) -> (P,) radii``
+    (default: the k-th smallest selected distance, ``knn[:, k-1]`` —
+    the KSG/MixedKSG choice; DC-KSG passes its clipped within-class
+    extraction).  Returns ``(knn, cnt, counts)`` exactly as the two ops
+    would return them — bit-identical, including tie handling.
+
+    Off-TPU this is the discovery hot-path fusion: for samples whose
+    padding fits one column tile (P <= block, i.e. every production
+    sketch capacity) the two tile sweeps of the scan fallback collapse
+    into one — distances are formed once and the lone ``lax.top_k`` of
+    the radius merge is the only selection pass.  Larger samples and
+    the TPU kernels keep the two-pass structure unchanged.
+    """
+    if mode not in ("joint", "class"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if which not in ("all", "y"):
+        raise ValueError(f"unknown which {which!r}")
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if radius is None:
+        radius = lambda knn, cnt: knn[:, k - 1]  # noqa: E731
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    if not use_kernel:
+        blk = block or DEFAULT_BLOCK
+        P = xf.shape[0]
+        if _pad_cols(P, blk) == blk and k <= blk:
+            return _knn_counts_fused_tile(
+                xf, yf, m, k=k, mode=mode, which=which,
+                radius_fn=radius, block=blk,
+            )
+        knn, cnt = _knn_smallest_scan(xf, yf, m, k=k, mode=mode, block=blk)
+        r = radius(knn, cnt).astype(jnp.float32)
+        return knn, cnt, _ball_counts_scan(
+            xf, yf, m, r, which=which, block=blk
+        )
+    knn, cnt = knn_smallest(
+        x, y, mask, k=k, mode=mode, use_kernel=True, block=block
+    )
+    r = radius(knn, cnt)
+    return knn, cnt, ball_counts(
+        x, y, mask, r, which=which, use_kernel=True, block=block
+    )

@@ -371,6 +371,27 @@ class TestMultiShardParity:
         np.testing.assert_array_equal(np.sort(gi), np.sort(best))
         res = index.query(sk, top_k=3, mesh=mesh, min_join=4)
         assert res[0][0].table == "c0", res
+
+        # Multi-query on-device cross-group merge: Q=3 triples equal the
+        # dense ranking per query, through real 4-shard programs.
+        sks = [build_sketch(keys, (y + 0.2 * (q + 1)
+                                   * rng.normal(size=N)).astype(np.float32),
+                            n=64, method="tupsk", side="train",
+                            value_is_discrete=False) for q in range(3)]
+        tr3 = stack_trains([index.train_arrays(s) for s in sks])
+        mi3, _ = PartitionedLocalExecutor().execute(plan, tr3)
+        for q, (v, gi, js) in enumerate(ex.topk(plan, tr3, 3)):
+            best = np.argsort(-mi3[q], kind="stable")[:3]
+            np.testing.assert_array_equal(np.sort(gi), np.sort(best))
+
+        # Service front-end over the mesh == looped mesh query.
+        from repro.core.discovery import DiscoveryService
+        svc = DiscoveryService(index=index, mesh=mesh, max_q_bucket=2)
+        got = svc.submit(sks, top_k=3, min_join=4)
+        want = [index.query(s, top_k=3, mesh=mesh, min_join=4) for s in sks]
+        for g, w in zip(got, want):
+            assert [(m.table, mi, js) for m, mi, js in g] == \
+                   [(m.table, mi, js) for m, mi, js in w]
         print("SHARD-PARITY-OK")
     """)
 

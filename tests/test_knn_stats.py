@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import estimators
-from repro.kernels.knn_stats.ops import ball_counts, knn_smallest
+from repro.kernels.knn_stats.ops import (
+    ball_counts,
+    knn_smallest,
+    knn_with_counts,
+)
 from repro.kernels.knn_stats.ref import ball_counts_ref, knn_smallest_ref
 
 RNG = np.random.default_rng(11)
@@ -198,3 +202,86 @@ class TestEstimatorParity:
         a = estimators.dc_ksg_mi(codes, y, m, k=5, impl="fused")
         b = estimators.dc_ksg_mi(codes, y, m, k=5, impl="materialized")
         assert float(a) == pytest.approx(float(b), abs=1e-5)
+
+    @pytest.mark.parametrize("impl", ["fused", "materialized"])
+    def test_dc_ksg_k_i_beyond_buffer_rejected(self, impl):
+        """The class-mode kNN buffer holds k distances per row; a
+        per-point budget k_i > k must raise, not silently read +inf."""
+        P = 40
+        codes = jnp.asarray(RNG.integers(0, 4, size=P).astype(np.int32))
+        _, y, m = _sample(P)
+        with pytest.raises(ValueError, match="k_i=5 exceeds k=3"):
+            estimators.dc_ksg_mi(codes, y, m, k=3, impl=impl, k_i=5)
+        # k_i <= k is served, identically across impls
+        a = estimators.dc_ksg_mi(codes, y, m, k=4, impl="fused", k_i=2)
+        b = estimators.dc_ksg_mi(codes, y, m, k=4, impl="materialized",
+                                 k_i=2)
+        assert float(a) == pytest.approx(float(b), abs=1e-5)
+        c = estimators.dc_ksg_mi(codes, y, m, k=4, k_i=4)
+        d = estimators.dc_ksg_mi(codes, y, m, k=4)
+        assert float(c) == float(d)  # default budget == k
+
+
+class TestFusedRadiusCountSweep:
+    """knn_with_counts == knn_smallest + ball_counts, bit for bit, on
+    both the single-tile fused sweep and the multi-tile two-scan path."""
+
+    @pytest.mark.parametrize("P", [7, 64, 128, 200, 513])
+    @pytest.mark.parametrize("mode,which", [
+        ("joint", "all"), ("joint", "y"), ("class", "y"), ("class", "all"),
+    ])
+    def test_matches_sequential_ops(self, P, mode, which):
+        x, y, m = _sample(P)
+        if mode == "class":
+            x = jnp.asarray(RNG.integers(0, 5, size=P).astype(np.float32))
+        knn1, cnt1 = knn_smallest(x, y, m, k=3, mode=mode, use_kernel=False)
+        want = ball_counts(x, y, m, knn1[:, 2], which=which,
+                           use_kernel=False)
+        knn2, cnt2, got = knn_with_counts(
+            x, y, m, k=3, mode=mode, which=which, use_kernel=False
+        )
+        np.testing.assert_array_equal(np.asarray(knn1), np.asarray(knn2))
+        np.testing.assert_array_equal(np.asarray(cnt1), np.asarray(cnt2))
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_custom_radius_callback(self):
+        """A caller-supplied radius (DC-KSG's clipped extraction) is
+        applied inside the same sweep."""
+        P = 64
+        x, y, m = _sample(P)
+
+        def r_fn(knn, cnt):
+            return knn[:, 0]  # 1-NN radius instead of k-th
+
+        knn, _, got = knn_with_counts(
+            x, y, m, k=3, radius=r_fn, use_kernel=False
+        )
+        want = ball_counts(x, y, m, knn[:, 0], use_kernel=False)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_kernel_path_dispatches_both_kernels(self):
+        """On the (interpreted) TPU kernel path the fused wrapper equals
+        the sequential kernel calls too."""
+        P = 64
+        x, y, m = _sample(P)
+        knn1, cnt1 = knn_smallest(x, y, m, k=3, use_kernel=True, block=128)
+        want = ball_counts(x, y, m, knn1[:, 2], use_kernel=True, block=128)
+        knn2, _, got = knn_with_counts(
+            x, y, m, k=3, use_kernel=True, block=128
+        )
+        np.testing.assert_array_equal(np.asarray(knn1), np.asarray(knn2))
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_single_sweep_has_one_topk(self):
+        """The fused single-tile sweep lowers exactly one top_k and no
+        scan — the two-pass structure is gone from the jaxpr."""
+        P = 64
+        x, y, m = _sample(P)
+        jaxpr = str(jax.make_jaxpr(
+            lambda a, b, c: knn_with_counts(a, b, c, k=3, use_kernel=False)
+        )(x, y, m))
+        assert jaxpr.count("top_k") == 1
+        assert "scan" not in jaxpr

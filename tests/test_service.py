@@ -1,0 +1,359 @@
+"""Admission-controlled serving tests (ISSUE 3 acceptance):
+
+  (a) ``DiscoveryService.submit`` over a shuffled mixed-dtype queue —
+      including queues interleaved with live ingest — is bit-identical
+      to per-query ``SketchIndex.query`` calls on the same corpus;
+  (b) a randomized bursty workload triggers a bounded number of
+      compiles: at most |estimator signatures| x |Q-buckets| x
+      |group buckets|, asserted via the ``compile_count`` hook;
+  (c) the executor-level padded-Q path and the on-device distributed
+      top-k merge are exact; ingest flushes report their in-place /
+      copied split.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from repro.core import hashing
+from repro.core.discovery import (
+    BatchedExecutor,
+    DiscoveryService,
+    GroupMajorDistributedExecutor,
+    SketchIndex,
+    bucket_queries,
+    compile_count,
+    pad_trains_q,
+    plan_signature,
+    stack_trains,
+)
+from repro.core.discovery.planner import MAX_Q_BUCKET, PlanCache
+from repro.core.sketch import build_sketch
+
+N_ROWS = 1200
+SK_N = 64
+RNG = np.random.default_rng(23)
+
+
+def _keys(seed=9):
+    raw = np.arange(N_ROWS, dtype=np.uint32)
+    return np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+
+
+def _mixed_index(keys, y, rng, n_cont=3, n_disc=2):
+    index = SketchIndex(n=SK_N, method="tupsk")
+    for i in range(n_cont):
+        index.add(f"cont{i}", "k", "v", keys,
+                  (y + (0.2 + i) * rng.normal(size=N_ROWS)).astype(np.float32),
+                  False)
+    for i in range(n_disc):
+        index.add(f"disc{i}", "k", "v", keys,
+                  rng.integers(0, 4 + i, size=N_ROWS), True)
+    return index
+
+
+def _train(keys, v, disc):
+    return build_sketch(keys, v, n=SK_N, method="tupsk", side="train",
+                        value_is_discrete=disc)
+
+
+def _mixed_queue(keys, y, rng, q, disc_every=3):
+    """q train sketches with discrete/continuous targets interleaved."""
+    out = []
+    for i in range(q):
+        noisy = (y + (0.1 + 0.25 * i) * rng.normal(size=N_ROWS))
+        if i % disc_every == disc_every - 1:
+            out.append(_train(keys, (noisy > 0).astype(np.int64), True))
+        else:
+            out.append(_train(keys, noisy.astype(np.float32), False))
+    return out
+
+
+def _flat(res):
+    return [(m.table, mi, js) for m, mi, js in res]
+
+
+class TestQLadder:
+    def test_bucket_queries_ladder(self):
+        assert [bucket_queries(q) for q in (1, 2, 3, 5, 8, 33)] == \
+            [1, 2, 4, 8, 8, 64]
+        assert bucket_queries(MAX_Q_BUCKET) == MAX_Q_BUCKET
+        with pytest.raises(ValueError, match="chunk"):
+            bucket_queries(MAX_Q_BUCKET + 1)
+        with pytest.raises(ValueError):
+            bucket_queries(0)
+
+    def test_plan_cache_keys_and_lru(self):
+        cache = PlanCache(max_entries=2)
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(0))
+        build = lambda: index.plan(False)  # noqa: E731
+        a = cache.lookup(1, False, 4, build)
+        assert cache.lookup(1, False, 4, build) is a  # hit
+        assert cache.lookup(1, False, 8, build) is not a  # new Q-bucket
+        cache.lookup(2, False, 4, build)  # version bump -> new entry
+        assert cache.stats["evictions"] == 1  # LRU cap of 2
+        assert cache.stats["hits"] == 1 and cache.stats["misses"] == 3
+        assert a.signature == plan_signature(index.plan(False))
+
+
+class TestPaddedQExecution:
+    def test_padded_q_bit_identical(self):
+        """Every live lane of a Q-padded batch equals the unpadded run."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(1))
+        sks = _mixed_queue(keys, y, np.random.default_rng(2), 3,
+                           disc_every=10)  # all-continuous
+        trains = stack_trains([index.train_arrays(sk) for sk in sks])
+        plan = index.plan(False)
+        ex = BatchedExecutor()
+        mi, js = ex.execute(plan, trains)
+        for q_bucket in (4, 8):
+            mi_p, js_p = ex.execute(plan, trains, q_bucket=q_bucket)
+            assert mi_p.shape == mi.shape  # dead lanes sliced off
+            np.testing.assert_array_equal(mi, mi_p)
+            np.testing.assert_array_equal(js, js_p)
+
+    def test_pad_trains_q_validates(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(1))
+        sks = _mixed_queue(keys, y, np.random.default_rng(2), 3,
+                           disc_every=10)
+        trains = stack_trains([index.train_arrays(sk) for sk in sks])
+        with pytest.raises(ValueError, match="q_bucket"):
+            pad_trains_q(trains, 2)
+        assert pad_trains_q(trains, 3) is trains  # exact fit: no-op
+
+    def test_distributed_topk_multi_query_device_merge(self):
+        """On-device cross-group merge == dense ranking, Q > 1."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(3))
+        sks = _mixed_queue(keys, y, np.random.default_rng(4), 3,
+                           disc_every=10)
+        trains = stack_trains([index.train_arrays(sk) for sk in sks])
+        plan = index.plan(False)
+        mesh = jax.make_mesh((1,), ("data",))
+        ex = GroupMajorDistributedExecutor(mesh)
+        mi, _ = ex.execute(plan, trains)
+        triples = ex.topk(plan, trains, 3)
+        assert len(triples) == 3
+        for q, (v, gi, _) in enumerate(triples):
+            best = np.argsort(-mi[q], kind="stable")[:3]
+            np.testing.assert_array_equal(np.sort(gi), np.sort(best))
+            np.testing.assert_array_equal(np.sort(v), np.sort(mi[q][best]))
+
+    def test_distributed_topk_padded_q(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(3))
+        sks = _mixed_queue(keys, y, np.random.default_rng(4), 3,
+                           disc_every=10)
+        trains = stack_trains([index.train_arrays(sk) for sk in sks])
+        plan = index.plan(False)
+        mesh = jax.make_mesh((1,), ("data",))
+        ex = GroupMajorDistributedExecutor(mesh)
+        plain = ex.topk(plan, trains, 4)
+        padded = ex.topk_dispatch(plan, trains, 4, q_bucket=8).collect()
+        assert len(padded) == 3
+        for (v0, g0, j0), (v1, g1, j1) in zip(plain, padded):
+            np.testing.assert_array_equal(v0, v1)
+            np.testing.assert_array_equal(g0, g1)
+            np.testing.assert_array_equal(j0, j1)
+
+
+class TestSubmitBitIdentity:
+    """Acceptance (a): submit == looped SketchIndex.query, bitwise."""
+
+    def test_mixed_queue_matches_looped_query(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(5))
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+        sks = _mixed_queue(keys, y, np.random.default_rng(6), 9)
+        got = svc.submit(sks, top_k=4, min_join=4)
+        want = [index.query(sk, top_k=4, min_join=4) for sk in sks]
+        assert len(got) == len(sks)
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+        st_ = svc.stats()["admission"]
+        assert st_["signatures"] == 2  # one per target dtype
+        assert st_["split_batches"] >= 1  # 6 continuous > cap of 4
+
+    def test_non_pow2_q_cap_rejected_at_construction(self):
+        """A non-pow-2 cap would make a full chunk unbucketable mid-
+        submit; the constructor rejects it up front."""
+        with pytest.raises(ValueError, match="power of two"):
+            DiscoveryService(n=SK_N, max_q_bucket=6)
+        with pytest.raises(ValueError, match="power of two"):
+            DiscoveryService(n=SK_N, max_q_bucket=0)
+
+    def test_non_default_k_stays_bit_identical(self):
+        """service k must flow into every scorer: submit(k=5-service)
+        == looped index.query(k=5)."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(21))
+        svc = DiscoveryService(index=index, k=5, max_q_bucket=4)
+        sks = _mixed_queue(keys, y, np.random.default_rng(22), 5)
+        got = svc.submit(sks, top_k=4, min_join=4)
+        want = [index.query(sk, top_k=4, min_join=4, k=5) for sk in sks]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+        # and k=5 scores actually differ from the default-k path
+        base = [index.query(sk, top_k=4, min_join=4) for sk in sks]
+        assert any(_flat(g) != _flat(b) for g, b in zip(got, base))
+
+    def test_submit_empty_and_single(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(5))
+        svc = DiscoveryService(index=index)
+        assert svc.submit([]) == []
+        sk = _train(keys, y, False)
+        assert _flat(svc.submit([sk], top_k=3, min_join=4)[0]) == \
+            _flat(index.query(sk, top_k=3, min_join=4))
+
+    def test_interleaved_ingest_queue(self):
+        """add between submits: the next submit serves the grown corpus,
+        still bit-identical to looped query on that corpus."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(7)
+        svc = DiscoveryService(n=SK_N, max_q_bucket=8)
+        for i in range(2):
+            svc.add(f"cont{i}", "k", "v", keys,
+                    (y + (0.2 + i) * rng.normal(size=N_ROWS))
+                    .astype(np.float32), False)
+        sks = _mixed_queue(keys, y, rng, 5)
+        first = svc.submit(sks, top_k=3, min_join=4)
+        svc.add("disc_late", "k", "v", keys,
+                rng.integers(0, 5, size=N_ROWS), True)
+        svc.add("cont_late", "k", "v", keys,
+                (0.9 * y + 0.1 * rng.normal(size=N_ROWS))
+                .astype(np.float32), False)
+        second = svc.submit(sks, top_k=3, min_join=4)
+        want = [svc.index.query(sk, top_k=3, min_join=4) for sk in sks]
+        for g, w in zip(second, want):
+            assert _flat(g) == _flat(w)
+        # the grown corpus actually changed the answers' candidate pool
+        assert len(svc.index.meta) == 4
+        assert first is not second
+
+    @given(seed=st.integers(0, 2**16), q=st.integers(1, 7),
+           disc_every=st.integers(2, 4))
+    @settings(max_examples=6, deadline=None)
+    def test_property_shuffled_mixed_queues(self, seed, q, disc_every):
+        rng = np.random.default_rng(seed)
+        keys = _keys(seed % 5 + 1)
+        y = rng.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, rng)
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+        sks = _mixed_queue(keys, y, rng, q, disc_every=disc_every)
+        order = rng.permutation(q)
+        shuffled = [sks[i] for i in order]
+        got = svc.submit(shuffled, top_k=4, min_join=2)
+        want = [index.query(sk, top_k=4, min_join=2) for sk in shuffled]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+
+    def test_mesh_submit_matches_looped_mesh_query(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(8))
+        mesh = jax.make_mesh((1,), ("data",))
+        svc = DiscoveryService(index=index, mesh=mesh, max_q_bucket=4)
+        sks = _mixed_queue(keys, y, np.random.default_rng(9), 6)
+        got = svc.submit(sks, top_k=3, min_join=4)
+        want = [index.query(sk, top_k=3, min_join=4, mesh=mesh)
+                for sk in sks]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+
+
+class TestCompileBound:
+    """Acceptance (b): bursty traffic compiles a bounded program set."""
+
+    def test_randomized_bursty_workload_compile_bound(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(10)
+        index = _mixed_index(keys, y, rng)
+        svc = DiscoveryService(index=index, max_q_bucket=16)
+        queue = _mixed_queue(keys, y, rng, 64)
+        c0 = compile_count()
+        qi = 0
+        while qi < len(queue):  # random burst sizes: 1..16 queries
+            burst = int(rng.integers(1, 17))
+            svc.submit(queue[qi: qi + burst], top_k=3, min_join=4)
+            qi += burst
+        # in-bucket ingest mid-traffic must not mint new programs either
+        svc.add("cont_late", "k", "v", keys,
+                (0.7 * y + 0.3 * rng.normal(size=N_ROWS))
+                .astype(np.float32), False)
+        svc.submit(queue[:5], top_k=3, min_join=4)
+        compiles = compile_count() - c0
+        adm = svc.stats()["admission"]
+        n_groups = max(
+            len(sig) - 1 for sig in svc.admission.signatures
+        )
+        bound = (adm["signatures"] * n_groups * len(adm["q_buckets"]))
+        assert compiles <= bound, (compiles, bound, adm)
+        # and the bound is meaningfully small vs. the traffic
+        assert compiles < adm["submitted"]
+
+    def test_repeat_traffic_hits_plan_cache(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(11))
+        svc = DiscoveryService(index=index, max_q_bucket=8)
+        sks = _mixed_queue(keys, y, np.random.default_rng(12), 6)
+        svc.submit(sks, top_k=3, min_join=4)
+        misses = svc.plan_cache.stats["misses"]
+        c0 = compile_count()
+        svc.submit(sks, top_k=3, min_join=4)
+        svc.submit(list(reversed(sks)), top_k=3, min_join=4)
+        assert svc.plan_cache.stats["misses"] == misses  # all hits
+        assert compile_count() == c0  # zero new programs
+
+
+class TestDonatedIngest:
+    def test_flush_counters_partition_flushes(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(13))
+        index.plan(False)
+        index.add("late", "k", "v", keys, y.copy(), False)
+        index.plan(False)
+        stats = index.ingest_stats
+        flushes = stats["inplace_flushes"] + stats["copied_flushes"]
+        assert flushes >= 2  # initial flush + incremental append
+        # Donation support is a backend property: whichever column the
+        # backend lands in, every flush must be accounted exactly once.
+        if jax.default_backend() in ("cpu", "tpu", "gpu"):
+            assert stats["inplace_flushes"] > 0  # jax>=0.4.31 donates on all three
+
+    def test_donated_append_preserves_rows(self):
+        """In-place flushes must not corrupt previously-flushed rows."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(14)
+        index = SketchIndex(n=SK_N, method="tupsk")
+        vals = []
+        for i in range(6):
+            v = (y + i * rng.normal(size=N_ROWS)).astype(np.float32)
+            vals.append(v)
+            index.add(f"c{i}", "k", "v", keys, v, False)
+            index.stacked(False)  # flush (donated) after every add
+        rebuilt = SketchIndex(n=SK_N, method="tupsk")
+        for i, v in enumerate(vals):
+            rebuilt.add(f"c{i}", "k", "v", keys, v, False)
+        inc, ref = index.stacked(False), rebuilt.stacked(False)
+        for name in ("keys", "vals_f", "vals_u", "mask", "est_id"):
+            np.testing.assert_array_equal(
+                np.asarray(inc[name]), np.asarray(ref[name]))
