@@ -25,6 +25,7 @@ BENCHES = [
     ("table2", paper_tables.bench_table2_corpus),
     ("v_d", paper_tables.bench_v_d_performance),
     ("discovery", discovery_scale.bench_discovery_throughput),
+    ("discovery_prefilter", discovery_scale.bench_prefilter_large_corpus),
     ("kernels", discovery_scale.bench_kernel_hot_spots),
 ]
 

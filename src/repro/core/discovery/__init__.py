@@ -29,11 +29,21 @@ three layers, one module each:
     ``shard_map``, so every shard runs homogeneous programs and the
     top-k merge moves O(groups · shards · k) scalars).
 
+Retrieval is **two-phase** (joinability-gated): phase 1 is a cheap
+device-resident join-size prefilter — one vectorized ``searchsorted``
+intersect per (query, candidate) pair over the index's pre-fenced
+sorted keys — whose per-query shortlists (padded up a pow-two
+shortlist-size ladder) gate phase 2, the estimator-partitioned scoring
+of *only* the candidates that can pass ``min_join``.  Results are
+bit-identical to dense scoring + post-hoc filtering, at a cost that
+scales with the joinable fraction of the corpus instead of the corpus.
+
 On top of the three layers sits the serving front-end,
 :mod:`~repro.core.discovery.service`: :class:`DiscoveryService` runs
 admission control over arbitrary mixed/bursty query queues — per-
 estimator-signature batch splitting, pow-two Q-axis bucketing with a
-(corpus version, dtype, Q-bucket) plan cache, and dispatch-before-
+(corpus version, dtype, Q-bucket[, shortlist signature]) plan cache,
+``min_join`` pushed down into two-phase planning, and dispatch-before-
 transfer scheduling across the admitted buckets — while ``add`` ingests
 live through the index underneath.
 
@@ -69,17 +79,23 @@ from repro.core.discovery.executors import (
 from repro.core.discovery.index import CandidateMeta, SketchIndex
 from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
+    MIN_SHORTLIST,
     GroupPlan,
     PlanCache,
+    PlanLease,
     QueryPlan,
     ServicePlan,
+    Shortlist,
     bucket_queries,
     bucket_rows,
+    bucket_shortlist,
+    build_shortlists,
     estimator_id,
     make_plan,
     pack_group,
     partition_by_estimator,
     plan_signature,
+    shortlist_signature,
 )
 from repro.core.discovery.service import AdmissionStats, DiscoveryService
 
@@ -92,6 +108,10 @@ __all__ = [
     "GroupPlan",
     "ServicePlan",
     "PlanCache",
+    "PlanLease",
+    "Shortlist",
+    "build_shortlists",
+    "shortlist_signature",
     "make_plan",
     "pack_group",
     "partition_by_estimator",
@@ -99,7 +119,9 @@ __all__ = [
     "plan_signature",
     "bucket_rows",
     "bucket_queries",
+    "bucket_shortlist",
     "MAX_Q_BUCKET",
+    "MIN_SHORTLIST",
     "Executor",
     "PartitionedLocalExecutor",
     "BatchedExecutor",

@@ -41,6 +41,20 @@ dispatches them all before collecting any — dispatch-before-transfer
 across buckets, the same discipline the partitioned executor applies
 across groups.
 
+**Two-phase retrieval** rides the same dispatch/collect split, twice:
+``prefilter_dispatch`` enqueues the cheap join-size pass (one
+vectorized searchsorted intersect per (query, candidate) pair over the
+pre-fenced sorted keys — Q x C counts in one program per group, no
+value gathers, no estimator work), whose collected counts the planner
+turns into per-group shortlists; ``shortlist_dispatch`` (batched) /
+``shortlist_topk_dispatch`` (distributed) then gather and score *only*
+the survivors.  The mesh path prefilters shard-locally and merges
+shortlist winners on device — and needs no oversampling, because every
+scored candidate already passed ``min_join``.  Phase-1 counts are the
+scorers' own ``jnp.sum(mask)`` and phase-2 lanes run the same
+homogeneous scorer body, so two-phase results are bit-identical to the
+dense path at equal ``min_join``.
+
 The estimator-id -> estimator mapping lives in exactly one place
 (:func:`_estimate`); the legacy switch scorer (`score_batch`), the seed
 reference (`score_batch_reference`), and every partitioned program
@@ -58,7 +72,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import estimators
-from repro.core.join import effective_keys, sketch_join_jax, sketch_join_presorted
+from repro.core.join import (
+    effective_keys,
+    presorted_join_size,
+    sketch_join_jax,
+    sketch_join_presorted,
+)
 from repro.core.discovery.planner import (
     EST_DC_XD,
     EST_DC_YD,
@@ -66,6 +85,7 @@ from repro.core.discovery.planner import (
     EST_MLE,
     GroupPlan,
     QueryPlan,
+    _next_pow2,
     make_plan,
     pack_group,
     partition_by_estimator,
@@ -214,6 +234,125 @@ def _score_group_many(
     )(train_keys, train_vals_f, train_vals_u, train_mask)
 
 
+# ---------------------------------------------------------------------------
+# Two-phase retrieval programs: join-size prefilter + shortlist scoring.
+# ---------------------------------------------------------------------------
+
+
+def _join_sizes_impl(train_keys, train_mask, cand_keys, cand_mask):
+    """(Q, rows) join sizes: every query against every candidate row.
+
+    The phase-1 prefilter body — one ``searchsorted`` intersect per
+    (query, candidate) pair over the pre-fenced sorted keys the device
+    store already holds, no value gathers, no estimator work.  The
+    reduced ``matched`` vector is the very one the scorers sum, so
+    these counts are bit-identical (int32) to the dense path's join
+    sizes.
+    """
+
+    def one_q(tk, tm):
+        return jax.vmap(
+            lambda ck, cm: presorted_join_size(tk, tm, ck, cm)
+        )(cand_keys, cand_mask)
+
+    return jax.vmap(one_q)(train_keys, train_mask)
+
+
+# Local/batched phase-1 program: keyed on (Q-bucket, group bucket, cap)
+# shapes only — join sizes are estimator-independent, so every group on
+# the same bucket shares one compiled specialization.
+_join_sizes = jax.jit(_join_sizes_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("est_id", "k"))
+def _gather_score_group(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask, rows,
+    *, est_id: int, k: int,
+):
+    """Phase-2 fused gather-and-score: each query scores only its own
+    shortlist rows.
+
+    ``rows`` is (Q, s_bucket) group-row indices; the gather runs inside
+    the compiled program (XLA fuses it with the join), so the compact
+    (Q, s_bucket, cap) candidate batch never exists as a separate
+    dispatch.  Every (query, shortlist-slot) lane runs the exact
+    homogeneous scorer body the dense path runs on that (train row,
+    candidate row) pair — vmap lanes are data-parallel, so shortlist
+    scores are bit-identical to the dense (Q, bucket) run's entries.
+    Returns (mi (Q, s_bucket), js (Q, s_bucket)).
+    """
+    return jax.vmap(
+        lambda tk, tf, tu, tm, r: _score_group_impl(
+            tk, tf, tu, tm,
+            cand_keys[r], cand_vals_f[r], cand_vals_u[r], cand_mask[r],
+            est_id=est_id, k=k,
+        )
+    )(train_keys, train_vals_f, train_vals_u, train_mask, rows)
+
+
+@jax.jit
+def _gather_shortlist(keys, vals_f, vals_u, mask, rows):
+    """Device gather of shortlist rows into a compact (Q, S, cap) batch
+    (the mesh phase-2 operand — ``shard_map`` then shards the S axis)."""
+    return keys[rows], vals_f[rows], vals_u[rows], mask[rows]
+
+
+def _pad_rows_q(a: np.ndarray, q_bucket: int) -> np.ndarray:
+    """Pad a host (Q, ...) shortlist operand to ``q_bucket`` query lanes
+    by repeating lane 0 (the same discipline as :func:`pad_trains_q`)."""
+    q = a.shape[0]
+    if q_bucket <= q:
+        return a
+    return np.concatenate(
+        [a, np.broadcast_to(a[:1], (q_bucket - q,) + a.shape[1:])]
+    )
+
+
+class _PendingJoinSizes:
+    """Dispatched phase-1 prefilter: per-group (Q, bucket) join-size
+    matrices pending transfer.  ``collect`` is the first host sync and
+    returns [(group, js (q_live, bucket) np.int32), ...] — the operand
+    :func:`~repro.core.discovery.planner.build_shortlists` consumes."""
+
+    def __init__(self, blocks: list, q_live: int):
+        self._blocks = blocks
+        self._q_live = q_live
+
+    def collect(self):
+        q = self._q_live
+        return [(gp, np.asarray(_cut_q(js, q))) for gp, js in self._blocks]
+
+
+class _PendingShortlist:
+    """Dispatched phase-2 gather-and-score: per-group (Q, s_bucket)
+    score blocks pending transfer.  ``collect`` syncs once and returns
+    one (values, global indices, join sizes) triple per live query —
+    the concatenated group shortlists, fenced padding included (the
+    ranking layer drops sentinel indices)."""
+
+    def __init__(self, blocks: list, q_live: int):
+        self._blocks = blocks  # [(Shortlist, mi_dev (Qb, S))]
+        self._q_live = q_live
+
+    def collect(self):
+        q = self._q_live
+        host = [(sl, np.asarray(_cut_q(mi, q))) for sl, mi in self._blocks]
+        out = []
+        for qi in range(q):
+            if not host:
+                out.append((np.zeros(0, np.float32),
+                            np.zeros(0, np.int64),
+                            np.zeros(0, np.int32)))
+                continue
+            out.append((
+                np.concatenate([mi[qi] for _, mi in host]),
+                np.concatenate([sl.gidx[qi] for sl, _ in host]),
+                np.concatenate([sl.js[qi] for sl, _ in host]),
+            ))
+        return out
+
+
 def stack_trains(trains: list[dict]) -> dict:
     """Stack single-query train dicts into one leading-Q-axis dict."""
     if not trains:
@@ -314,21 +453,38 @@ class _PendingScores:
 
 
 class _PendingTopk:
-    """Dispatched distributed top-k: device-merged (Q, k_final) triples
+    """Dispatched distributed top-k: device-merged (Q, k_merge) triples
     pending transfer.  ``collect`` syncs once and returns one
-    (values, global indices, join sizes) triple per live query."""
+    (values, global indices, join sizes) triple per live query.
 
-    def __init__(self, vals, gidx, jsz, q_live: int):
+    The on-device merge keeps a pow-2-bucketed ``k_merge`` columns (so
+    merge programs ride the same k-ladder as the shard scorers);
+    ``k_live`` is the exact requested result count, sliced off on the
+    host — the merge output is ordered best-first, so the first
+    ``k_live`` columns of a wider merge are the same values.  An empty
+    handle (``vals is None`` — every shortlist came back empty) yields
+    zero-length triples.
+    """
+
+    def __init__(self, vals, gidx, jsz, q_live: int, k_live: int | None = None):
         self._vals = vals
         self._gidx = gidx
         self._jsz = jsz
         self._q_live = q_live
+        self._k_live = k_live
 
     def collect(self):
         q = self._q_live
+        if self._vals is None:
+            empty = (np.zeros(0, np.float32), np.zeros(0, np.int64),
+                     np.zeros(0, np.int32))
+            return [empty for _ in range(q)]
+        kl = self._k_live
         v = np.asarray(_cut_q(self._vals, q))
         gi = np.asarray(_cut_q(self._gidx, q)).astype(np.int64)
         js = np.asarray(_cut_q(self._jsz, q))
+        if kl is not None and kl < v.shape[1]:
+            v, gi, js = v[:, :kl], gi[:, :kl], js[:, :kl]
         return [(v[i], gi[i], js[i]) for i in range(q)]
 
 
@@ -459,18 +615,67 @@ class BatchedExecutor(Executor):
     def execute(self, plan, trains, *, q_bucket: int | None = None):
         return self.dispatch(plan, trains, q_bucket=q_bucket).collect()
 
+    # -- two-phase retrieval ------------------------------------------------
+
+    def prefilter_dispatch(self, plan, trains, *, q_bucket: int | None = None):
+        """Phase 1: enqueue the join-size prefilter for every group —
+        no scoring, no host sync.  The returned handle's ``collect``
+        yields the (group, join-size matrix) pairs that
+        :func:`~repro.core.discovery.planner.build_shortlists` turns
+        into phase-2 shortlists."""
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        blocks = [
+            (gp, _join_sizes(trains["keys"], trains["mask"],
+                             gp.arrays["keys"], gp.arrays["mask"]))
+            for gp in plan.groups
+        ]
+        return _PendingJoinSizes(blocks, Q)
+
+    def shortlist_dispatch(
+        self, plan, trains, shortlists, *, q_bucket: int | None = None,
+    ):
+        """Phase 2: enqueue the fused gather-and-score program for every
+        non-empty shortlist; the handle's ``collect`` returns per-query
+        (values, global indices, join sizes) triples over exactly the
+        candidates that passed the prefilter."""
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        qb = q_bucket or Q
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        blocks = []
+        for sl in shortlists:
+            if sl is None:
+                continue
+            rows = jnp.asarray(_pad_rows_q(sl.rows, qb))
+            mi, _ = _gather_score_group(
+                *t_args, *_cand_args(sl.group), rows,
+                est_id=sl.group.est_id, k=self.k,
+            )
+            blocks.append((sl, mi))
+        return _PendingShortlist(blocks, Q)
+
 
 def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
     """Per-shard and global result counts for a distributed top-k.
 
-    ``lax.top_k`` inside a shard cannot exceed the shard's candidate
-    count, but clamping must never shrink the *global* result below
-    ``min(top_k, C)``: every shard keeps ``min(top_k, shard_size)``
-    (all global top-k could live in one shard), and the merge returns
+    ``k_shard`` rides a small pow-2 ladder (next power of two >=
+    ``top_k``, clamped to the shard size): each (Q-bucket, k-bucket)
+    pair — not each exact ``top_k`` — compiles its own ``shard_map``
+    program, so varied top-k traffic stops minting shard programs.  A
+    ladder ``k_shard`` only ever *over*-keeps per shard, and clamping
+    must never shrink the *global* result below ``min(top_k, C)``:
+    every shard keeps ``min(k_bucket, shard_size)`` (all global top-k
+    could live in one shard), and the merge returns
     ``min(top_k, shards · per_shard)``.
     """
     shard_size = c_padded // n_shards
-    k_shard = max(min(top_k, shard_size), 1)
+    k_shard = max(min(_next_pow2(top_k), shard_size), 1)
     k_final = min(top_k, n_shards * k_shard)
     return k_shard, k_final
 
@@ -510,11 +715,7 @@ def _make_group_shard_scorer(mesh: Mesh, est_id: int, k_shard: int, k: int):
         out_specs=(sh, sh) if k_shard == 0 else (sh, sh, sh),
         check=False,
     )
-    jitted = jax.jit(fn)
-    _SHARD_SCORERS.append(jitted)
-    if len(_SHARD_SCORERS) > _SHARD_SCORER_REGISTRY_MAX:
-        del _SHARD_SCORERS[0]
-    return jitted
+    return _register_shard_scorer(jax.jit(fn))
 
 
 # Every jitted shard scorer built, so compile_count() can see them (the
@@ -527,6 +728,67 @@ _SHARD_SCORERS: list = []
 _SHARD_SCORER_REGISTRY_MAX = 512
 
 
+def _register_shard_scorer(jitted):
+    _SHARD_SCORERS.append(jitted)
+    if len(_SHARD_SCORERS) > _SHARD_SCORER_REGISTRY_MAX:
+        del _SHARD_SCORERS[0]
+    return jitted
+
+
+@functools.lru_cache(maxsize=16)
+def _make_join_size_shard_scorer(mesh: Mesh):
+    """Compiled shard_map join-size prefilter: candidate rows sharded
+    over 'data', the (Q, cap) train keys/mask replicated, (Q, rows)
+    int32 join sizes out.  Estimator-independent — one program per mesh
+    serves every group; jit's shape cache handles the bucket ladder."""
+    axis = "data"
+    fn = shard_map(
+        _join_sizes_impl,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis)),
+        out_specs=P(None, axis),
+        check=False,
+    )
+    return _register_shard_scorer(jax.jit(fn))
+
+
+@functools.lru_cache(maxsize=128)
+def _make_shortlist_shard_scorer(mesh: Mesh, est_id: int, k_shard: int, k: int):
+    """Compiled shard_map phase-2 scorer for one estimator group's
+    shortlist: the gathered compact (Q, s_bucket, cap) candidate batch
+    is sharded over the shortlist axis, trains replicated; each shard
+    scores its slots (every (query, slot) lane runs the homogeneous
+    scorer body on its own gathered row), fences dead slots to -inf via
+    ``live``, and emits its top ``k_shard`` per query with global
+    candidate ids and join sizes gathered alongside — ready for the
+    cross-group on-device merge."""
+    axis = "data"
+    sh = P(None, axis)
+
+    def local(tk, tf, tu, tm, ck, cf, cu, cm, gi, live):
+        mi, js = jax.vmap(
+            lambda a, b, c, d, e, f, g, h: _score_group_impl(
+                a, b, c, d, e, f, g, h, est_id=est_id, k=k
+            )
+        )(tk, tf, tu, tm, ck, cf, cu, cm)
+        fenced = jnp.where(live, mi, -jnp.inf)
+        v, i = jax.lax.top_k(fenced, k_shard)
+        return (
+            v,
+            jnp.take_along_axis(gi, i, axis=1),
+            jnp.take_along_axis(js, i, axis=1),
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), sh, sh, sh, sh, sh, sh),
+        out_specs=(sh, sh, sh),
+        check=False,
+    )
+    return _register_shard_scorer(jax.jit(fn))
+
+
 def compile_count() -> int:
     """Total compiled specializations across the discovery scorer
     programs — the admission-control test hook.
@@ -534,10 +796,13 @@ def compile_count() -> int:
     Sums the jit-cache entry counts of every scorer entry point (each
     entry is one traced+compiled (est_id, shape) specialization), so a
     test can assert that a bursty mixed workload compiles at most
-    |estimator signatures| x |Q-buckets| x |group buckets| programs.
+    |estimator signatures| x |Q-buckets| x |group buckets| programs —
+    and, for two-phase retrieval, that randomized ``min_join``
+    selectivity stays bounded by the shortlist-bucket ladder.
     """
     fns = [_score_group, _score_group_many, score_batch,
            score_batch_reference, _globalize_rows, _merge_topk_device,
+           _join_sizes, _gather_score_group, _gather_shortlist,
            *_SHARD_SCORERS]
     return sum(
         f._cache_size() for f in fns if hasattr(f, "_cache_size")
@@ -678,14 +943,88 @@ class GroupMajorDistributedExecutor(Executor):
         flat_v = jnp.concatenate(vs, axis=1)
         flat_gi = jnp.concatenate(gis, axis=1)
         flat_js = jnp.concatenate(jss, axis=1)
-        k_final = min(top_k, int(flat_v.shape[1]))
+        width = int(flat_v.shape[1])
+        # Merge on the same pow-2 k-ladder as the shard scorers; the
+        # exact result count is sliced off host-side at collect.
+        k_merge = min(_next_pow2(top_k), width)
         vals, gidx, jsz = _merge_topk_device(
-            flat_v, flat_gi, flat_js, k_final=k_final
+            flat_v, flat_gi, flat_js, k_final=k_merge
         )
-        return _PendingTopk(vals, gidx, jsz, Q)
+        return _PendingTopk(vals, gidx, jsz, Q, k_live=min(top_k, width))
 
     def topk(self, plan, trains, top_k):
         return self.topk_dispatch(plan, trains, top_k).collect()
+
+    # -- two-phase retrieval ------------------------------------------------
+
+    def prefilter_dispatch(self, plan, trains, *, q_bucket: int | None = None):
+        """Phase 1 on the mesh: every group's join-size prefilter runs
+        shard-locally (candidate rows sharded over 'data', trains
+        replicated) — the cheap pass scales with the mesh exactly like
+        the scorers do.  Returns the shard-padded groups' join sizes;
+        pass ``multiple=mesh.shape['data']`` to ``build_shortlists`` so
+        phase-2 shortlist buckets stay shardable."""
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        _, groups, _ = self._groups(plan)
+        fn = _make_join_size_shard_scorer(self.mesh)
+        blocks = [
+            (gp, fn(trains["keys"], trains["mask"],
+                    gp.arrays["keys"], gp.arrays["mask"]))
+            for gp in groups
+        ]
+        return _PendingJoinSizes(blocks, Q)
+
+    def shortlist_topk_dispatch(
+        self, plan, trains, shortlists, top_k: int,
+        *, q_bucket: int | None = None,
+    ):
+        """Phase 2 on the mesh: gather each non-empty shortlist into a
+        compact (Q, s_bucket, cap) batch, score it sharded over the
+        shortlist axis, and merge the per-shard/per-group winners on
+        device (the same single ``lax.top_k`` discipline as the dense
+        path).  No oversampling: every scored candidate already passed
+        ``min_join``, so ``top_k`` winners are exact — the 4x dense-path
+        oversample against post-hoc filtering starvation is gone."""
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        qb = q_bucket or Q
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        n_shards = self.mesh.shape["data"]
+        vs, gis, jss = [], [], []
+        for sl in shortlists:
+            if sl is None:
+                continue
+            rows = jnp.asarray(_pad_rows_q(sl.rows, qb))
+            cands = _gather_shortlist(*_cand_args(sl.group), rows)
+            gi = jnp.asarray(_pad_rows_q(sl.gidx, qb).astype(np.int32))
+            live = jnp.asarray(
+                _pad_rows_q(sl.gidx < plan.n_candidates, qb)
+            )
+            k_shard, _ = _shard_topk_plan(sl.s_bucket, n_shards, top_k)
+            fn = _make_shortlist_shard_scorer(
+                self.mesh, sl.group.est_id, k_shard, self.k
+            )
+            v, g, j = fn(*t_args, *cands, gi, live)
+            vs.append(v)
+            gis.append(g)
+            jss.append(j)
+        if not vs:
+            return _PendingTopk(None, None, None, Q)
+        flat_v = jnp.concatenate(vs, axis=1)
+        flat_gi = jnp.concatenate(gis, axis=1)
+        flat_js = jnp.concatenate(jss, axis=1)
+        width = int(flat_v.shape[1])
+        k_merge = min(_next_pow2(top_k), width)
+        vals, gidx, jsz = _merge_topk_device(
+            flat_v, flat_gi, flat_js, k_final=k_merge
+        )
+        return _PendingTopk(vals, gidx, jsz, Q, k_live=min(top_k, width))
 
 
 def get_executor(

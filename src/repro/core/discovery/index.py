@@ -26,7 +26,17 @@ re-stacks and of silent clones.
 
 Candidate keys are stored in *effective* form (masked slots fenced to
 0xFFFFFFFF at flush time — :func:`repro.core.join.effective_keys`), so
-the per-query key remap disappears from every scorer.
+the per-query key remap disappears from every scorer — and so the
+two-phase prefilter's batched join-size pass can run straight over the
+stored arrays with one ``searchsorted`` per (query, candidate) pair.
+``query``/``query_many`` push the ``min_join`` predicate down into that
+pass by default: only candidates that can survive the ranking filter
+are gathered into compact device batches and scored (bit-identical to
+dense scoring + post-hoc filtering; see ``executors.py``).
+
+Donated flushes delete superseded buffers; external consumers that
+need a stable corpus snapshot across ingest take ``plan().retain()``
+(see ``planner.PlanLease``) — while a lease is live, flushes copy.
 """
 
 from __future__ import annotations
@@ -46,6 +56,8 @@ from repro.core.discovery.planner import (
     GroupPlan,
     MIN_BUCKET,
     QueryPlan,
+    _PlanPins,
+    build_shortlists,
     estimator_id,
 )
 from repro.core.sketch import Sketch, build_sketch
@@ -75,19 +87,24 @@ class CandidateMeta:
     value_is_discrete: bool
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _write_block_donated(buf, block, row0):
+def _write_block_impl(buf, block, row0):
     """Append ``block`` rows at ``row0`` (traced scalar — one compiled
-    program per block shape serves every offset).
-
-    The store buffer is *donated*: XLA aliases input to output, so on
-    backends that honor donation the flush updates the buffer in place
-    — zero-copy ingest — instead of cloning cap_rows x cap_cols bytes
-    per flush.  Whether donation actually happened is observable (the
-    donor array reports ``is_deleted()``), which is what the
-    ``ingest_stats`` in-place/copied flush counters report.
-    """
+    program per block shape serves every offset)."""
     return jax.lax.dynamic_update_slice(buf, block, (row0, 0))
+
+
+# The store buffer is *donated*: XLA aliases input to output, so on
+# backends that honor donation the flush updates the buffer in place —
+# zero-copy ingest — instead of cloning cap_rows x cap_cols bytes per
+# flush.  Whether donation actually happened is observable (the donor
+# array reports ``is_deleted()``), which is what the ``ingest_stats``
+# in-place/copied flush counters report.
+_write_block_donated = jax.jit(_write_block_impl, donate_argnums=(0,))
+
+# Donation-free variant: used while a PlanLease pins the corpus — the
+# pre-flush buffer must survive for the retained plan, so the flush
+# pays the XLA clone the donated path avoids.
+_write_block_copied = jax.jit(_write_block_impl)
 
 
 _DTYPES = {
@@ -143,7 +160,9 @@ class _DeviceStore:
             self.grows += 1
         self.cap_rows = new_cap
 
-    def append_block(self, block: dict[str, np.ndarray]) -> None:
+    def append_block(
+        self, block: dict[str, np.ndarray], donate: bool = True,
+    ) -> None:
         """Flush ``block`` rows into the device store.
 
         The store buffers are *donated* to the update program, so on
@@ -151,22 +170,27 @@ class _DeviceStore:
         bytes that move are the new rows' h2d upload, not a cap_rows-
         sized device clone per flush.  Consequence: any stale external
         reference to the pre-flush buffers (a plan captured before an
-        ``add``) is deleted by donation; all in-repo consumers re-fetch
-        through the version-checked caches, which is the supported path.
-        ``inplace_flushes``/``copied_flushes`` count what the backend
-        actually did (a donated donor array reports ``is_deleted()``).
+        ``add``) is deleted by donation; in-repo consumers re-fetch
+        through the version-checked caches, and external consumers that
+        must keep a snapshot take a ``plan.retain()`` lease — while one
+        is live the index passes ``donate=False`` and the flush copies,
+        keeping the retained buffers valid (counted under
+        ``copied_flushes``).  ``inplace_flushes``/``copied_flushes``
+        count what actually happened (a donated donor array reports
+        ``is_deleted()``).
         """
         n_new = block["keys"].shape[0]
         if n_new == 0:
             return
         self.ensure_rows(self.rows + n_new)
         row0 = np.int32(self.rows)
+        write = _write_block_donated if donate else _write_block_copied
         old = self.arrays
         self.arrays = {
-            name: _write_block_donated(a, jnp.asarray(block[name]), row0)
+            name: write(a, jnp.asarray(block[name]), row0)
             for name, a in old.items()
         }
-        if all(a.is_deleted() for a in old.values()):
+        if donate and all(a.is_deleted() for a in old.values()):
             self.inplace_flushes += 1
         else:
             self.copied_flushes += 1
@@ -199,6 +223,10 @@ class SketchIndex:
         self._discrete: list[bool] = []
         self._cap_cols: int | None = None
         self._version = 0
+        # Retain-epoch counter shared with every plan this index builds:
+        # while any plan lease is live, flushes copy instead of donating
+        # (see QueryPlan.retain / _DeviceStore.append_block).
+        self._pins = _PlanPins()
         self._store: _DeviceStore | None = None
         self._groups: dict[bool, _GroupState] = {}
         self._stacked_cache: dict[tuple[bool, int], tuple[int, dict]] = {}
@@ -329,7 +357,9 @@ class SketchIndex:
             self._store = _DeviceStore(self._cap_cols)
         pending = list(range(self._store.rows, len(self.meta)))
         if pending:
-            self._store.append_block(self._host_block(pending))
+            self._store.append_block(
+                self._host_block(pending), donate=self._pins.count == 0
+            )
         return self._store
 
     def _flush_groups(self, y_discrete: bool) -> _GroupState:
@@ -344,7 +374,9 @@ class SketchIndex:
                 store = state.stores.setdefault(
                     eid, _DeviceStore(self._cap_cols)
                 )
-                store.append_block(self._host_block(idx))
+                store.append_block(
+                    self._host_block(idx), donate=self._pins.count == 0
+                )
                 state.index.setdefault(eid, []).extend(idx)
             state.flushed = C
         return state
@@ -413,7 +445,7 @@ class SketchIndex:
             ])
             live = jnp.asarray(np.arange(store.cap_rows) < g)
             groups.append(GroupPlan(eid, store.arrays, index, live, g))
-        plan = QueryPlan(y_is_discrete, C, groups)
+        plan = QueryPlan(y_is_discrete, C, groups, pins=self._pins)
         self._plan_cache[y_is_discrete] = (self._version, plan)
         return plan
 
@@ -442,7 +474,12 @@ class SketchIndex:
 
     def _rank(self, v, gi, js, top_k: int, min_join: int) -> list:
         C = len(self.meta)
-        order = np.argsort(-np.where(js >= min_join, v, -np.inf))
+        # Deterministic order: score descending, global candidate index
+        # ascending on ties (lexsort's last key is primary).  The tie
+        # rule is what makes shortlist-path rankings — whose inputs are
+        # a filtered, group-major-concatenated subset of the dense
+        # score vector — bit-identical to dense rankings.
+        order = np.lexsort((gi, -np.where(js >= min_join, v, -np.inf)))
         out = []
         for idx in order:
             if gi[idx] >= C or js[idx] < min_join:
@@ -452,17 +489,60 @@ class SketchIndex:
                 break
         return out
 
+    @staticmethod
+    def _use_prefilter(prefilter: bool | None, min_join: int) -> bool:
+        # Auto: a positive min_join is a real predicate worth pushing
+        # down; min_join <= 0 passes everything, so phase 1 would only
+        # add work.  Explicit True/False overrides for tests/benches.
+        return (min_join > 0) if prefilter is None else bool(prefilter)
+
+    def _two_phase(self, plan: QueryPlan, trains, top_k: int,
+                   min_join: int, mesh: Mesh | None, k: int) -> list:
+        """Joinability-gated retrieval: join-size prefilter shortlists
+        (phase 1), then gather-and-score only the survivors (phase 2).
+        Returns one ranked result list per query — bit-identical to the
+        dense path at equal ``min_join`` (phase 1 reduces the same
+        match mask the scorers sum; phase-2 lanes run the same
+        homogeneous scorer body; ranking order is (score, index))."""
+        if mesh is not None:
+            ex = self._distributed_executor(mesh, k)
+            shortlists = build_shortlists(
+                plan, ex.prefilter_dispatch(plan, trains).collect(),
+                min_join, multiple=mesh.shape["data"],
+            )
+            triples = ex.shortlist_topk_dispatch(
+                plan, trains, shortlists, top_k
+            ).collect()
+        else:
+            ex = _ex.BatchedExecutor(k=k)
+            shortlists = build_shortlists(
+                plan, ex.prefilter_dispatch(plan, trains).collect(),
+                min_join,
+            )
+            triples = ex.shortlist_dispatch(plan, trains, shortlists).collect()
+        return [
+            self._rank(v, gi, js, top_k, min_join) for v, gi, js in triples
+        ]
+
     def query(self, train_sketch: Sketch, top_k: int = 10,
-              mesh: Mesh | None = None, min_join: int = 8, k: int = 3):
+              mesh: Mesh | None = None, min_join: int = 8, k: int = 3,
+              prefilter: bool | None = None):
         """Rank candidates by estimated MI with the train target.
 
         ``k`` is the KSG-family neighbor count the estimators score
-        with (one compiled-program family per k).  Returns a list of
-        (CandidateMeta, mi, join_size), best first.
+        with (one compiled-program family per k).  ``prefilter`` picks
+        two-phase retrieval (default: on whenever ``min_join`` > 0):
+        a device-resident join-size pass shortlists the candidates that
+        can pass ``min_join``, and only those are gathered and scored —
+        results are bit-identical to the dense path, which scored every
+        candidate and discarded the sub-``min_join`` ones afterwards.
+        Returns a list of (CandidateMeta, mi, join_size), best first.
         """
         train = self.train_arrays(train_sketch)
         C = len(self.meta)
         plan = self.plan(train_sketch.value_is_discrete)
+        if self._use_prefilter(prefilter, min_join):
+            return self._two_phase(plan, train, top_k, min_join, mesh, k)[0]
         if mesh is not None:
             ex = self._distributed_executor(mesh, k)
             # Oversample so the min_join post-filter can discard
@@ -477,7 +557,8 @@ class SketchIndex:
 
     def query_many(self, train_sketches: list[Sketch], top_k: int = 10,
                    min_join: int = 8, mesh: Mesh | None = None,
-                   executor=None, k: int = 3):
+                   executor=None, k: int = 3,
+                   prefilter: bool | None = None):
         """Answer Q concurrent discovery queries in one executor pass.
 
         All train sketches must share one target dtype (the estimator
@@ -485,7 +566,14 @@ class SketchIndex:
         backend is the multi-query :class:`~repro.core.discovery.executors
         .BatchedExecutor` — one compiled program per estimator group with
         a leading Q axis — whose scores are bit-identical to Q looped
-        :meth:`query` calls.  Returns one result list per train sketch.
+        :meth:`query` calls.  ``prefilter`` (default: on for
+        ``min_join`` > 0) routes the batch through two-phase retrieval:
+        one batched join-size program per group shortlists all Q
+        queries at once, then only shortlist candidates are gathered
+        and scored.  Passing ``executor=`` keeps the dense path (the
+        pushdown picks its own backend); combining it with an explicit
+        ``prefilter=True`` raises.  Returns one result list per train
+        sketch.
         """
         if not train_sketches:
             return []
@@ -499,6 +587,18 @@ class SketchIndex:
         trains = _ex.stack_trains_host(train_sketches)
         plan = self.plan(y_disc)
         C = len(self.meta)
+        if executor is not None and prefilter:
+            # An explicit two-phase request cannot be honored through an
+            # arbitrary executor (the prefilter needs the gather-and-
+            # score surface); fail loudly instead of silently scoring
+            # the whole corpus dense.
+            raise ValueError(
+                "prefilter=True is incompatible with executor=: the "
+                "two-phase path picks its own backend (drop executor=, "
+                "or pass prefilter=False/None for dense scoring)"
+            )
+        if self._use_prefilter(prefilter, min_join) and executor is None:
+            return self._two_phase(plan, trains, top_k, min_join, mesh, k)
         if executor is None:
             ex = (self._distributed_executor(mesh, k) if mesh is not None
                   else _ex.BatchedExecutor(k=k))

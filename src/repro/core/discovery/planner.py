@@ -37,13 +37,29 @@ Layout decisions made here:
     live lane and are sliced off before results leave the executor;
     vmap lanes are data-parallel, so live lanes are bit-identical to an
     unpadded run.
+  * **Shortlist ladder** — two-phase retrieval adds a third padded
+    axis: the join-size prefilter yields a different survivor count per
+    (query batch, ``min_join``), and :func:`bucket_shortlist` pads it
+    up its own pow-two ladder so the phase-2 gather-and-score programs
+    are keyed on (estimator, Q-bucket, shortlist bucket) — bounded
+    compiles under arbitrary predicate selectivity.
+    :func:`build_shortlists` is the host-side phase boundary: it turns
+    the collected (Q, bucket) join sizes into per-group
+    :class:`Shortlist` layouts (ascending candidate order, sentinel-
+    fenced padding) that any executor's phase-2 can gather from.
 
 The admission-control bookkeeping on top of the ladders lives in
 :class:`PlanCache`: one entry per (corpus version, target dtype,
-Q-bucket), each pinning the :class:`QueryPlan` together with its
-*estimator signature* — the (est_id, bucket) tuple that fully
-determines the compiled programs a batch will hit.  The service layer
-(``service.py``) keys its batches on that signature.
+Q-bucket[, shortlist signature]), each pinning the :class:`QueryPlan`
+together with its *estimator signature* — the (est_id, bucket) tuple
+that fully determines the compiled programs a batch will hit.  The
+service layer (``service.py``) keys its batches on that signature.
+
+Plans built by a :class:`~repro.core.discovery.index.SketchIndex` also
+carry a retain-epoch hook (:meth:`QueryPlan.retain` ->
+:class:`PlanLease`): donated in-place ingest flushes delete superseded
+device buffers, so an external consumer pinning a corpus snapshot
+takes a lease, during which flushes copy instead of donating.
 """
 
 from __future__ import annotations
@@ -66,11 +82,17 @@ __all__ = [
     "partition_by_estimator",
     "bucket_rows",
     "bucket_queries",
+    "bucket_shortlist",
     "MIN_BUCKET",
     "MAX_Q_BUCKET",
+    "MIN_SHORTLIST",
     "GroupPlan",
     "QueryPlan",
+    "PlanLease",
+    "Shortlist",
+    "build_shortlists",
     "plan_signature",
+    "shortlist_signature",
     "ServicePlan",
     "PlanCache",
     "pack_group",
@@ -90,6 +112,12 @@ MIN_BUCKET = 8
 # shape set (Q-buckets = 1, 2, 4, ..., MAX_Q_BUCKET) and the device
 # memory a single burst can pin.
 MAX_Q_BUCKET = 64
+
+# Smallest bucket on the shortlist-size ladder (two-phase retrieval).
+# A prefilter pass that passes 1..8 candidates per query pads to the
+# same 8-slot shortlist, so the phase-2 gather-and-score programs are
+# keyed on a pow-2 shortlist axis just like rows and Q.
+MIN_SHORTLIST = 8
 
 
 def estimator_id(x_discrete: bool, y_discrete: bool) -> int:
@@ -119,6 +147,22 @@ def bucket_rows(n: int, multiple: int = 1) -> int:
     to ``multiple`` (a mesh shard count) when it does not already divide
     — for power-of-two shard counts the ladder is unchanged."""
     b = _next_pow2(max(n, MIN_BUCKET))
+    if multiple > 1 and b % multiple:
+        b = -(-b // multiple) * multiple
+    return b
+
+
+def bucket_shortlist(n: int, multiple: int = 1) -> int:
+    """Shortlist-size ladder bucket for ``n`` prefilter survivors.
+
+    Next power of two >= max(n, MIN_SHORTLIST), rounded up to
+    ``multiple`` (a mesh shard count) when it does not already divide.
+    Phase-2 gather-and-score programs are compiled per (Q-bucket,
+    shortlist bucket, estimator) — this ladder is what keeps that set
+    bounded no matter how selective each individual query's ``min_join``
+    turns out to be.
+    """
+    b = _next_pow2(max(n, MIN_SHORTLIST))
     if multiple > 1 and b % multiple:
         b = -(-b // multiple) * multiple
     return b
@@ -164,6 +208,45 @@ class GroupPlan:
         return int(self.live.shape[0])
 
 
+class _PlanPins:
+    """Shared retain-epoch counter between an index and its plans.
+
+    While ``count > 0`` the owning index's ingest flushes must not
+    donate store buffers (donation deletes them out from under any
+    retained plan); they fall back to the XLA-clone path until every
+    lease is released.  One counter per index — a lease pins the whole
+    corpus snapshot, not a single dtype's layout, because all group
+    stores flush through the same donation decision.
+    """
+
+    def __init__(self):
+        self.count = 0
+
+
+class PlanLease:
+    """A retained corpus snapshot: while held, ingest flushes copy
+    instead of donating, so the plan's device buffers stay valid.
+    Release exactly once (``release()`` is idempotent); usable as a
+    context manager."""
+
+    def __init__(self, pins: _PlanPins, plan: "QueryPlan"):
+        self._pins = pins
+        self.plan = plan
+        self._released = False
+        pins.count += 1
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._pins.count -= 1
+
+    def __enter__(self) -> "PlanLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
 @dataclass(frozen=True)
 class QueryPlan:
     """Everything an executor needs to score one corpus layout."""
@@ -172,6 +255,27 @@ class QueryPlan:
     n_candidates: int  # live candidates (original order length)
     groups: list[GroupPlan] = field(default_factory=list)
     pad_multiple: int = 1  # shard-count multiple baked into buckets
+    # Retain-epoch counter of the owning SketchIndex (None for ad-hoc
+    # plans built by make_plan, which own their buffers outright).
+    pins: object = field(default=None, compare=False, repr=False)
+
+    def retain(self) -> PlanLease:
+        """Pin this plan's device buffers across ingest flushes.
+
+        Donated in-place flushes delete superseded store buffers by
+        design; a long-running external consumer that wants to keep
+        executing against *this* corpus snapshot takes a lease.  While
+        any lease is live the index's flushes copy instead of donating
+        (``copied_flushes`` counts them), so the retained plan's arrays
+        survive interleaved ``add`` + flush cycles.  Release the lease
+        to restore zero-copy ingest.
+        """
+        if self.pins is None:
+            raise ValueError(
+                "this plan was not built by a SketchIndex; ad-hoc plans "
+                "own their buffers and need no lease"
+            )
+        return PlanLease(self.pins, self)
 
 
 def pack_group(
@@ -216,6 +320,97 @@ def plan_signature(plan: QueryPlan) -> tuple:
 
 
 @dataclass(frozen=True)
+class Shortlist:
+    """Phase-2 layout for one estimator group: which group rows survived
+    the join-size prefilter, per query.
+
+    ``rows`` is the device gather operand — (Q, s_bucket) group-row
+    indices, ascending per query (so stable ranking ties resolve
+    exactly as in the dense path), padded with row 0.  Padded slots are
+    fenced by ``gidx`` = ``n_candidates`` (the dead-candidate sentinel
+    every result filter already drops) and ``js`` = 0; their scores are
+    computed (pad rows are real data, so every lane runs the live-lane
+    program) but never leave the ranking layer.
+    """
+
+    group: GroupPlan
+    rows: np.ndarray  # (Q, s_bucket) int32 group-row indices, pad -> 0
+    gidx: np.ndarray  # (Q, s_bucket) int64 global ids, pad -> sentinel
+    js: np.ndarray  # (Q, s_bucket) int32 join sizes, pad -> 0
+    s_bucket: int
+    shortlisted: int  # live (query, candidate) entries across all Q
+
+
+def build_shortlists(
+    plan: QueryPlan,
+    js_blocks: list,
+    min_join: int,
+    multiple: int = 1,
+) -> list:
+    """Turn phase-1 join sizes into per-group phase-2 shortlists.
+
+    ``js_blocks`` pairs each :class:`GroupPlan` with its host (Q,
+    bucket) join-size matrix.  Rows passing ``min_join`` (dead bucket
+    rows never do more than vacuously — they are fenced on the live
+    mask) become the shortlist, padded up the pow-2
+    :func:`bucket_shortlist` ladder shared across the batch's queries;
+    a group none of whose candidates pass for any query yields ``None``
+    and phase 2 skips it entirely.  Shortlist order is ascending group
+    row == ascending global candidate index, which together with the
+    ranking layer's stable (score, index) order makes two-phase results
+    bit-identical to dense scoring + post-hoc filtering.
+    """
+    out = []
+    for gp, js in js_blocks:
+        js = np.asarray(js)
+        Q = js.shape[0]
+        live = np.asarray(gp.index) < plan.n_candidates  # (bucket,)
+        passing = (js >= min_join) & live[None, :]
+        counts = passing.sum(axis=1)
+        s_max = int(counts.max(initial=0))
+        if s_max == 0:
+            out.append(None)
+            continue
+        s_bucket = min(
+            bucket_shortlist(s_max, multiple),
+            bucket_rows(gp.bucket, multiple),
+        )
+        # Stable argsort of (not passing) puts each query's passing
+        # rows first, in ascending row order; trailing lanes are fenced
+        # below, so their (failing-row) indices never surface.  A
+        # non-pow-2 ``multiple`` can push s_bucket past the group
+        # bucket — the extra lanes are pure padding (row 0, fenced).
+        take = min(s_bucket, passing.shape[1])
+        order = np.argsort(~passing, axis=1, kind="stable")[:, :take]
+        if take < s_bucket:
+            order = np.concatenate(
+                [order, np.zeros((Q, s_bucket - take), order.dtype)],
+                axis=1,
+            )
+        lane_live = np.arange(s_bucket)[None, :] < counts[:, None]
+        rows = np.where(lane_live, order, 0).astype(np.int32)
+        gidx = np.where(
+            lane_live, gp.index[order], np.int64(plan.n_candidates)
+        )
+        jsz = np.where(
+            lane_live, np.take_along_axis(js, order, axis=1), 0
+        ).astype(np.int32)
+        out.append(Shortlist(gp, rows, gidx, jsz, s_bucket, int(counts.sum())))
+    return out
+
+
+def shortlist_signature(shortlists: list) -> tuple:
+    """Compiled-program signature of a phase-2 pass: ((est_id,
+    s_bucket), ...) over the non-empty groups.  Together with the dense
+    ``plan_signature`` and the Q-bucket this pins every shape a
+    two-phase batch compiles, so the admission cache can key on it."""
+    return tuple(
+        (sl.group.est_id, sl.s_bucket)
+        for sl in shortlists if sl is not None
+    )
+
+
+@dataclass(frozen=True)
 class ServicePlan:
     """One admitted batch layout: a corpus plan plus its Q-bucket.
 
@@ -223,20 +418,24 @@ class ServicePlan:
     for a batch — ``signature`` for the candidate side, ``q_bucket`` for
     the query side — so a :class:`PlanCache` hit guarantees zero new
     compiles (jit's shape cache underneath sees only repeat shapes).
+    Two-phase batches carry a third axis: ``s_key``, the shortlist
+    signature of the phase-2 gather-and-score pass (None for dense).
     """
 
     plan: QueryPlan
     q_bucket: int
     signature: tuple
+    s_key: tuple | None = None
 
 
 class PlanCache:
     """Admission-control plan cache keyed on (corpus version, target
-    dtype, Q-bucket).
+    dtype, Q-bucket[, shortlist signature]).
 
     The :class:`~repro.core.discovery.index.SketchIndex` already caches
     one ``QueryPlan`` per (dtype, version); this layer adds the Q axis
-    and the signature bookkeeping the service batches on, and counts
+    — and, for two-phase retrieval, the shortlist-bucket axis — plus
+    the signature bookkeeping the service batches on, and counts
     hits/misses so tests and ``DiscoveryService.stats()`` can assert
     that steady-state traffic replans nothing.  Insertion-order LRU:
     stale corpus versions age out first.
@@ -254,11 +453,17 @@ class PlanCache:
 
     def lookup(
         self, version: int, y_discrete: bool, q_bucket: int,
-        build,
+        build, s_key: tuple | None = None,
     ) -> ServicePlan:
         """Cached ServicePlan for the key, building via ``build()`` — a
-        zero-arg callable returning the current QueryPlan — on miss."""
-        key = (int(version), bool(y_discrete), int(q_bucket))
+        zero-arg callable returning the current QueryPlan — on miss.
+
+        ``s_key`` extends the key with a phase-2 shortlist signature:
+        the shortlist ladder makes its value set pow-2-bounded, so the
+        cache (and the compile count it fronts) stays bounded under
+        arbitrarily varied ``min_join`` selectivity.
+        """
+        key = (int(version), bool(y_discrete), int(q_bucket), s_key)
         hit = self._entries.pop(key, None)
         if hit is not None:
             self.hits += 1
@@ -266,7 +471,7 @@ class PlanCache:
             return hit
         self.misses += 1
         plan = build()
-        sp = ServicePlan(plan, int(q_bucket), plan_signature(plan))
+        sp = ServicePlan(plan, int(q_bucket), plan_signature(plan), s_key)
         while len(self._entries) >= self.max_entries:
             self._entries.pop(next(iter(self._entries)))
             self.evictions += 1

@@ -41,6 +41,13 @@ data-parallel.  ``add``/``add_table`` delegate to the index's amortized
 O(1) ingest (buffer-donated in-place flushes where the backend supports
 it), so a queue interleaved with ingest serves from a corpus that is
 current as of each ``submit``.
+
+``submit`` threads ``min_join`` into planning rather than ranking:
+each admitted bucket runs two-phase retrieval (join-size prefilter ->
+shortlist gather-and-score — see ``executors.py``), so the expensive
+kNN-MI work scales with the *joinable* fraction of the corpus, not the
+corpus.  ``stats()`` reports the candidate pairs the gate filtered out
+of estimator scoring, alongside the shortlist-bucket ladder traffic.
 """
 
 from __future__ import annotations
@@ -57,7 +64,9 @@ from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
     PlanCache,
     bucket_queries,
+    build_shortlists,
     plan_signature,
+    shortlist_signature,
 )
 from repro.core.sketch import Sketch
 
@@ -73,8 +82,12 @@ class AdmissionStats:
     batches: int = 0         # admitted (signature, Q-bucket) dispatches
     split_batches: int = 0   # chunks forced by the max_q_bucket cap
     padded_lanes: int = 0    # dead query lanes paid to ride the ladder
+    prefiltered: int = 0     # queries served via two-phase retrieval
+    cands_considered: int = 0   # (query, candidate) pairs seen by phase 1
+    cands_shortlisted: int = 0  # pairs that reached phase-2 scoring
     signatures: set = field(default_factory=set)
     q_buckets: set = field(default_factory=set)
+    s_buckets: set = field(default_factory=set)
 
     def as_dict(self) -> dict:
         return {
@@ -83,8 +96,16 @@ class AdmissionStats:
             "batches": self.batches,
             "split_batches": self.split_batches,
             "padded_lanes": self.padded_lanes,
+            "prefiltered": self.prefiltered,
+            "cands_considered": self.cands_considered,
+            "cands_shortlisted": self.cands_shortlisted,
+            # What the joinability gate saved: estimator work the dense
+            # path would have paid for candidates min_join discards.
+            "cands_filtered_out":
+                self.cands_considered - self.cands_shortlisted,
             "signatures": len(self.signatures),
             "q_buckets": sorted(self.q_buckets),
+            "s_buckets": sorted(self.s_buckets),
         }
 
 
@@ -167,6 +188,7 @@ class DiscoveryService:
         *,
         top_k: int = 10,
         min_join: int = 8,
+        prefilter: bool | None = None,
     ) -> list[list]:
         """Answer a mixed, arbitrarily-sized queue of discovery queries.
 
@@ -178,6 +200,17 @@ class DiscoveryService:
         queue is admission-controlled (split per estimator signature,
         chunked to ``max_q_bucket``, Q padded up the pow-two ladder) and
         every admitted bucket is dispatched before the first transfer.
+
+        ``min_join`` is threaded into *planning*, not applied post-hoc:
+        with ``prefilter`` on (the default whenever ``min_join`` > 0)
+        each bucket runs two-phase retrieval — a cheap join-size pass
+        over every candidate, then estimator scoring of only the
+        shortlist that can pass ``min_join``.  Phase-1 programs for all
+        buckets are dispatched before any phase-1 transfer, and every
+        bucket's phase-2 is dispatched before the first phase-2
+        transfer, so the dispatch-before-transfer discipline holds
+        within each phase.  ``stats()`` reports how many candidate
+        pairs the gate filtered out of estimator scoring.
         """
         queries = list(queries)
         if not queries:
@@ -187,6 +220,8 @@ class DiscoveryService:
         st.submitted += len(queries)
         C = len(self.index)
         version = self.index._version
+        use_pref = self.index._use_prefilter(prefilter, min_join)
+        n_shards = self.mesh.shape["data"] if self.mesh is not None else 1
 
         # 1. split the queue per target dtype -> estimator signature
         # (constant per dtype within one submit: nothing can flush
@@ -202,8 +237,11 @@ class DiscoveryService:
             by_sig.setdefault(sigs[y_disc], []).append(qi)
 
         # 2. chunk to the Q cap, bucket, and dispatch every batch before
-        # any collect (dispatch-before-transfer across buckets).
+        # any collect (dispatch-before-transfer across buckets).  With
+        # the prefilter on, "dispatch" here is phase 1 — the join-size
+        # pass; scoring work is not enqueued until its shortlist exists.
         pending = []
+        phase1 = []
         for sig, idxs in by_sig.items():
             y_disc = sig[0]
             st.signatures.add(sig)
@@ -221,26 +259,70 @@ class DiscoveryService:
                 trains = _ex.stack_trains_host(
                     [queries[i] for i in chunk]
                 )
-                if self._dist is not None:
+                if use_pref:
+                    ex = self._dist if self._dist is not None \
+                        else self._batched
+                    pend1 = ex.prefilter_dispatch(
+                        sp.plan, trains, q_bucket=q_bucket
+                    )
+                    phase1.append(
+                        (chunk, y_disc, q_bucket, sp, trains, pend1)
+                    )
+                elif self._dist is not None:
                     want = topk_oversample(top_k, C)
                     handle = self._dist.topk_dispatch(
                         sp.plan, trains, want, q_bucket=q_bucket
                     )
+                    pending.append((chunk, handle))
                 else:
                     handle = self._batched.dispatch(
                         sp.plan, trains, q_bucket=q_bucket
                     )
-                pending.append((chunk, handle))
+                    pending.append((chunk, handle))
 
-        # 3. collect (first host sync) and scatter to arrival order.
+        # 2b. two-phase buckets: collect join sizes, build shortlists,
+        # and dispatch phase 2 for every bucket before collecting any
+        # phase-2 result (bucket i+1's prefilter overlaps bucket i's
+        # shortlist build on device).
+        for chunk, y_disc, q_bucket, sp, trains, pend1 in phase1:
+            shortlists = build_shortlists(
+                sp.plan, pend1.collect(), min_join, multiple=n_shards,
+            )
+            s_key = shortlist_signature(shortlists)
+            # Grow the plan-cache key by the shortlist signature: the
+            # ladder makes its value set finite, so cache size — and
+            # the compiled-program population it fronts — stays bounded
+            # under arbitrarily varied min_join selectivity.
+            self.plan_cache.lookup(
+                version, y_disc, q_bucket,
+                lambda p=sp.plan: p, s_key=s_key,
+            )
+            st.prefiltered += len(chunk)
+            st.cands_considered += len(chunk) * C
+            st.cands_shortlisted += sum(
+                sl.shortlisted for sl in shortlists if sl is not None
+            )
+            st.s_buckets.update(b for _, b in s_key)
+            if self._dist is not None:
+                handle = self._dist.shortlist_topk_dispatch(
+                    sp.plan, trains, shortlists, top_k, q_bucket=q_bucket
+                )
+            else:
+                handle = self._batched.shortlist_dispatch(
+                    sp.plan, trains, shortlists, q_bucket=q_bucket
+                )
+            pending.append((chunk, handle))
+
+        # 3. collect (first host sync of each handle's result set) and
+        # scatter to arrival order.
         results: list = [None] * len(queries)
         for chunk, handle in pending:
-            if self._dist is not None:
-                triples = handle.collect()
-            else:
+            if isinstance(handle, _ex._PendingScores):
                 mi, js = handle.collect()
                 gi = np.arange(C)
                 triples = [(mi[q], gi, js[q]) for q in range(len(chunk))]
+            else:
+                triples = handle.collect()
             for row, qi in enumerate(chunk):
                 v, gidx, jsz = triples[row]
                 results[qi] = self.index._rank(

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
 
-from repro.kernels.knn_stats.ops import knn_with_counts
+from repro.kernels.knn_stats.ops import K_MAX, knn_with_counts
 from repro.kernels.pairwise_cheb.ops import pairwise_cheb
 
 __all__ = [
@@ -259,11 +259,15 @@ def dc_ksg_mi(
     scikit-learn implementation); M' counts the points kept.
 
     ``k_i`` overrides the per-point within-class neighbor budget
-    (default: ``k``).  It must satisfy ``k_i <= k``: the fused
-    class-mode kNN buffer holds exactly ``k`` within-class distances
-    per row (see ``repro.kernels.knn_stats.ops``), so a larger budget
-    would silently read +inf padding — requesting it raises a
-    ``ValueError`` instead of returning a wrong estimate.
+    (default: ``k``).  A budget above ``k`` is served by *widening* the
+    fused class-mode kNN buffer to ``max(k, k_i)`` within-class
+    distances per row (the ``k_max`` parameter of
+    ``repro.kernels.knn_stats.ops``) — the extra lanes exist only in
+    the buffer; the estimator's radius and count semantics are
+    unchanged.  The hard ceiling is the kernel lane width
+    (``K_MAX`` = 128): a ``k_i`` beyond it cannot be buffered on TPU
+    and raises a clear ``ValueError`` instead of silently reading +inf
+    padding.
 
     The fused path streams within-class kNN in class mode, so the seed's
     full P×P sort of the same-class distance matrix disappears; the
@@ -272,15 +276,15 @@ def dc_ksg_mi(
     float32-representable (dense ranks are; raw uint32 codes above 2²⁴
     may collide — rank them first).
     """
-    if k_i is not None and k_i > k:
+    if k_i is not None and k_i > K_MAX:
         raise ValueError(
-            f"DC-KSG per-point neighbor budget k_i={k_i} exceeds k={k}: "
-            "the fused class-mode kNN buffer holds only the k smallest "
-            "within-class distances per row, so k_i > k cannot be "
-            "served — raise k to at least k_i (widening the buffer is "
-            "tracked on the ROADMAP)"
+            f"DC-KSG per-point neighbor budget k_i={k_i} exceeds "
+            f"k_max={K_MAX}: the class-mode kNN buffer is capped at the "
+            "kernel lane width, so a wider budget cannot be served on "
+            "any backend — lower k_i"
         )
     kk = k if k_i is None else k_i
+    k_buf = max(k, kk)  # buffer width: wide enough for the kk-th radius
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     P = y.shape[0]
@@ -290,11 +294,12 @@ def dc_ksg_mi(
 
         def _dc_radius(knn, same_cnt):
             n_x_r = same_cnt + m_i32  # includes self
-            idx = jnp.clip(jnp.minimum(kk, n_x_r - 1) - 1, 0, k - 1)
+            idx = jnp.clip(jnp.minimum(kk, n_x_r - 1) - 1, 0, k_buf - 1)
             return jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
 
         _, same_cnt, counts = knn_with_counts(
-            cf, yf, mask, k=k, mode="class", which="y", radius=_dc_radius,
+            cf, yf, mask, k=k, k_max=k_buf, mode="class", which="y",
+            radius=_dc_radius,
         )
         n_x = same_cnt + m_i32
         k_eff = jnp.minimum(kk, n_x - 1)

@@ -43,6 +43,7 @@ __all__ = [
     "sketch_join",
     "sketch_join_jax",
     "sketch_join_presorted",
+    "presorted_join_size",
     "full_left_join",
 ]
 
@@ -172,6 +173,31 @@ def sketch_join_presorted(
     xs = tuple(jnp.where(matched, v[pos_c], 0) for v in cand_values)
     ys = tuple(jnp.where(train_mask, v, 0) for v in train_values)
     return xs, ys, matched
+
+
+def presorted_join_size(
+    train_keys: jax.Array,
+    train_mask: jax.Array,
+    cand_keys: jax.Array,
+    cand_mask: jax.Array,
+    keys_effective: bool = True,
+) -> jax.Array:
+    """Join size of a presorted candidate against one train sketch.
+
+    The two-phase retrieval prefilter: exactly the ``jnp.sum(mask)`` a
+    full :func:`sketch_join_presorted` + score would report — the same
+    searchsorted, the same match mask, no value gathers and no
+    estimator work — so a ``min_join`` predicate evaluated on this
+    count discards precisely the candidates the post-scoring ranking
+    filter would have discarded.  Bit-identical (int32) to the join
+    sizes of the dense scoring path by construction: both reduce the
+    same ``matched`` vector.
+    """
+    _, _, matched = sketch_join_presorted(
+        train_keys, train_mask, cand_keys, cand_mask, (), (),
+        keys_effective=keys_effective,
+    )
+    return jnp.sum(matched)
 
 
 def full_left_join(

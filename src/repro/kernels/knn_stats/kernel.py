@@ -40,7 +40,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import CompilerParams as _CompilerParams
 
 BLOCK = 256
-LANES = 128  # minimum TPU-tileable lane width; also caps k
+# Minimum TPU-tileable lane width.  Also the widest kNN buffer one row
+# can carry: the running k-smallest accumulator is one (bm, LANES) VMEM
+# tile with lanes [0, k) live, so any requested buffer width — k, or
+# the widened class-mode k_max a DC-KSG k_i > k call asks for — must
+# fit in LANES (ops.K_MAX re-exports this cap).
+LANES = 128
 _BIG_LANE = 1 << 30  # python int: jnp constants would be captured as consts
 
 

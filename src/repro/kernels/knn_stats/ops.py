@@ -27,11 +27,14 @@ Inputs are fixed-shape padded samples (x, y, mask); invalid entries and
 the diagonal are fenced to +inf before any reduction, so padding never
 affects radii or counts.
 
-Known limitation (class mode): the kNN buffer holds exactly ``k``
-within-class distances per row, so per-point neighbor requests are
-capped at ``k`` — a DC-KSG caller asking for ``k_i > k`` cannot be
-served from this buffer and must raise (``estimators.dc_ksg_mi``
-validates this); widening the buffer is a ROADMAP item.
+Class-mode buffer width: the kNN buffer holds ``k_max`` within-class
+distances per row (``k_max`` defaults to ``k``; pass a larger value to
+widen it), so a DC-KSG caller whose per-point budget ``k_i`` exceeds
+its global ``k`` is served by widening the buffer to ``max(k, k_i)``
+instead of raising.  The hard ceiling is :data:`K_MAX` (= the TPU
+kernel's lane width — the (bm, LANES) VMEM accumulator caps how many
+distances one row can carry); requests beyond it raise a clear
+``ValueError`` in ``estimators.dc_ksg_mi``.
 """
 
 from __future__ import annotations
@@ -54,7 +57,15 @@ __all__ = [
     "knn_smallest",
     "knn_with_counts",
     "DEFAULT_BLOCK",
+    "K_MAX",
 ]
+
+# Widest kNN buffer any backend can serve: the Pallas kernel keeps one
+# (bm, LANES) VMEM accumulator per row-block and extracts one lane per
+# tracked neighbor, so LANES is the physical cap.  The scan fallback
+# could go wider, but honoring one ceiling everywhere keeps CPU-tested
+# parameter ranges valid on TPU.
+K_MAX = LANES
 
 # Fallback column-tile width: keeps the streamed tile (P, 128) well under
 # the materialized P×P footprint for every production sketch capacity.
@@ -167,12 +178,29 @@ def _pad_rows(a, Pk, fill):
     return jnp.full(Pk, fill, a.dtype).at[:P].set(a)
 
 
+def _buffer_width(k: int, k_max: int | None) -> int:
+    kb = k if k_max is None else int(k_max)
+    if kb < k:
+        raise ValueError(f"k_max={kb} < k={k}: the buffer must hold at "
+                         "least the k tracked neighbors")
+    if kb > K_MAX:
+        # Enforced for every backend (the scan fallback could go wider)
+        # so CPU-tested parameter ranges stay valid on TPU, where the
+        # (bm, LANES) VMEM accumulator physically caps the width.
+        raise ValueError(
+            f"kNN buffer width {kb} exceeds K_MAX={K_MAX} (the kernel "
+            "lane width); no backend can serve it"
+        )
+    return kb
+
+
 def knn_smallest(
     x: jax.Array,
     y: jax.Array,
     mask: jax.Array,
     *,
     k: int,
+    k_max: int | None = None,
     mode: str = "joint",
     use_kernel: bool | None = None,
     block: int | None = None,
@@ -183,17 +211,18 @@ def knn_smallest(
     max(|dx|, |dy|) — the KSG/MixedKSG radius space.  mode "class":
     |dy| restricted to rows with equal x code (Ross DC-KSG); x must
     carry exactly-float32-representable class codes (dense ranks).
-    NOTE the class-mode buffer holds exactly ``k`` within-class
-    distances per row — per-point neighbor indices beyond ``k`` (a
-    DC-KSG ``k_i > k`` request) are silently +inf; callers must raise
-    ``k`` (or be rejected — see ``estimators.dc_ksg_mi``).
+    ``k_max`` widens the returned buffer beyond ``k`` (capped at
+    :data:`K_MAX`): a DC-KSG caller whose per-point budget exceeds the
+    global ``k`` asks for ``k_max = max(k, k_i)`` so the needed
+    within-class distances exist instead of reading +inf padding.
 
-    Returns (knn (P, k) float32 ascending, +inf padding;
+    Returns (knn (P, max(k, k_max)) float32 ascending, +inf padding;
     cnt (P,) int32 — valid same-class neighbors j ≠ i, zeros in joint
     mode).  Never materializes a P×P matrix.
     """
     if mode not in ("joint", "class"):
         raise ValueError(f"unknown mode {mode!r}")
+    kb = _buffer_width(k, k_max)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     xf = x.astype(jnp.float32)
@@ -202,7 +231,7 @@ def knn_smallest(
     P = xf.shape[0]
     if not use_kernel:
         return _knn_smallest_scan(
-            xf, yf, m, k=k, mode=mode, block=block or DEFAULT_BLOCK
+            xf, yf, m, k=kb, mode=mode, block=block or DEFAULT_BLOCK
         )
     blk = block or 256
     Pk = _pad_cols(P, blk)
@@ -210,12 +239,12 @@ def knn_smallest(
         _pad_rows(xf, Pk, 0.0),
         _pad_rows(yf, Pk, 0.0),
         _pad_rows(m, Pk, False).astype(jnp.int32),
-        k=k,
+        k=kb,
         mode=mode,
         block=blk,
         interpret=_use_interpret(),
     )
-    return knn[:P, :k], cnt[:P, 0].astype(jnp.int32)
+    return knn[:P, :kb], cnt[:P, 0].astype(jnp.int32)
 
 
 def ball_counts(
@@ -322,6 +351,7 @@ def knn_with_counts(
     mask: jax.Array,
     *,
     k: int,
+    k_max: int | None = None,
     mode: str = "joint",
     which: str = "all",
     radius=None,
@@ -334,8 +364,11 @@ def knn_with_counts(
     ``radius`` is a traceable callable ``(knn, cnt) -> (P,) radii``
     (default: the k-th smallest selected distance, ``knn[:, k-1]`` —
     the KSG/MixedKSG choice; DC-KSG passes its clipped within-class
-    extraction).  Returns ``(knn, cnt, counts)`` exactly as the two ops
-    would return them — bit-identical, including tie handling.
+    extraction).  ``k_max`` widens the kNN buffer the radius callable
+    sees (the DC-KSG ``k_i > k`` case); the default counts and radius
+    stay a function of ``k`` alone.  Returns ``(knn, cnt, counts)``
+    exactly as the two ops would return them — bit-identical, including
+    tie handling.
 
     Off-TPU this is the discovery hot-path fusion: for samples whose
     padding fits one column tile (P <= block, i.e. every production
@@ -348,6 +381,7 @@ def knn_with_counts(
         raise ValueError(f"unknown mode {mode!r}")
     if which not in ("all", "y"):
         raise ValueError(f"unknown which {which!r}")
+    kb = _buffer_width(k, k_max)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if radius is None:
@@ -358,18 +392,18 @@ def knn_with_counts(
     if not use_kernel:
         blk = block or DEFAULT_BLOCK
         P = xf.shape[0]
-        if _pad_cols(P, blk) == blk and k <= blk:
+        if _pad_cols(P, blk) == blk and kb <= blk:
             return _knn_counts_fused_tile(
-                xf, yf, m, k=k, mode=mode, which=which,
+                xf, yf, m, k=kb, mode=mode, which=which,
                 radius_fn=radius, block=blk,
             )
-        knn, cnt = _knn_smallest_scan(xf, yf, m, k=k, mode=mode, block=blk)
+        knn, cnt = _knn_smallest_scan(xf, yf, m, k=kb, mode=mode, block=blk)
         r = radius(knn, cnt).astype(jnp.float32)
         return knn, cnt, _ball_counts_scan(
             xf, yf, m, r, which=which, block=blk
         )
     knn, cnt = knn_smallest(
-        x, y, mask, k=k, mode=mode, use_kernel=True, block=block
+        x, y, mask, k=k, k_max=k_max, mode=mode, use_kernel=True, block=block
     )
     r = radius(knn, cnt)
     return knn, cnt, ball_counts(

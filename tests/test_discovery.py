@@ -183,8 +183,16 @@ class TestShardTopkPlan:
     def test_shard_larger_than_topk(self):
         from repro.core.discovery import _shard_topk_plan
 
+        # k_shard rides the pow-2 ladder (16 for top_k=10) so varied
+        # top-k traffic reuses one shard program per k-bucket; the
+        # global result count is still exactly top_k.
         k_shard, k_final = _shard_topk_plan(1024, 4, 10)
-        assert k_shard == 10 and k_final == 10
+        assert k_shard == 16 and k_final == 10
+        # every top_k in (8, 16] lands on the same shard program
+        assert all(_shard_topk_plan(1024, 4, t)[0] == 16
+                   for t in range(9, 17))
+        k_shard, k_final = _shard_topk_plan(1024, 4, 8)
+        assert k_shard == 8 and k_final == 8
 
     def test_degenerate_single_candidate(self):
         from repro.core.discovery import _shard_topk_plan

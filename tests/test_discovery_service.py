@@ -392,6 +392,27 @@ class TestMultiShardParity:
         for g, w in zip(got, want):
             assert [(m.table, mi, js) for m, mi, js in g] == \
                    [(m.table, mi, js) for m, mi, js in w]
+
+        # Two-phase over real 4-shard programs: the shard-local
+        # prefilter + sharded shortlist gather-and-score + on-device
+        # merge equals the dense local ranking at equal min_join, for
+        # the index path and the service path — including after
+        # interleaved ingest.
+        flat = lambda r: [(m.table, mi, js) for m, mi, js in r]
+        for s in sks:
+            dense = index.query(s, top_k=3, min_join=4, prefilter=False)
+            pref = index.query(s, top_k=3, min_join=4, mesh=mesh,
+                               prefilter=True)
+            assert flat(pref) == flat(dense)
+        index.add("late", "k", "v", keys,
+                  (0.5 * y + rng.normal(size=N)).astype(np.float32), False)
+        got = svc.submit(sks, top_k=3, min_join=4)
+        want = [index.query(s, top_k=3, min_join=4, prefilter=False)
+                for s in sks]
+        for g, w in zip(got, want):
+            assert flat(g) == flat(w)
+        adm = svc.stats()["admission"]
+        assert adm["prefiltered"] > 0 and adm["cands_filtered_out"] >= 0
         print("SHARD-PARITY-OK")
     """)
 

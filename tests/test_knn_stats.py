@@ -203,23 +203,66 @@ class TestEstimatorParity:
         b = estimators.dc_ksg_mi(codes, y, m, k=5, impl="materialized")
         assert float(a) == pytest.approx(float(b), abs=1e-5)
 
-    @pytest.mark.parametrize("impl", ["fused", "materialized"])
-    def test_dc_ksg_k_i_beyond_buffer_rejected(self, impl):
-        """The class-mode kNN buffer holds k distances per row; a
-        per-point budget k_i > k must raise, not silently read +inf."""
-        P = 40
+    @pytest.mark.parametrize("k_i", [1, 2, 4, 5, 8])
+    def test_dc_ksg_k_i_any_budget_served(self, k_i):
+        """The class-mode kNN buffer widens to max(k, k_i) — a per-point
+        budget above k is served (previously a ValueError), identically
+        across impls."""
+        P = 60
         codes = jnp.asarray(RNG.integers(0, 4, size=P).astype(np.int32))
         _, y, m = _sample(P)
-        with pytest.raises(ValueError, match="k_i=5 exceeds k=3"):
-            estimators.dc_ksg_mi(codes, y, m, k=3, impl=impl, k_i=5)
-        # k_i <= k is served, identically across impls
-        a = estimators.dc_ksg_mi(codes, y, m, k=4, impl="fused", k_i=2)
-        b = estimators.dc_ksg_mi(codes, y, m, k=4, impl="materialized",
-                                 k_i=2)
+        a = estimators.dc_ksg_mi(codes, y, m, k=3, impl="fused", k_i=k_i)
+        b = estimators.dc_ksg_mi(codes, y, m, k=3, impl="materialized",
+                                 k_i=k_i)
         assert float(a) == pytest.approx(float(b), abs=1e-5)
+
+    def test_dc_ksg_wide_budget_equals_wide_k(self):
+        """k=3 with a widened k_i=6 buffer must read the same radii a
+        k=6 call reads — the widening is buffer-only."""
+        P = 80
+        codes = jnp.asarray(RNG.integers(0, 3, size=P).astype(np.int32))
+        _, y, m = _sample(P)
+        a = estimators.dc_ksg_mi(codes, y, m, k=3, k_i=6, impl="fused")
+        b = estimators.dc_ksg_mi(codes, y, m, k=6, k_i=6, impl="fused")
+        assert float(a) == float(b)
         c = estimators.dc_ksg_mi(codes, y, m, k=4, k_i=4)
         d = estimators.dc_ksg_mi(codes, y, m, k=4)
         assert float(c) == float(d)  # default budget == k
+
+    @pytest.mark.parametrize("impl", ["fused", "materialized"])
+    def test_dc_ksg_k_i_beyond_lane_cap_rejected(self, impl):
+        """Budgets beyond the kernel lane width (ops.K_MAX) cannot be
+        buffered on TPU; the clear ValueError remains."""
+        from repro.kernels.knn_stats.ops import K_MAX
+
+        P = 40
+        codes = jnp.asarray(RNG.integers(0, 4, size=P).astype(np.int32))
+        _, y, m = _sample(P)
+        with pytest.raises(ValueError, match=f"k_max={K_MAX}"):
+            estimators.dc_ksg_mi(codes, y, m, k=3, impl=impl, k_i=K_MAX + 1)
+
+    def test_knn_smallest_k_max_widens_buffer(self):
+        """ops-level: k_max returns a wider buffer whose leading k
+        columns are bit-identical to the unwidened call."""
+        from repro.kernels.knn_stats.ops import knn_smallest
+
+        P = 70
+        x, y, m = _sample(P)
+        knn3, cnt3 = knn_smallest(x, y, m, k=3, mode="class",
+                                  use_kernel=False)
+        knn8, cnt8 = knn_smallest(x, y, m, k=3, k_max=8, mode="class",
+                                  use_kernel=False)
+        assert knn8.shape == (P, 8)
+        np.testing.assert_array_equal(np.asarray(knn3),
+                                      np.asarray(knn8)[:, :3])
+        np.testing.assert_array_equal(np.asarray(cnt3), np.asarray(cnt8))
+        with pytest.raises(ValueError, match="k_max"):
+            knn_smallest(x, y, m, k=5, k_max=3, use_kernel=False)
+        # the K_MAX ceiling is enforced at the ops layer for every
+        # backend, not just via dc_ksg_mi's pre-check
+        from repro.kernels.knn_stats.ops import K_MAX
+        with pytest.raises(ValueError, match="K_MAX"):
+            knn_smallest(x, y, m, k=3, k_max=K_MAX + 1, use_kernel=False)
 
 
 class TestFusedRadiusCountSweep:

@@ -1,0 +1,485 @@
+"""Two-phase retrieval tests (ISSUE 5 acceptance):
+
+  (a) prefiltered ``query`` / ``query_many`` / ``DiscoveryService.submit``
+      are bit-identical to the dense path at equal ``min_join`` —
+      property-tested over random corpora, sweeping ``min_join``, mixed
+      dtypes, interleaved ingest, and the mesh path;
+  (b) compile count under randomized shortlist sizes is bounded by the
+      shortlist-bucket ladder (via the ``compile_count`` hook);
+  (c) the phase-1 join sizes are bitwise the scorers' join sizes;
+  (d) donation-aware plan pinning: a retained plan survives an
+      interleaved ``add`` + flush (satellite);
+  (e) the distributed top-k k-shard pow-2 ladder bounds the shard_map
+      program set under varied ``top_k`` traffic (satellite).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from repro.core import hashing
+from repro.core.discovery import (
+    BatchedExecutor,
+    DiscoveryService,
+    MIN_SHORTLIST,
+    PartitionedLocalExecutor,
+    SketchIndex,
+    bucket_shortlist,
+    build_shortlists,
+    compile_count,
+    make_plan,
+    stack_trains,
+)
+from repro.core.sketch import build_sketch
+
+N_ROWS = 1500
+SK_N = 64
+RNG = np.random.default_rng(31)
+
+
+def _keys(seed=9, lo=0):
+    raw = np.arange(lo, lo + N_ROWS, dtype=np.uint32)
+    return np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+
+
+def _selective_index(keys, y, rng, n_joinable=3, n_disjoint=4, n_disc=2):
+    """Corpus where most candidates cannot pass a positive min_join:
+    the disjoint tables share no keys with the train side, which is the
+    selectivity regime the joinability gate exists for."""
+    index = SketchIndex(n=SK_N, method="tupsk")
+    for i in range(n_joinable):
+        index.add(f"cont{i}", "k", "v", keys,
+                  (y + (0.2 + i) * rng.normal(size=N_ROWS))
+                  .astype(np.float32), False)
+    for i in range(n_disc):
+        index.add(f"disc{i}", "k", "v", keys,
+                  rng.integers(0, 4 + i, size=N_ROWS), True)
+    for i in range(n_disjoint):
+        other = _keys(seed=9, lo=(i + 1) * N_ROWS)
+        index.add(f"far{i}", "k", "v", other,
+                  rng.normal(size=N_ROWS).astype(np.float32), False)
+    return index
+
+
+def _train(keys, v, disc=False):
+    return build_sketch(keys, v, n=SK_N, method="tupsk", side="train",
+                        value_is_discrete=disc)
+
+
+def _mixed_queue(keys, y, rng, q, disc_every=3):
+    out = []
+    for i in range(q):
+        noisy = y + (0.1 + 0.25 * i) * rng.normal(size=N_ROWS)
+        if i % disc_every == disc_every - 1:
+            out.append(_train(keys, (noisy > 0).astype(np.int64), True))
+        else:
+            out.append(_train(keys, noisy.astype(np.float32), False))
+    return out
+
+
+def _flat(res):
+    return [(m.table, mi, js) for m, mi, js in res]
+
+
+class TestShortlistLadder:
+    def test_bucket_shortlist_pow2(self):
+        assert bucket_shortlist(1) == MIN_SHORTLIST
+        assert bucket_shortlist(MIN_SHORTLIST) == MIN_SHORTLIST
+        for n in (3, 9, 17, 100):
+            b = bucket_shortlist(n)
+            assert b >= max(n, MIN_SHORTLIST)
+            assert b & (b - 1) == 0
+            assert bucket_shortlist(b) == b
+        assert bucket_shortlist(10, multiple=4) % 4 == 0
+        assert bucket_shortlist(10, multiple=3) % 3 == 0
+
+    def test_build_shortlists_fences_and_orders(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(0))
+        sk = _train(keys, y)
+        plan = index.plan(False)
+        ex = BatchedExecutor()
+        trains = stack_trains([index.train_arrays(sk)])
+        js_blocks = ex.prefilter_dispatch(plan, trains).collect()
+        sls = build_shortlists(plan, js_blocks, min_join=4)
+        C = plan.n_candidates
+        seen = []
+        for sl in sls:
+            if sl is None:
+                continue
+            assert sl.s_bucket & (sl.s_bucket - 1) == 0
+            gi = sl.gidx[0]
+            live = gi < C
+            # live entries ascend (ranking tie-order contract), padding
+            # carries the sentinel and zero join size
+            assert np.all(np.diff(gi[live]) > 0)
+            assert np.all(gi[~live] == C)
+            assert np.all(sl.js[0][~live] == 0)
+            assert np.all(sl.js[0][live] >= 4)
+            seen.extend(gi[live].tolist())
+        # exactly the candidates whose join clears min_join: the four
+        # disjoint tables never appear
+        names = {index.meta[i].table for i in seen}
+        assert names == {"cont0", "cont1", "cont2", "disc0", "disc1"}
+
+    def test_join_sizes_bitwise_match_scorer(self):
+        """Phase-1 counts == the js matrix the dense scorers emit."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(1))
+        sks = [_train(keys, (y + 0.3 * (q + 1) * RNG.normal(size=N_ROWS))
+                      .astype(np.float32)) for q in range(3)]
+        trains = stack_trains([index.train_arrays(s) for s in sks])
+        plan = index.plan(False)
+        ex = BatchedExecutor()
+        _, js_dense = ex.execute(plan, trains)
+        for gp, js in ex.prefilter_dispatch(plan, trains).collect():
+            g = gp.size
+            np.testing.assert_array_equal(
+                js[:, :g], js_dense[:, gp.index[:g]]
+            )
+
+
+class TestTwoPhaseBitIdentity:
+    """Acceptance: two-phase == dense at equal min_join, bitwise."""
+
+    @pytest.mark.parametrize("y_discrete", [False, True])
+    @pytest.mark.parametrize("min_join", [1, 4, 64, 10_000])
+    def test_query_prefilter_equals_dense(self, y_discrete, min_join):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(2))
+        yv = (y > 0).astype(np.int64) if y_discrete else y
+        sk = _train(keys, yv, y_discrete)
+        dense = index.query(sk, top_k=6, min_join=min_join, prefilter=False)
+        pref = index.query(sk, top_k=6, min_join=min_join, prefilter=True)
+        assert _flat(dense) == _flat(pref)
+        if min_join == 10_000:  # nothing can pass: both paths agree on []
+            assert pref == []
+
+    @pytest.mark.parametrize("q", [1, 4])
+    def test_query_many_prefilter_equals_dense(self, q):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(3))
+        sks = [_train(keys, (y + 0.3 * (i + 1) * RNG.normal(size=N_ROWS))
+                      .astype(np.float32)) for i in range(q)]
+        dense = index.query_many(sks, top_k=5, min_join=4, prefilter=False)
+        pref = index.query_many(sks, top_k=5, min_join=4, prefilter=True)
+        for d, p in zip(dense, pref):
+            assert _flat(d) == _flat(p)
+
+    def test_default_routes_through_prefilter(self):
+        """min_join > 0 defaults to the two-phase path; min_join=0 must
+        not (phase 1 would filter nothing)."""
+        assert SketchIndex._use_prefilter(None, 8) is True
+        assert SketchIndex._use_prefilter(None, 0) is False
+        assert SketchIndex._use_prefilter(False, 8) is False
+        assert SketchIndex._use_prefilter(True, 0) is True
+
+    def test_explicit_prefilter_with_custom_executor_rejected(self):
+        """executor= keeps the dense path; an explicit prefilter=True
+        request through it must fail loudly, not silently score dense."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(20))
+        sk = _train(keys, y)
+        with pytest.raises(ValueError, match="incompatible with executor"):
+            index.query_many([sk], min_join=4, prefilter=True,
+                             executor="batched")
+        # auto (None) with executor= quietly serves dense — documented
+        res = index.query_many([sk], top_k=4, min_join=4,
+                               executor="batched")
+        assert _flat(res[0]) == _flat(
+            index.query(sk, top_k=4, min_join=4, prefilter=False))
+
+    def test_min_join_zero_prefilter_forced(self):
+        """Forced prefilter at min_join=0 shortlists every live
+        candidate and still matches dense."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(4))
+        sk = _train(keys, y)
+        dense = index.query(sk, top_k=20, min_join=0, prefilter=False)
+        pref = index.query(sk, top_k=20, min_join=0, prefilter=True)
+        assert _flat(dense) == _flat(pref)
+        assert len(pref) == len(index)  # empty joins score 0, all pass
+
+    def test_interleaved_ingest(self):
+        """add between prefiltered queries: the next query serves the
+        grown corpus, still bit-identical to dense on that corpus."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(5)
+        index = _selective_index(keys, y, rng)
+        sk = _train(keys, y)
+        first = index.query(sk, top_k=5, min_join=4, prefilter=True)
+        index.add("late_hit", "k", "v", keys,
+                  (0.9 * y + 0.1 * rng.normal(size=N_ROWS))
+                  .astype(np.float32), False)
+        index.add("late_miss", "k", "v", _keys(lo=9 * N_ROWS),
+                  rng.normal(size=N_ROWS).astype(np.float32), False)
+        pref = index.query(sk, top_k=5, min_join=4, prefilter=True)
+        dense = index.query(sk, top_k=5, min_join=4, prefilter=False)
+        assert _flat(pref) == _flat(dense)
+        assert _flat(pref) != _flat(first)  # late_hit ranks
+        assert "late_hit" in [m.table for m, _, _ in pref]
+
+    @given(seed=st.integers(0, 2**16), q=st.integers(1, 5),
+           min_join=st.sampled_from([1, 2, 8, 48, 300]),
+           disc_every=st.integers(2, 4))
+    @settings(max_examples=8, deadline=None)
+    def test_property_submit_random_corpora(self, seed, q, min_join,
+                                            disc_every):
+        """submit (two-phase by default) == looped dense query over
+        random mixed-dtype corpora at every min_join selectivity."""
+        rng = np.random.default_rng(seed)
+        keys = _keys(seed % 5 + 1)
+        y = rng.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(
+            keys, y, rng,
+            n_joinable=int(rng.integers(1, 4)),
+            n_disjoint=int(rng.integers(1, 4)),
+            n_disc=int(rng.integers(1, 3)),
+        )
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+        sks = _mixed_queue(keys, y, rng, q, disc_every=disc_every)
+        got = svc.submit(sks, top_k=4, min_join=min_join)
+        want = [index.query(sk, top_k=4, min_join=min_join,
+                            prefilter=False) for sk in sks]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+        adm = svc.stats()["admission"]
+        assert adm["prefiltered"] == q
+        assert adm["cands_considered"] == q * len(index)
+        assert adm["cands_shortlisted"] <= adm["cands_considered"]
+
+    def test_submit_interleaved_ingest_queue(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(6)
+        svc = DiscoveryService(
+            index=_selective_index(keys, y, rng), max_q_bucket=4
+        )
+        sks = _mixed_queue(keys, y, rng, 6)
+        svc.submit(sks, top_k=3, min_join=4)
+        svc.add("fresh", "k", "v", keys,
+                (0.8 * y + 0.2 * rng.normal(size=N_ROWS))
+                .astype(np.float32), False)
+        got = svc.submit(sks, top_k=3, min_join=4)
+        want = [svc.index.query(sk, top_k=3, min_join=4, prefilter=False)
+                for sk in sks]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+
+    def test_mesh_two_phase_equals_dense_local(self):
+        """The mesh shortlist path (shard-local prefilter, sharded
+        gather-and-score, on-device merge) returns exactly the dense
+        local ranking — no oversampling starvation by construction."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(7))
+        mesh = jax.make_mesh((1,), ("data",))
+        sk = _train(keys, y)
+        dense = index.query(sk, top_k=5, min_join=4, prefilter=False)
+        pref = index.query(sk, top_k=5, min_join=4, mesh=mesh,
+                           prefilter=True)
+        assert _flat(pref) == _flat(dense)
+        svc = DiscoveryService(index=index, mesh=mesh, max_q_bucket=2)
+        sks = _mixed_queue(keys, y, np.random.default_rng(8), 5)
+        got = svc.submit(sks, top_k=3, min_join=4)
+        want = [index.query(s, top_k=3, min_join=4, mesh=mesh)
+                for s in sks]
+        for g, w in zip(got, want):
+            assert _flat(g) == _flat(w)
+
+    def test_all_filtered_returns_empty(self):
+        """A corpus with zero joinable candidates yields [] per query
+        through every two-phase surface (local, mesh, service)."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(9)
+        index = _selective_index(keys, y, rng, n_joinable=0, n_disc=0,
+                                 n_disjoint=3)
+        sk = _train(keys, y)
+        assert index.query(sk, top_k=3, min_join=4, prefilter=True) == []
+        mesh = jax.make_mesh((1,), ("data",))
+        assert index.query(sk, top_k=3, min_join=4, mesh=mesh,
+                           prefilter=True) == []
+        svc = DiscoveryService(index=index)
+        assert svc.submit([sk, sk], top_k=3, min_join=4) == [[], []]
+
+
+class TestShortlistCompileBound:
+    """Acceptance: randomized min_join selectivity (and therefore
+    randomized shortlist sizes) compiles a set bounded by the
+    shortlist-bucket ladder."""
+
+    def test_randomized_shortlist_sizes_compile_bound(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(10)
+        index = _selective_index(keys, y, rng, n_joinable=5, n_disjoint=9,
+                                 n_disc=2)
+        svc = DiscoveryService(index=index, max_q_bucket=8)
+        queue = _mixed_queue(keys, y, rng, 48)
+        c0 = compile_count()
+        qi = 0
+        while qi < len(queue):
+            burst = int(rng.integers(1, 9))
+            # min_join sweeps the whole selectivity range, so shortlist
+            # sizes vary from "everything" to "nothing"
+            mj = int(rng.choice([1, 2, 4, 16, 64, 2000]))
+            svc.submit(queue[qi: qi + burst], top_k=3, min_join=mj)
+            qi += burst
+        compiles = compile_count() - c0
+        adm = svc.stats()["admission"]
+        n_groups = max(len(sig) - 1 for sig in svc.admission.signatures)
+        n_qb = len(adm["q_buckets"])
+        n_sb = max(len(adm["s_buckets"]), 1)
+        # phase 2 compiles one program per (estimator group, Q-bucket,
+        # shortlist bucket); phase 1 one per (Q-bucket, group bucket),
+        # estimator-independent — the +1 term absorbs it.  The ladder
+        # is what keeps n_sb (and so the whole product) small no matter
+        # how the random min_join selectivity landed.
+        bound = adm["signatures"] * n_groups * n_qb * (n_sb + 1)
+        assert compiles <= bound, (compiles, bound, adm)
+        assert compiles < adm["submitted"]
+        # repeat traffic compiles nothing
+        c1 = compile_count()
+        svc.submit(queue[:5], top_k=3, min_join=4)
+        svc.submit(queue[:5], top_k=3, min_join=4)
+        assert compile_count() == c1
+
+    def test_plan_cache_keys_grow_shortlist_bucket(self):
+        """Distinct shortlist signatures get distinct (bounded) cache
+        entries; equal selectivity hits."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(11))
+        svc = DiscoveryService(index=index)
+        sk = _train(keys, y)
+        svc.submit([sk], min_join=4)
+        misses = svc.plan_cache.stats["misses"]
+        svc.submit([sk], min_join=4)  # same selectivity: all hits
+        assert svc.plan_cache.stats["misses"] == misses
+        svc.submit([sk], min_join=2000)  # empty shortlist: new s_key
+        assert svc.plan_cache.stats["misses"] > misses
+
+
+class TestPlanPinning:
+    """Satellite: donation-aware plan pinning (retain/release epochs)."""
+
+    def _index(self, rng):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        return _selective_index(keys, y, rng), keys, y
+
+    def test_retained_plan_survives_interleaved_add_flush(self):
+        index, keys, y = self._index(np.random.default_rng(12))
+        sk = _train(keys, y)
+        train = index.train_arrays(sk)
+        plan = index.plan(False)
+        ex = PartitionedLocalExecutor()
+        mi0, js0 = ex.execute(plan, train)
+        with plan.retain():
+            # interleaved add + flush: the new plan's flush must copy,
+            # not donate, while the lease is live
+            index.add("mid", "k", "v", keys, y.copy(), False)
+            fresh = index.plan(False)
+            assert fresh is not plan
+            for gp in plan.groups:
+                assert not any(
+                    a.is_deleted() for a in gp.arrays.values()
+                ), "retained plan lost its buffers to a donated flush"
+            # the snapshot still scores, bit-identically to before
+            mi1, js1 = ex.execute(plan, train)
+            np.testing.assert_array_equal(mi0, mi1)
+            np.testing.assert_array_equal(js0, js1)
+            # and the fresh plan serves the grown corpus
+            assert fresh.n_candidates == plan.n_candidates + 1
+        # lease released: the next flush donates again (observable on
+        # donation-honoring backends via the in-place counter)
+        before = index.ingest_stats["inplace_flushes"]
+        index.add("late", "k", "v", keys, y.copy(), False)
+        index.plan(False)
+        if jax.default_backend() in ("cpu", "tpu", "gpu"):
+            assert index.ingest_stats["inplace_flushes"] > before
+
+    def test_pinned_flush_counts_as_copied(self):
+        index, keys, y = self._index(np.random.default_rng(13))
+        plan = index.plan(False)
+        stats0 = index.ingest_stats
+        lease = plan.retain()
+        try:
+            index.add("mid", "k", "v", keys, y.copy(), False)
+            index.plan(False)
+            stats1 = index.ingest_stats
+            assert stats1["copied_flushes"] > stats0["copied_flushes"]
+            assert stats1["inplace_flushes"] == stats0["inplace_flushes"]
+        finally:
+            lease.release()
+        lease.release()  # idempotent
+
+    def test_adhoc_plan_refuses_retain(self):
+        index, keys, y = self._index(np.random.default_rng(14))
+        cands = index.stacked(False)
+        plan = make_plan(cands, y_discrete=False)
+        with pytest.raises(ValueError, match="not built by a SketchIndex"):
+            plan.retain()
+
+    def test_query_results_identical_under_lease(self):
+        """Serving through the index while a lease is live is the same
+        bit-identical two-phase path (just copied flushes)."""
+        index, keys, y = self._index(np.random.default_rng(15))
+        sk = _train(keys, y)
+        with index.plan(False).retain():
+            index.add("mid", "k", "v", keys, y.copy(), False)
+            a = index.query(sk, top_k=5, min_join=4, prefilter=True)
+            b = index.query(sk, top_k=5, min_join=4, prefilter=False)
+            assert _flat(a) == _flat(b)
+
+
+class TestShardKLadder:
+    """Satellite: varied top_k traffic reuses pow-2 k-bucket shard
+    programs instead of minting one per exact top_k."""
+
+    def test_varied_topk_compile_bound(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(16))
+        mesh = jax.make_mesh((1,), ("data",))
+        sk = _train(keys, y)
+        # warm the k-bucket set with one query, then sweep top_k
+        index.query(sk, top_k=1, mesh=mesh, min_join=4, prefilter=False)
+        base = [_flat(index.query(sk, top_k=t, min_join=4, prefilter=False))
+                for t in range(1, 11)]
+        c0 = compile_count()
+        got = [_flat(index.query(sk, top_k=t, mesh=mesh, min_join=4,
+                                 prefilter=False))
+               for t in range(1, 11)]
+        compiles = compile_count() - c0
+        assert got == base  # ladder over-keep never changes results
+        n_groups = len(index.plan(False).groups)
+        # top_k 1..10 -> k-buckets {1, 2, 4, 8, 16}: per bucket one
+        # shard scorer per group + globalize + merge programs.  Without
+        # the ladder this sweep compiles ~10 of each.
+        n_kb = 5
+        assert compiles <= n_kb * (n_groups + 2), (compiles, n_groups)
+
+    def test_mesh_topk_ladder_results_exact(self):
+        """k_live slicing: asking for any top_k returns exactly top_k
+        results (or all valid ones) despite the wider bucketed merge."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _selective_index(keys, y, np.random.default_rng(17))
+        mesh = jax.make_mesh((1,), ("data",))
+        sk = _train(keys, y)
+        for t in (1, 3, 5):
+            res = index.query(sk, top_k=t, mesh=mesh, min_join=4)
+            assert len(res) == t
+            assert _flat(res) == _flat(
+                index.query(sk, top_k=t, min_join=4, prefilter=False))

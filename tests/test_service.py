@@ -280,6 +280,9 @@ class TestCompileBound:
     """Acceptance (b): bursty traffic compiles a bounded program set."""
 
     def test_randomized_bursty_workload_compile_bound(self):
+        """Dense-path admission bound (prefilter=False pins the original
+        one-phase contract; the two-phase compile bound — which adds the
+        shortlist-bucket axis — is asserted in test_prefilter.py)."""
         keys = _keys()
         y = RNG.normal(size=N_ROWS).astype(np.float32)
         rng = np.random.default_rng(10)
@@ -290,13 +293,14 @@ class TestCompileBound:
         qi = 0
         while qi < len(queue):  # random burst sizes: 1..16 queries
             burst = int(rng.integers(1, 17))
-            svc.submit(queue[qi: qi + burst], top_k=3, min_join=4)
+            svc.submit(queue[qi: qi + burst], top_k=3, min_join=4,
+                       prefilter=False)
             qi += burst
         # in-bucket ingest mid-traffic must not mint new programs either
         svc.add("cont_late", "k", "v", keys,
                 (0.7 * y + 0.3 * rng.normal(size=N_ROWS))
                 .astype(np.float32), False)
-        svc.submit(queue[:5], top_k=3, min_join=4)
+        svc.submit(queue[:5], top_k=3, min_join=4, prefilter=False)
         compiles = compile_count() - c0
         adm = svc.stats()["admission"]
         n_groups = max(
