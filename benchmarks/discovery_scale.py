@@ -13,6 +13,11 @@ This benchmark measures:
     live ingest interleaved, submitted through ``DiscoveryService``
     versus the sequential ``SketchIndex.query`` loop a naive service
     would run (gate: >=3x),
+  * fault-isolated serving (``discovery/service_fault_isolated``): the
+    same burst through ``submit_safe`` — per-query validation, staged
+    stats, non-finite fences — which must stay <=1.5x the legacy
+    ``submit`` on the fault-free path (isolation is ~free when nothing
+    fails),
   * two-phase joinability-gated retrieval
     (``discovery/prefilter_large_corpus``): a C=4096 selective-
     ``min_join`` corpus where ~6% of candidates can pass the join
@@ -296,6 +301,30 @@ def bench_discovery_throughput(quick: bool = False) -> list[tuple]:
                  f"speedup_vs_sequential_query={us_svc_seq / us_svc:.1f}x;"
                  f"signatures={adm['signatures']};"
                  f"q_buckets={'/'.join(map(str, adm['q_buckets']))}"))
+
+    # 2e. fault-isolated serving overhead: the same Q=32 mixed burst
+    # through submit_safe — admission validation per query, staged stats
+    # commit, and per-lane non-finite fences on the fault-free path.
+    # Isolation must be close to free when nothing fails; gate: <=1.5x
+    # the legacy submit, re-measured once before failing (explicit
+    # raise, not assert — gates must survive -O).
+    def _svc_safe():
+        return svc.submit_safe(burst, top_k=8, min_join=4)
+
+    _svc_safe()  # warmup (same compiled programs as submit)
+    us_safe = _measure(_svc_safe)
+    us_svc_base = _measure(_svc_burst)
+    if us_safe / us_svc_base > 1.5:
+        us_safe = _measure(_svc_safe)
+        us_svc_base = _measure(_svc_burst)
+        if us_safe / us_svc_base > 1.5:
+            raise RuntimeError(
+                f"submit_safe overhead regressed: "
+                f"{us_safe / us_svc_base:.2f}x > 1.5x over submit (twice)"
+            )
+    rows.append(("discovery/service_fault_isolated", us_safe,
+                 f"q_per_s={1e6 / us_safe:.0f};"
+                 f"overhead_vs_submit={us_safe / us_svc_base:.2f}x"))
 
     # 3. mesh-sharded top-k (collective-merged), through the serving
     # path a repeat caller uses: the index's cached plan + a held

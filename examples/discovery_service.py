@@ -21,13 +21,20 @@ the serving-architecture scenarios the layered engine exists for:
      the candidates that can pass, and only those pay the kNN-MI
      estimators.  Same results, cost scales with the joinable fraction
      of the repository instead of its size.
+  5. **Fault isolation**: a malformed query sketch and an injected
+     executor fault land in the same burst; ``submit_safe`` quarantines
+     the one and recovers the other down the executor ladder while
+     every healthy query still gets its bit-identical answer.
+  6. **Graceful drain**: SIGTERM mid-traffic (a preemption notice)
+     finishes the in-flight window, refuses the next one, and exits
+     clean — reusing the training stack's ``PreemptionGuard``.
 
     PYTHONPATH=src python examples/discovery_service.py
 """
 
 import numpy as np
 
-from repro.core.discovery import DiscoveryService, SketchIndex
+from repro.core.discovery import DiscoveryService, SketchIndex, inject_faults
 from repro.core.sketch import build_sketch
 from repro.data.tables import Table
 
@@ -197,3 +204,63 @@ print(f"\ntwo-phase retrieval: {adm['cands_filtered_out']} of "
       "out by the join-size prefilter before any estimator ran "
       f"(shortlist buckets {adm['s_buckets']}); gated results == dense "
       "scoring, bit for bit")
+
+# ---------------------------------------------------------------------------
+# Scenario 5: fault isolation.  One user submits a sketch whose values
+# are corrupted (NaN), and — simulated through the deterministic
+# inject_faults harness — the continuous bucket's phase-2 dispatch dies
+# on its first attempt.  submit_safe quarantines the bad sketch,
+# retries the faulted bucket, and every healthy query still comes back
+# bit-identical to a clean run.
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+clean_answers = service.submit(mixed_queue, top_k=3)
+
+bad_sk = train_sketch_for((y * np.nan).astype(np.float32))
+if not np.isnan(bad_sk.values[bad_sk.mask]).any():  # ensure it is poisoned
+    bad_sk = dataclasses.replace(
+        bad_sk, values=np.full_like(bad_sk.values, np.nan))
+
+with inject_faults({"shortlist_dispatch": [0]}) as fault_plan:
+    results, outcomes = service.submit_safe(
+        mixed_queue + [bad_sk], top_k=3)
+
+assert results[-1] is None and outcomes[-1].status == "quarantined"
+for q in range(len(mixed_queue)):
+    assert outcomes[q].ok
+    assert [(m.table, mi) for m, mi, _ in results[q]] == \
+           [(m.table, mi) for m, mi, _ in clean_answers[q]]
+adm = service.stats()["admission"]
+print(f"\nsubmit_safe under faults: 1 query quarantined "
+      f"({outcomes[-1].error}), {fault_plan.fired['shortlist_dispatch']} "
+      f"injected dispatch fault(s) recovered with {adm['retries']} "
+      f"retry(ies) and {adm['fallbacks']} fallback(s); the other "
+      f"{len(mixed_queue)} answers == clean run, bit for bit")
+
+# ---------------------------------------------------------------------------
+# Scenario 6: graceful drain on SIGTERM.  Cloud schedulers preempt with
+# a signal; the serving loop reuses the training stack's
+# PreemptionGuard — finish the window in flight, refuse the next, exit
+# clean.  (Simulated via guard.trigger(); a real SIGTERM sets the same
+# flag.)
+# ---------------------------------------------------------------------------
+
+from repro.train.fault_tolerance import PreemptionGuard
+
+guard = PreemptionGuard(install=True)  # hooks SIGTERM
+windows = [mixed_queue[:3], mixed_queue[3:6], mixed_queue[6:]]
+served = drained = 0
+for i, window in enumerate(windows):
+    if guard.requested:
+        drained += len(window)
+        continue  # preempted: refuse new windows, never drop in-flight
+    service.submit(window, top_k=3)
+    served += len(window)
+    if i == 0:
+        guard.trigger()  # the preemption notice lands mid-traffic
+print(f"\ngraceful drain: SIGTERM after window 0 -> served {served} "
+      f"in-flight queries, declined {drained} queued ones, exiting "
+      "clean (exit code 0; launchers treat PREEMPTED_EXIT_CODE=43 "
+      "from training jobs the same way)")

@@ -47,6 +47,17 @@ estimator-signature batch splitting, pow-two Q-axis bucketing with a
 transfer scheduling across the admitted buckets — while ``add`` ingests
 live through the index underneath.
 
+Serving faults are first-class (:mod:`~repro.core.discovery.resilience`):
+``DiscoveryService.submit_safe`` returns per-query
+:class:`QueryOutcome` records, quarantining invalid sketches at
+admission, retrying failed buckets under a :class:`RetryPolicy` and
+degrading them down the executor ladder (distributed -> batched ->
+reference loop, every rung bit-identical), and fencing non-finite MI
+lanes to the materialized reference estimator.  The deterministic
+:func:`inject_faults` harness arms named failure sites threaded through
+the executors and the index so every recovery path is testable without
+real hardware faults.
+
 Entry points: :meth:`DiscoveryService.submit` / ``.add`` (the service
 surface), :meth:`SketchIndex.query` (single query — exact signature
 and results of the pre-layered engine), :meth:`SketchIndex.query_many`
@@ -97,6 +108,18 @@ from repro.core.discovery.planner import (
     plan_signature,
     shortlist_signature,
 )
+from repro.core.discovery.resilience import (
+    FAULT_SITES,
+    FaultPlan,
+    InjectedFault,
+    QueryOutcome,
+    RetryPolicy,
+    fence_nonfinite,
+    inject_faults,
+    maybe_fault,
+    reference_score_pairs,
+    validate_query,
+)
 from repro.core.discovery.service import AdmissionStats, DiscoveryService
 
 __all__ = [
@@ -135,4 +158,14 @@ __all__ = [
     "score_batch_partitioned",
     "score_batch_reference",
     "distributed_topk",
+    "FAULT_SITES",
+    "FaultPlan",
+    "InjectedFault",
+    "QueryOutcome",
+    "RetryPolicy",
+    "fence_nonfinite",
+    "inject_faults",
+    "maybe_fault",
+    "reference_score_pairs",
+    "validate_query",
 ]

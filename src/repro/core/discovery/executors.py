@@ -90,6 +90,7 @@ from repro.core.discovery.planner import (
     pack_group,
     partition_by_estimator,
 )
+from repro.core.discovery.resilience import maybe_fault
 from repro.parallel.compat import shard_map
 
 __all__ = [
@@ -320,6 +321,7 @@ class _PendingJoinSizes:
         self._q_live = q_live
 
     def collect(self):
+        maybe_fault("collect")
         q = self._q_live
         return [(gp, np.asarray(_cut_q(js, q))) for gp, js in self._blocks]
 
@@ -336,6 +338,7 @@ class _PendingShortlist:
         self._q_live = q_live
 
     def collect(self):
+        maybe_fault("collect")
         q = self._q_live
         host = [(sl, np.asarray(_cut_q(mi, q))) for sl, mi in self._blocks]
         out = []
@@ -384,6 +387,7 @@ def stack_trains_host(sketches: list) -> dict:
     """
     if not sketches:
         raise ValueError("no train sketches")
+    maybe_fault("stack_h2d")
     y_disc = {bool(sk.value_is_discrete) for sk in sketches}
     if len(y_disc) != 1:
         raise ValueError(
@@ -444,6 +448,7 @@ class _PendingScores:
         self._q_live = q_live
 
     def collect(self):
+        maybe_fault("collect")
         q = self._q_live
         blocks = [
             (gp, _cut_q(mi, q), _cut_q(js, q))
@@ -474,6 +479,7 @@ class _PendingTopk:
         self._k_live = k_live
 
     def collect(self):
+        maybe_fault("collect")
         q = self._q_live
         if self._vals is None:
             empty = (np.zeros(0, np.float32), np.zeros(0, np.int64),
@@ -599,6 +605,7 @@ class BatchedExecutor(Executor):
         bit-identical to the unpadded run and the dead lanes never
         leave the device.
         """
+        maybe_fault("dispatch", "batched")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:
@@ -623,6 +630,7 @@ class BatchedExecutor(Executor):
         yields the (group, join-size matrix) pairs that
         :func:`~repro.core.discovery.planner.build_shortlists` turns
         into phase-2 shortlists."""
+        maybe_fault("prefilter_dispatch", "batched")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:
@@ -641,6 +649,7 @@ class BatchedExecutor(Executor):
         non-empty shortlist; the handle's ``collect`` returns per-query
         (values, global indices, join sizes) triples over exactly the
         candidates that passed the prefilter."""
+        maybe_fault("shortlist_dispatch", "batched")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:
@@ -922,6 +931,7 @@ class GroupMajorDistributedExecutor(Executor):
         ``collect``.  One ``lax.top_k`` over the concatenated group
         winners replaces the former per-query host merge loop, so merge
         traffic no longer scales with Q."""
+        maybe_fault("dispatch", "distributed")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:
@@ -964,6 +974,7 @@ class GroupMajorDistributedExecutor(Executor):
         the scorers do.  Returns the shard-padded groups' join sizes;
         pass ``multiple=mesh.shape['data']`` to ``build_shortlists`` so
         phase-2 shortlist buckets stay shardable."""
+        maybe_fault("prefilter_dispatch", "distributed")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:
@@ -988,6 +999,7 @@ class GroupMajorDistributedExecutor(Executor):
         path).  No oversampling: every scored candidate already passed
         ``min_join``, so ``top_k`` winners are exact — the 4x dense-path
         oversample against post-hoc filtering starvation is gone."""
+        maybe_fault("shortlist_dispatch", "distributed")
         trains = _as_stacked_trains(trains)
         Q = int(trains["keys"].shape[0])
         if q_bucket is not None:

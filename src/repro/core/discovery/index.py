@@ -60,6 +60,7 @@ from repro.core.discovery.planner import (
     build_shortlists,
     estimator_id,
 )
+from repro.core.discovery.resilience import maybe_fault
 from repro.core.sketch import Sketch, build_sketch
 
 __all__ = ["CandidateMeta", "SketchIndex", "topk_oversample"]
@@ -182,6 +183,10 @@ class _DeviceStore:
         n_new = block["keys"].shape[0]
         if n_new == 0:
             return
+        # Fault-injection site: fires *before* any store mutation, so an
+        # injected flush failure leaves rows/arrays consistent and the
+        # next flush retries the same pending block.
+        maybe_fault("flush")
         self.ensure_rows(self.rows + n_new)
         row0 = np.int32(self.rows)
         write = _write_block_donated if donate else _write_block_copied
@@ -246,9 +251,15 @@ class SketchIndex:
     # Ingest (host-side append; device flush is deferred and incremental)
     # ------------------------------------------------------------------
 
-    def add(self, table: str, key_column: str, value_column: str,
-            key_hashes: np.ndarray, values: np.ndarray,
-            value_is_discrete: bool | None = None, agg: str | None = None) -> None:
+    def _build_validated(
+        self, key_hashes: np.ndarray, values: np.ndarray,
+        value_is_discrete: bool | None, agg: str | None,
+        cap_cols: int | None,
+    ) -> Sketch:
+        """Build one candidate sketch and run every ingest invariant
+        against ``cap_cols`` (the committed capacity, or a staged
+        table's provisional one) — without touching index state, so a
+        caller can validate a whole batch before committing any of it."""
         sk = build_sketch(
             key_hashes, values, n=self.n, method=self.method, side="cand",
             agg=agg or self.agg, value_is_discrete=value_is_discrete,
@@ -261,13 +272,19 @@ class SketchIndex:
             raise ValueError(
                 "candidate sketch violates the sorted-at-ingest key invariant"
             )
-        if self._cap_cols is None:
-            self._cap_cols = sk.capacity
-        elif sk.capacity != self._cap_cols:
+        if cap_cols is not None and sk.capacity != cap_cols:
             raise ValueError(
                 f"sketch capacity {sk.capacity} != index capacity "
-                f"{self._cap_cols} (one n/method per index)"
+                f"{cap_cols} (one n/method per index)"
             )
+        return sk
+
+    def _commit(self, table: str, key_column: str, value_column: str,
+                sk: Sketch) -> None:
+        """Append one validated sketch to the host buffers (the device
+        stores pick it up at the next flush)."""
+        if self._cap_cols is None:
+            self._cap_cols = sk.capacity
         self.meta.append(
             CandidateMeta(table, key_column, value_column, sk.value_is_discrete)
         )
@@ -279,13 +296,50 @@ class SketchIndex:
         self._discrete.append(sk.value_is_discrete)
         self._version += 1
 
+    def add(self, table: str, key_column: str, value_column: str,
+            key_hashes: np.ndarray, values: np.ndarray,
+            value_is_discrete: bool | None = None, agg: str | None = None) -> None:
+        sk = self._build_validated(
+            key_hashes, values, value_is_discrete, agg, self._cap_cols
+        )
+        self._commit(table, key_column, value_column, sk)
+
     def add_table(self, table, key_column: str) -> None:
-        """Index every (key, value) column pair of a Table."""
+        """Index every (key, value) column pair of a Table, atomically.
+
+        All columns are built and validated *before* any is committed:
+        a poisoned column anywhere in the table (a ``build_sketch``
+        failure, a sorted-key-invariant or capacity violation) raises
+        with the index exactly as it was — no earlier columns ingested,
+        no ``_version`` bump, queries unaffected.  The commit loop is
+        host-list appends only (device flushes happen at the next
+        query), with a rollback guard restoring the pre-table snapshot
+        should one ever fail mid-table.
+        """
         key_codes = table[key_column].key_codes()
+        staged: list[tuple[str, Sketch]] = []
+        cap = self._cap_cols
         for _, val_col in table.pairs(key_column):
             col = table[val_col]
-            self.add(table.name, key_column, val_col, key_codes,
-                     col.value_array(), col.is_discrete)
+            sk = self._build_validated(
+                key_codes, col.value_array(), col.is_discrete, None, cap
+            )
+            if cap is None:
+                # First column of a fresh index pins the provisional
+                # capacity the rest of the table must match.
+                cap = sk.capacity
+            staged.append((val_col, sk))
+        n0, v0, c0 = len(self.meta), self._version, self._cap_cols
+        try:
+            for val_col, sk in staged:
+                self._commit(table.name, key_column, val_col, sk)
+        except Exception:
+            del self.meta[n0:]
+            for lst in (self._keys, self._vals_f, self._vals_u,
+                        self._masks, self._discrete):
+                del lst[n0:]
+            self._version, self._cap_cols = v0, c0
+            raise
 
     @property
     def ingest_stats(self) -> dict:

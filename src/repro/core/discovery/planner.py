@@ -447,6 +447,7 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.build_failures = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -469,8 +470,16 @@ class PlanCache:
             self.hits += 1
             self._entries[key] = hit  # re-insert: LRU touch
             return hit
+        # A failed build caches nothing and is counted apart from
+        # misses — under a failing (and later recovered) bucket the
+        # hit/miss ledger keeps matching the entries that exist, so
+        # steady-state "replans nothing" assertions stay meaningful.
+        try:
+            plan = build()
+        except Exception:
+            self.build_failures += 1
+            raise
         self.misses += 1
-        plan = build()
         sp = ServicePlan(plan, int(q_bucket), plan_signature(plan), s_key)
         while len(self._entries) >= self.max_entries:
             self._entries.pop(next(iter(self._entries)))
@@ -485,6 +494,7 @@ class PlanCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "build_failures": self.build_failures,
         }
 
 

@@ -1,0 +1,412 @@
+"""Resilience layer for the discovery serving stack: per-query outcomes,
+bucket-level fault isolation, numeric fences, and a deterministic
+fault-injection harness.
+
+An online discovery service (the framing of Correlation Sketches, Santos
+et al. 2021, and Table Enrichment, Dong & Oyamada 2022) meets bad inputs
+and transient backend failures as steady state, not exceptions: one
+malformed query sketch in a 32-query burst must not lose the other 31
+answers, and a flaky dispatch in one (signature, Q-bucket) batch must
+not abort the submit.  This module provides the four pieces
+``DiscoveryService.submit_safe`` composes:
+
+  * **Admission validation + quarantine** — :func:`validate_query`
+    checks every sketch before it reaches the executors (capacity/``n``
+    vs. the index, empty/all-masked, non-finite values, unknown dtype);
+    offenders are quarantined into structured :class:`QueryOutcome`
+    errors while the rest of the queue serves bit-identically.
+  * **Retry/fallback ladder** — :class:`RetryPolicy` bounds same-rung
+    re-attempts with exponential backoff; a bucket that exhausts its
+    primary executor degrades down the ladder (distributed mesh ->
+    single-device batched -> reference ``SketchIndex.query`` loop),
+    every rung bit-identical to the dense path.
+  * **Numeric fences** — :func:`fence_nonfinite` detects non-finite MI
+    scores per (query, candidate) lane after collect and demotes the
+    affected lanes to the materialized reference estimator path
+    (:func:`reference_score_pairs`) instead of silently ranking NaNs.
+    Fused and materialized estimator impls are bit-identical repo-wide,
+    so a demoted lane reproduces the clean score exactly.
+  * **Deterministic fault injection** — :func:`inject_faults` arms named
+    sites threaded through ``executors.py`` (``stack_h2d``,
+    ``dispatch``, ``prefilter_dispatch``, ``shortlist_dispatch``,
+    ``collect``) and ``index.py`` (``flush``) with seeded failure
+    schedules, so every retry/fallback/quarantine path is exercised in
+    tests without real hardware faults — the same discipline
+    ``train/fault_tolerance.py`` uses to test preemption without real
+    preemption.  The pseudo-site ``scores`` does not raise: it corrupts
+    collected MI lanes with NaN (:func:`corrupt_scores`) to drive the
+    numeric fence end-to-end.
+
+Import discipline: this module sits *below* ``executors``/``index``/
+``service`` in the import graph (they call the hooks here), so it must
+not import them at module scope — the reference scorer imports
+``executors`` lazily inside the traced function.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.discovery.planner import estimator_id
+
+__all__ = [
+    "FAULT_SITES",
+    "FaultPlan",
+    "InjectedFault",
+    "QueryOutcome",
+    "RetryPolicy",
+    "corrupt_scores",
+    "fence_nonfinite",
+    "inject_faults",
+    "maybe_fault",
+    "reference_score_pairs",
+    "validate_query",
+]
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness
+# ---------------------------------------------------------------------------
+
+# Named sites instrumented through the serving stack.  Raising sites
+# abort the enclosing bucket stage; "scores" is a corruption site (NaN
+# lanes, consumed by corrupt_scores) and never raises.
+FAULT_SITES = (
+    "stack_h2d",           # executors.stack_trains_host (train upload)
+    "dispatch",            # dense dispatch (batched / distributed)
+    "prefilter_dispatch",  # two-phase phase 1 enqueue
+    "shortlist_dispatch",  # two-phase phase 2 enqueue
+    "collect",             # any pending handle's first host sync
+    "flush",               # index._DeviceStore.append_block (ingest)
+    "scores",              # NaN corruption of collected MI lanes
+)
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed fault site; carries the site key + invocation."""
+
+
+class FaultPlan:
+    """One armed injection schedule (see :func:`inject_faults`).
+
+    ``schedule`` maps a site key to *which invocations fail*:
+
+      * ``"site"`` matches the site under any executor scope;
+        ``"site@scope"`` (scope in ``{"batched", "distributed"}``)
+        matches only that executor's calls.
+      * value ``"all"`` — every invocation raises;
+        ``int n`` — the first ``n`` invocations raise;
+        iterable of ints — exactly those 0-based invocation indices
+        raise.  (For the ``scores`` corruption site the int is instead
+        the number of lanes to NaN per collected bucket.)
+
+    Invocation counters are per schedule key and advance only while the
+    plan is armed, so a schedule is a deterministic function of the
+    call sequence — tests can target "the first bucket's phase-2
+    dispatch" exactly.  ``seed`` drives only the ``scores`` lane
+    picker (and is how the CI ``REPRO_FAULT_SEED`` matrix varies runs).
+    """
+
+    def __init__(self, schedule: dict, *, seed: int = 0):
+        self.schedule: dict[str, object] = {}
+        for key, val in dict(schedule).items():
+            site = key.split("@", 1)[0]
+            if site not in FAULT_SITES:
+                raise ValueError(
+                    f"unknown fault site {site!r}; sites: {FAULT_SITES}"
+                )
+            if site == "scores":
+                self.schedule[key] = int(val)
+            elif val == "all":
+                self.schedule[key] = "all"
+            elif isinstance(val, (int, np.integer)):
+                self.schedule[key] = frozenset(range(int(val)))
+            else:
+                self.schedule[key] = frozenset(int(i) for i in val)
+        self.counts: dict[str, int] = {}
+        self.fired: dict[str, int] = {}
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.corrupted = 0  # lanes NaN'd via the "scores" site
+
+    def _keys_for(self, site: str, scope: str | None) -> list[str]:
+        keys = []
+        if scope is not None and f"{site}@{scope}" in self.schedule:
+            keys.append(f"{site}@{scope}")
+        if site in self.schedule:
+            keys.append(site)
+        return keys
+
+    def check(self, site: str, scope: str | None) -> None:
+        for key in self._keys_for(site, scope):
+            sched = self.schedule[key]
+            idx = self.counts.get(key, 0)
+            self.counts[key] = idx + 1
+            if sched == "all" or idx in sched:
+                self.fired[key] = self.fired.get(key, 0) + 1
+                raise InjectedFault(f"injected fault at {key}[{idx}]")
+
+    def scores_lanes(self) -> int:
+        """Lanes to corrupt per collected bucket (0 = site unarmed)."""
+        return int(self.schedule.get("scores", 0))
+
+
+_ACTIVE: FaultPlan | None = None
+
+
+def maybe_fault(site: str, scope: str | None = None) -> None:
+    """Hook called at every instrumented site; no-op unless a plan is
+    armed via :func:`inject_faults` (one branch on the hot path)."""
+    if _ACTIVE is not None:
+        _ACTIVE.check(site, scope)
+
+
+@contextlib.contextmanager
+def inject_faults(schedule: dict, *, seed: int = 0):
+    """Arm a deterministic fault schedule for the enclosed block.
+
+    Yields the :class:`FaultPlan` so tests can assert exactly which
+    injections fired (``plan.fired``) and how many score lanes were
+    corrupted (``plan.corrupted``).  Plans do not nest — the schedule
+    counters are the determinism contract, and two overlapping plans
+    would race for them.
+    """
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("inject_faults does not nest")
+    plan = FaultPlan(schedule, seed=seed)
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = None
+
+
+def corrupt_scores(
+    v: np.ndarray, eligible: np.ndarray
+) -> np.ndarray:
+    """Apply the ``scores`` corruption site: NaN seeded eligible lanes.
+
+    ``eligible`` marks lanes that would actually rank (live candidate,
+    join size past the predicate) — fenced/sentinel lanes are never
+    corrupted, mirroring where real estimator NaNs could surface.
+    Returns ``v`` untouched unless a plan with a ``scores`` entry is
+    armed.
+    """
+    plan = _ACTIVE
+    if plan is None:
+        return v
+    n = plan.scores_lanes()
+    if n <= 0:
+        return v
+    idx = np.flatnonzero(np.asarray(eligible) & np.isfinite(v))
+    if idx.size == 0:
+        return v
+    pick = plan.rng.choice(idx, size=min(n, idx.size), replace=False)
+    out = np.array(v, copy=True)
+    out[pick] = np.nan
+    plan.corrupted += int(pick.size)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-query outcomes + admission validation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QueryOutcome:
+    """Structured per-query serving outcome (one per submitted query).
+
+    ``status`` is ``"ok"`` (result delivered), ``"quarantined"``
+    (rejected at admission validation — ``error`` carries the code,
+    ``detail`` the human-readable reason), or ``"failed"`` (the bucket
+    exhausted the whole executor ladder; the paired result is None).
+    ``rung`` names the executor that delivered the result
+    (``distributed`` / ``batched`` / ``reference``); ``retries`` /
+    ``fallbacks`` count what recovery cost this query's bucket;
+    ``nonfinite_lanes`` counts score lanes the numeric fence demoted to
+    the reference path for this query.
+    """
+
+    query: int
+    status: str
+    rung: str | None = None
+    error: str | None = None
+    detail: str | None = None
+    retries: int = 0
+    fallbacks: int = 0
+    nonfinite_lanes: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+def validate_query(sk, index) -> tuple[str, str] | None:
+    """Admission validation of one train sketch against an index.
+
+    Returns None for a servable sketch, else ``(code, detail)`` with a
+    stable error code: ``invalid_sketch`` (not sketch-shaped),
+    ``unknown_dtype`` (non-numeric values / non-bool dtype flag),
+    ``capacity_mismatch`` (capacity or ``n`` differs from the index —
+    the stacked executors would crash or silently mis-join),
+    ``empty_sketch`` (no live rows), ``nonfinite_values`` (NaN/inf in
+    live continuous values — poisons every estimator lane it joins).
+    Validation is host-side numpy over one sketch: O(capacity), paid
+    once at admission instead of a crash deep in ``stack_trains_host``
+    or the scorers.
+    """
+    try:
+        cap = int(sk.capacity)
+        mask = np.asarray(sk.mask, dtype=bool)
+        values = np.asarray(sk.values)
+        keys = np.asarray(sk.key_hashes)
+        disc = sk.value_is_discrete
+        n = int(sk.n)
+    except Exception as e:  # noqa: BLE001 — anything non-sketch-shaped
+        return ("invalid_sketch", f"not a servable sketch: {e!r}")
+    if not isinstance(disc, (bool, np.bool_)):
+        return (
+            "unknown_dtype",
+            f"value_is_discrete must be bool, got {type(disc).__name__}",
+        )
+    if not np.issubdtype(values.dtype, np.number):
+        return ("unknown_dtype", f"unsupported value dtype {values.dtype}")
+    if keys.shape != values.shape or keys.shape != mask.shape:
+        return (
+            "invalid_sketch",
+            f"ragged sketch arrays: keys {keys.shape}, values "
+            f"{values.shape}, mask {mask.shape}",
+        )
+    if index._cap_cols is not None and cap != index._cap_cols:
+        return (
+            "capacity_mismatch",
+            f"sketch capacity {cap} != index capacity {index._cap_cols}",
+        )
+    if n != index.n:
+        return ("capacity_mismatch", f"sketch n={n} != index n={index.n}")
+    if not mask.any():
+        return ("empty_sketch", "no live rows (empty or all-masked sketch)")
+    live = values[mask]
+    if not disc and not np.all(np.isfinite(live.astype(np.float64))):
+        return (
+            "nonfinite_values",
+            f"{int((~np.isfinite(live.astype(np.float64))).sum())} "
+            "non-finite live values",
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Retry policy
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for same-rung bucket re-attempts.
+
+    ``max_retries`` re-attempts per rung after the rung's first failed
+    attempt, sleeping ``base_delay * 2**i`` (capped at ``max_delay``)
+    before each.  ``sleep`` is injectable so tests run at full speed;
+    the defaults keep a fully-exhausted rung under ~35 ms of backoff —
+    transient dispatch faults (allocator pressure, a mid-flush race)
+    clear in that window, and persistent ones should fall through the
+    ladder quickly rather than stall the queue.
+    """
+
+    max_retries: int = 2
+    base_delay: float = 0.01
+    max_delay: float = 0.25
+    sleep: object = time.sleep
+
+    def delays(self) -> list[float]:
+        return [
+            min(self.base_delay * (2 ** i), self.max_delay)
+            for i in range(self.max_retries)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Numeric fences: demote non-finite score lanes to the reference path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("est_id", "k"))
+def _reference_pair(
+    tk, tf, tu, tm, ck, cf, cu, cm, *, est_id: int, k: int
+):
+    """Materialized-impl MI of one (train, candidate) sketch pair —
+    the same join + estimator body the group scorers run, minus the
+    fused kNN kernel (the path a fence demotion must not depend on)."""
+    from repro.core.discovery import executors as _ex
+    from repro.core.join import sketch_join_presorted
+
+    (xf, xu), (y_f, y_u), mask = sketch_join_presorted(
+        tk, tm, ck, cm, (cf, cu), (tf, tu), keys_effective=True,
+    )
+    mi = _ex._estimate(est_id, xf, xu, y_f, y_u, mask, k,
+                       impl="materialized")
+    return mi, jnp.sum(mask)
+
+
+def reference_score_pairs(index, sk, cand_ids, k: int) -> np.ndarray:
+    """Reference MI for explicit (query, candidate) pairs.
+
+    Scores each pair through the materialized estimator path straight
+    from the index's host rows — no executor, no fused kernel, no
+    shared batch state — which is what makes it a safe target for
+    demoting lanes the fused path returned non-finite.  Fused ==
+    materialized is asserted bit-exact across the estimator suite, so
+    when the fused value was *corrupted* (not genuinely non-finite),
+    the demoted lane reproduces the clean score exactly.
+    """
+    train = index.train_arrays(sk)
+    t_args = (train["keys"], train["vals_f"], train["vals_u"],
+              train["mask"])
+    y_disc = bool(sk.value_is_discrete)
+    out = np.empty(len(cand_ids), np.float32)
+    for j, ci in enumerate(cand_ids):
+        row = index._host_row(int(ci))
+        eid = estimator_id(index._discrete[int(ci)], y_disc)
+        mi, _ = _reference_pair(
+            *t_args,
+            jnp.asarray(row["keys"]), jnp.asarray(row["vals_f"]),
+            jnp.asarray(row["vals_u"]), jnp.asarray(row["mask"]),
+            est_id=eid, k=k,
+        )
+        out[j] = np.float32(mi)
+    return out
+
+
+def fence_nonfinite(
+    v, gi, js, index, sk, min_join: int, k: int
+) -> tuple[np.ndarray, int]:
+    """Detect and repair non-finite MI lanes in one query's triples.
+
+    A lane is fenced only if it would actually rank — live candidate
+    (``gi`` below the sentinel) passing ``min_join`` — so the -inf /
+    sentinel padding the executors legitimately emit is never touched.
+    Fenced lanes are recomputed via :func:`reference_score_pairs` and
+    substituted in place.  Returns ``(v_fixed, n_demoted)``.
+    """
+    v = np.asarray(v, dtype=np.float32)
+    gi = np.asarray(gi)
+    js = np.asarray(js)
+    bad = ~np.isfinite(v) & (gi < len(index)) & (js >= min_join)
+    n = int(bad.sum())
+    if n == 0:
+        return v, 0
+    idx = np.flatnonzero(bad)
+    out = np.array(v, copy=True)
+    out[idx] = reference_score_pairs(index, sk, gi[idx], k)
+    return out, n

@@ -48,6 +48,27 @@ shortlist gather-and-score — see ``executors.py``), so the expensive
 kNN-MI work scales with the *joinable* fraction of the corpus, not the
 corpus.  ``stats()`` reports the candidate pairs the gate filtered out
 of estimator scoring, alongside the shortlist-bucket ladder traffic.
+
+**Fault isolation** (see ``resilience.py``): ``submit_safe`` wraps the
+same pipeline in the resilience layer and returns ``(results,
+outcomes)`` — one :class:`~repro.core.discovery.resilience.QueryOutcome`
+per submitted query.  Sketches failing admission validation are
+*quarantined* (structured error, no executor ever sees them) while the
+rest of the queue serves bit-identically; a bucket whose dispatch or
+collect raises is *retried* under the service's
+:class:`~repro.core.discovery.resilience.RetryPolicy` and then degrades
+down the executor ladder (distributed mesh -> single-device batched ->
+reference per-query loop), every rung bit-identical to the dense path,
+with every other bucket's results unaffected; non-finite MI lanes are
+*fenced* — demoted to the materialized reference estimator instead of
+silently ranked.  Stats discipline in both surfaces: arrival counters
+(``submits``/``submitted``/``signatures``/``split_batches``/
+``quarantined``) commit at admission, but delivery counters
+(``batches``/``padded_lanes``/``prefiltered``/``cands_*``/buckets) are
+*staged per bucket* and committed only after that bucket's collect —
+a raise mid-submit can no longer leave ``stats()`` claiming work that
+never delivered.  Failures are counted explicitly
+(``failed_buckets``/``retries``/``fallbacks``/``lost_queries``).
 """
 
 from __future__ import annotations
@@ -59,6 +80,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.discovery import executors as _ex
+from repro.core.discovery import resilience
 from repro.core.discovery.index import SketchIndex, topk_oversample
 from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
@@ -68,6 +90,7 @@ from repro.core.discovery.planner import (
     plan_signature,
     shortlist_signature,
 )
+from repro.core.discovery.resilience import QueryOutcome, RetryPolicy
 from repro.core.sketch import Sketch
 
 __all__ = ["AdmissionStats", "DiscoveryService"]
@@ -75,16 +98,28 @@ __all__ = ["AdmissionStats", "DiscoveryService"]
 
 @dataclass
 class AdmissionStats:
-    """What admission control did to the traffic so far."""
+    """What admission control did to the traffic so far.
+
+    Arrival counters commit when a submit is admitted; delivery
+    counters (``batches`` onwards) only after the owning bucket's
+    results were actually collected, so the ledger always matches the
+    results callers received — even across mid-submit failures.
+    """
 
     submitted: int = 0       # queries accepted across all submit() calls
     submits: int = 0         # submit() calls
-    batches: int = 0         # admitted (signature, Q-bucket) dispatches
+    quarantined: int = 0     # queries rejected at admission validation
+    batches: int = 0         # (signature, Q-bucket) buckets that delivered
     split_batches: int = 0   # chunks forced by the max_q_bucket cap
     padded_lanes: int = 0    # dead query lanes paid to ride the ladder
     prefiltered: int = 0     # queries served via two-phase retrieval
     cands_considered: int = 0   # (query, candidate) pairs seen by phase 1
     cands_shortlisted: int = 0  # pairs that reached phase-2 scoring
+    failed_buckets: int = 0  # buckets whose primary executor pass raised
+    retries: int = 0         # same-rung re-attempts across all buckets
+    fallbacks: int = 0       # executor-ladder descents across all buckets
+    nonfinite_lanes: int = 0  # score lanes fenced to the reference path
+    lost_queries: int = 0    # queries whose bucket exhausted the ladder
     signatures: set = field(default_factory=set)
     q_buckets: set = field(default_factory=set)
     s_buckets: set = field(default_factory=set)
@@ -93,6 +128,7 @@ class AdmissionStats:
         return {
             "submitted": self.submitted,
             "submits": self.submits,
+            "quarantined": self.quarantined,
             "batches": self.batches,
             "split_batches": self.split_batches,
             "padded_lanes": self.padded_lanes,
@@ -103,17 +139,52 @@ class AdmissionStats:
             # path would have paid for candidates min_join discards.
             "cands_filtered_out":
                 self.cands_considered - self.cands_shortlisted,
+            "failed_buckets": self.failed_buckets,
+            "retries": self.retries,
+            "fallbacks": self.fallbacks,
+            "nonfinite_lanes": self.nonfinite_lanes,
+            "lost_queries": self.lost_queries,
             "signatures": len(self.signatures),
             "q_buckets": sorted(self.q_buckets),
             "s_buckets": sorted(self.s_buckets),
         }
 
 
+class _BucketJob:
+    """One admitted (signature, Q-bucket) bucket moving through the
+    dispatch -> collect pipeline, carrying its staged stat deltas (only
+    committed after a successful collect) and its recovery bookkeeping.
+    """
+
+    __slots__ = (
+        "chunk", "y_disc", "q_bucket", "sp", "sketches", "trains",
+        "pend1", "handle", "rung", "retries", "fallbacks", "error",
+        "staged",
+    )
+
+    def __init__(self, chunk: list[int], y_disc: bool):
+        self.chunk = chunk
+        self.y_disc = y_disc
+        self.q_bucket = 0
+        self.sp = None
+        self.sketches = None
+        self.trains = None
+        self.pend1 = None
+        self.handle = None
+        self.rung = None
+        self.retries = 0
+        self.fallbacks = 0
+        self.error = None
+        self.staged: dict = {}
+
+
 class DiscoveryService:
     """Serving surface: live ingest + concurrent mixed queries.
 
     ``add``/``add_table`` ingest candidate columns; ``submit`` answers a
-    queue of train sketches.  One service owns one
+    queue of train sketches (``submit_safe`` does the same behind
+    per-query quarantine, a retry/fallback executor ladder, and numeric
+    fences — see ``resilience.py``).  One service owns one
     :class:`SketchIndex` (pass ``index=`` to wrap an existing corpus)
     and, optionally, one mesh — with ``mesh=`` every admitted bucket
     runs the group-major distributed executor and returns ranked
@@ -131,6 +202,7 @@ class DiscoveryService:
         mesh: Mesh | None = None,
         max_q_bucket: int = MAX_Q_BUCKET,
         plan_cache_size: int = 32,
+        retry_policy: RetryPolicy | None = None,
     ):
         self.index = index if index is not None else SketchIndex(
             n=n, method=method, agg=agg
@@ -149,6 +221,8 @@ class DiscoveryService:
         self.max_q_bucket = max_q_bucket
         self.plan_cache = PlanCache(plan_cache_size)
         self.admission = AdmissionStats()
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy()
         self._batched = _ex.BatchedExecutor(k=k)
         # Share the index's per-(mesh, k) distributed executor so the
         # service and direct index.query(mesh=...) callers hit one
@@ -167,7 +241,8 @@ class DiscoveryService:
         self.index.add(*args, **kwargs)
 
     def add_table(self, table, key_column: str) -> None:
-        """Ingest every (key, value) pair of a table."""
+        """Ingest every (key, value) pair of a table (atomic — see
+        :meth:`SketchIndex.add_table`)."""
         self.index.add_table(table, key_column)
 
     def __len__(self) -> int:
@@ -211,132 +286,402 @@ class DiscoveryService:
         transfer, so the dispatch-before-transfer discipline holds
         within each phase.  ``stats()`` reports how many candidate
         pairs the gate filtered out of estimator scoring.
+
+        This is the legacy all-or-nothing surface: the first bucket
+        failure is counted (``failed_buckets``) and re-raised, with the
+        failed submit's delivery counters left uncommitted.  Use
+        :meth:`submit_safe` for per-query quarantine, the executor
+        fallback ladder, and numeric fencing.
         """
-        queries = list(queries)
+        results, _ = self._submit(
+            list(queries), top_k=top_k, min_join=min_join,
+            prefilter=prefilter, isolate=False,
+        )
+        return results
+
+    def submit_safe(
+        self,
+        queries: list[Sketch],
+        *,
+        top_k: int = 10,
+        min_join: int = 8,
+        prefilter: bool | None = None,
+    ) -> tuple[list, list]:
+        """Fault-isolated :meth:`submit`: ``(results, outcomes)``.
+
+        Every query gets a :class:`QueryOutcome`.  Invalid sketches are
+        quarantined at admission (``status="quarantined"``, ``results``
+        entry None) and never reach an executor; the remaining queue is
+        served bit-identically to a clean :meth:`submit`.  A bucket
+        whose dispatch or collect raises retries under
+        ``self.retry_policy`` and then descends the executor ladder
+        (distributed -> batched -> reference per-query loop, each rung
+        bit-identical); only if the whole ladder is exhausted do that
+        bucket's queries come back ``status="failed"``.  Non-finite MI
+        lanes are fenced to the materialized reference estimator and
+        counted per query (``nonfinite_lanes``) instead of being
+        ranked.
+        """
+        return self._submit(
+            list(queries), top_k=top_k, min_join=min_join,
+            prefilter=prefilter, isolate=True,
+        )
+
+    def _submit(
+        self, queries: list[Sketch], *, top_k: int, min_join: int,
+        prefilter: bool | None, isolate: bool,
+    ) -> tuple[list, list]:
         if not queries:
-            return []
+            return [], []
         st = self.admission
         st.submits += 1
-        st.submitted += len(queries)
+        results: list = [None] * len(queries)
+        outcomes: list = [None] * len(queries)
+
+        # 0. admission validation: quarantine sketches the pipeline
+        # cannot serve (isolate mode only — the legacy surface keeps
+        # its raise-from-the-depths behavior for invalid inputs).
+        admitted: list[int] = []
+        for qi, sk in enumerate(queries):
+            if isolate:
+                bad = resilience.validate_query(sk, self.index)
+                if bad is not None:
+                    code, detail = bad
+                    outcomes[qi] = QueryOutcome(
+                        qi, "quarantined", error=code, detail=detail
+                    )
+                    st.quarantined += 1
+                    continue
+            admitted.append(qi)
+        st.submitted += len(admitted)
+        if not admitted:
+            return results, outcomes
+
         C = len(self.index)
         version = self.index._version
         use_pref = self.index._use_prefilter(prefilter, min_join)
         n_shards = self.mesh.shape["data"] if self.mesh is not None else 1
+        primary_rung = "distributed" if self._dist is not None else "batched"
 
         # 1. split the queue per target dtype -> estimator signature
         # (constant per dtype within one submit: nothing can flush
         # mid-call, so compute it once per dtype, not per query).
         by_sig: dict[tuple, list[int]] = {}
-        plans: dict[bool, object] = {}
-        sigs: dict[bool, tuple] = {}
-        for qi, sk in enumerate(queries):
-            y_disc = bool(sk.value_is_discrete)
-            if y_disc not in plans:
-                plans[y_disc] = self.index.plan(y_disc, k=self.k)
-                sigs[y_disc] = plan_signature(plans[y_disc])
-            by_sig.setdefault(sigs[y_disc], []).append(qi)
+        try:
+            plans: dict[bool, object] = {}
+            sigs: dict[bool, tuple] = {}
+            for qi in admitted:
+                y_disc = bool(queries[qi].value_is_discrete)
+                if y_disc not in plans:
+                    plans[y_disc] = self.index.plan(y_disc, k=self.k)
+                    sigs[y_disc] = plan_signature(plans[y_disc])
+                by_sig.setdefault(sigs[y_disc], []).append(qi)
+        except Exception as e:  # noqa: BLE001 — isolate into outcomes
+            if not isolate:
+                raise
+            # Planning failed for the whole queue (e.g. empty index):
+            # there is no per-bucket ladder to descend yet.
+            for qi in admitted:
+                outcomes[qi] = QueryOutcome(
+                    qi, "failed", error="plan_failed", detail=repr(e)
+                )
+            st.lost_queries += len(admitted)
+            return results, outcomes
+
+        jobs: list[_BucketJob] = []
+        for sig, idxs in by_sig.items():
+            st.signatures.add(sig)
+            n_chunks = -(-len(idxs) // self.max_q_bucket)
+            st.split_batches += n_chunks - 1
+            for chunk in self._chunks(idxs):
+                jobs.append(_BucketJob(chunk, sig[0]))
 
         # 2. chunk to the Q cap, bucket, and dispatch every batch before
         # any collect (dispatch-before-transfer across buckets).  With
         # the prefilter on, "dispatch" here is phase 1 — the join-size
         # pass; scoring work is not enqueued until its shortlist exists.
-        pending = []
-        phase1 = []
-        for sig, idxs in by_sig.items():
-            y_disc = sig[0]
-            st.signatures.add(sig)
-            n_chunks = -(-len(idxs) // self.max_q_bucket)
-            st.split_batches += n_chunks - 1
-            for chunk in self._chunks(idxs):
-                q_bucket = bucket_queries(len(chunk), self.max_q_bucket)
-                sp = self.plan_cache.lookup(
-                    version, y_disc, q_bucket,
-                    lambda y=y_disc: self.index.plan(y, k=self.k),
+        # Stat deltas are *staged* on the job and committed only after
+        # its collect succeeds.
+        for job in jobs:
+            job.rung = primary_rung
+            try:
+                job.q_bucket = bucket_queries(
+                    len(job.chunk), self.max_q_bucket
                 )
-                st.batches += 1
-                st.q_buckets.add(q_bucket)
-                st.padded_lanes += q_bucket - len(chunk)
-                trains = _ex.stack_trains_host(
-                    [queries[i] for i in chunk]
+                job.sp = self.plan_cache.lookup(
+                    version, job.y_disc, job.q_bucket,
+                    lambda y=job.y_disc: self.index.plan(y, k=self.k),
                 )
+                job.staged = {
+                    "batches": 1,
+                    "padded_lanes": job.q_bucket - len(job.chunk),
+                    "q_buckets": {job.q_bucket},
+                }
+                job.sketches = [queries[i] for i in job.chunk]
+                job.trains = _ex.stack_trains_host(job.sketches)
                 if use_pref:
                     ex = self._dist if self._dist is not None \
                         else self._batched
-                    pend1 = ex.prefilter_dispatch(
-                        sp.plan, trains, q_bucket=q_bucket
-                    )
-                    phase1.append(
-                        (chunk, y_disc, q_bucket, sp, trains, pend1)
+                    job.pend1 = ex.prefilter_dispatch(
+                        job.sp.plan, job.trains, q_bucket=job.q_bucket
                     )
                 elif self._dist is not None:
                     want = topk_oversample(top_k, C)
-                    handle = self._dist.topk_dispatch(
-                        sp.plan, trains, want, q_bucket=q_bucket
+                    job.handle = self._dist.topk_dispatch(
+                        job.sp.plan, job.trains, want,
+                        q_bucket=job.q_bucket,
                     )
-                    pending.append((chunk, handle))
                 else:
-                    handle = self._batched.dispatch(
-                        sp.plan, trains, q_bucket=q_bucket
+                    job.handle = self._batched.dispatch(
+                        job.sp.plan, job.trains, q_bucket=job.q_bucket
                     )
-                    pending.append((chunk, handle))
+            except Exception as e:  # noqa: BLE001 — bucket-isolated
+                job.error = e
+                if not isolate:
+                    st.failed_buckets += 1
+                    raise
 
         # 2b. two-phase buckets: collect join sizes, build shortlists,
         # and dispatch phase 2 for every bucket before collecting any
         # phase-2 result (bucket i+1's prefilter overlaps bucket i's
         # shortlist build on device).
-        for chunk, y_disc, q_bucket, sp, trains, pend1 in phase1:
-            shortlists = build_shortlists(
-                sp.plan, pend1.collect(), min_join, multiple=n_shards,
-            )
-            s_key = shortlist_signature(shortlists)
-            # Grow the plan-cache key by the shortlist signature: the
-            # ladder makes its value set finite, so cache size — and
-            # the compiled-program population it fronts — stays bounded
-            # under arbitrarily varied min_join selectivity.
-            self.plan_cache.lookup(
-                version, y_disc, q_bucket,
-                lambda p=sp.plan: p, s_key=s_key,
-            )
-            st.prefiltered += len(chunk)
-            st.cands_considered += len(chunk) * C
-            st.cands_shortlisted += sum(
-                sl.shortlisted for sl in shortlists if sl is not None
-            )
-            st.s_buckets.update(b for _, b in s_key)
-            if self._dist is not None:
-                handle = self._dist.shortlist_topk_dispatch(
-                    sp.plan, trains, shortlists, top_k, q_bucket=q_bucket
-                )
-            else:
-                handle = self._batched.shortlist_dispatch(
-                    sp.plan, trains, shortlists, q_bucket=q_bucket
-                )
-            pending.append((chunk, handle))
+        if use_pref:
+            for job in jobs:
+                if job.error is not None:
+                    continue
+                try:
+                    job.handle = self._shortlist_phase(
+                        job, min_join, top_k, n_shards, C, version
+                    )
+                except Exception as e:  # noqa: BLE001
+                    job.error = e
+                    if not isolate:
+                        st.failed_buckets += 1
+                        raise
 
-        # 3. collect (first host sync of each handle's result set) and
-        # scatter to arrival order.
-        results: list = [None] * len(queries)
-        for chunk, handle in pending:
-            if isinstance(handle, _ex._PendingScores):
-                mi, js = handle.collect()
-                gi = np.arange(C)
-                triples = [(mi[q], gi, js[q]) for q in range(len(chunk))]
-            else:
-                triples = handle.collect()
-            for row, qi in enumerate(chunk):
-                v, gidx, jsz = triples[row]
-                results[qi] = self.index._rank(
-                    v, gidx, jsz, top_k, min_join
+        # 3. collect (first host sync of each handle's result set),
+        # fence, rank, scatter to arrival order, and only then commit
+        # the bucket's staged counters.
+        for job in jobs:
+            if job.error is not None:
+                continue
+            try:
+                triples = self._collect_triples(job, C)
+            except Exception as e:  # noqa: BLE001
+                job.error = e
+                if not isolate:
+                    st.failed_buckets += 1
+                    raise
+                continue
+            self._finish(job, triples, queries, results, outcomes,
+                         top_k, min_join, isolate)
+
+        # 4. recovery (isolate mode): failed buckets retry with backoff,
+        # then descend the executor ladder; every other bucket already
+        # delivered.
+        for job in jobs:
+            if job.error is not None:
+                st.failed_buckets += 1
+                self._recover(job, queries, results, outcomes,
+                              top_k, min_join, use_pref,
+                              n_shards, C, version)
+        return results, outcomes
+
+    def _shortlist_phase(
+        self, job: _BucketJob, min_join: int, top_k: int,
+        n_shards: int, C: int, version: int, rung: str | None = None,
+    ):
+        """Collect a bucket's phase-1 join sizes, build + cache its
+        shortlists, stage the prefilter stat deltas, and dispatch
+        phase 2; returns the pending phase-2 handle."""
+        rung = rung or job.rung
+        on_mesh = rung == "distributed"
+        shortlists = build_shortlists(
+            job.sp.plan, job.pend1.collect(), min_join,
+            multiple=n_shards if on_mesh else 1,
+        )
+        s_key = shortlist_signature(shortlists)
+        # Grow the plan-cache key by the shortlist signature: the
+        # ladder makes its value set finite, so cache size — and
+        # the compiled-program population it fronts — stays bounded
+        # under arbitrarily varied min_join selectivity.
+        self.plan_cache.lookup(
+            version, job.y_disc, job.q_bucket,
+            lambda p=job.sp.plan: p, s_key=s_key,
+        )
+        job.staged["prefiltered"] = len(job.chunk)
+        job.staged["cands_considered"] = len(job.chunk) * C
+        job.staged["cands_shortlisted"] = sum(
+            sl.shortlisted for sl in shortlists if sl is not None
+        )
+        job.staged["s_buckets"] = {b for _, b in s_key}
+        if on_mesh:
+            return self._dist.shortlist_topk_dispatch(
+                job.sp.plan, job.trains, shortlists, top_k,
+                q_bucket=job.q_bucket,
+            )
+        return self._batched.shortlist_dispatch(
+            job.sp.plan, job.trains, shortlists, q_bucket=job.q_bucket
+        )
+
+    def _collect_triples(self, job: _BucketJob, C: int) -> list:
+        """First host sync of a bucket's handle -> one (values, global
+        indices, join sizes) triple per live query."""
+        handle = job.handle
+        if isinstance(handle, _ex._PendingScores):
+            mi, js = handle.collect()
+            gi = np.arange(C)
+            return [(mi[q], gi, js[q]) for q in range(len(job.chunk))]
+        return handle.collect()
+
+    def _finish(
+        self, job: _BucketJob, triples: list, queries: list,
+        results: list, outcomes: list, top_k: int, min_join: int,
+        isolate: bool,
+    ) -> None:
+        """Rank a delivered bucket (fencing non-finite lanes first in
+        isolate mode), scatter results, emit outcomes, and commit the
+        bucket's staged stat deltas."""
+        st = self.admission
+        C = len(self.index)
+        for row, qi in enumerate(job.chunk):
+            v, gi, js = triples[row]
+            nf = 0
+            if isolate:
+                v = np.asarray(v)
+                gi = np.asarray(gi)
+                js = np.asarray(js)
+                eligible = (gi < C) & (js >= min_join)
+                v = resilience.corrupt_scores(v, eligible)
+                v, nf = resilience.fence_nonfinite(
+                    v, gi, js, self.index, queries[qi], min_join, self.k
                 )
-        return results
+                st.nonfinite_lanes += nf
+            results[qi] = self.index._rank(v, gi, js, top_k, min_join)
+            if isolate:
+                outcomes[qi] = QueryOutcome(
+                    qi, "ok", rung=job.rung, retries=job.retries,
+                    fallbacks=job.fallbacks, nonfinite_lanes=nf,
+                )
+        staged = job.staged
+        st.batches += staged.get("batches", 0)
+        st.padded_lanes += staged.get("padded_lanes", 0)
+        st.prefiltered += staged.get("prefiltered", 0)
+        st.cands_considered += staged.get("cands_considered", 0)
+        st.cands_shortlisted += staged.get("cands_shortlisted", 0)
+        st.q_buckets.update(staged.get("q_buckets", ()))
+        st.s_buckets.update(staged.get("s_buckets", ()))
+
+    # ------------------------------------------------------------------
+    # Recovery ladder
+    # ------------------------------------------------------------------
+
+    def _recover(
+        self, job: _BucketJob, queries: list, results: list,
+        outcomes: list, top_k: int, min_join: int, use_pref: bool,
+        n_shards: int, C: int, version: int,
+    ) -> None:
+        """Retry a failed bucket with bounded backoff, descending the
+        executor ladder between rungs; other buckets are untouched.
+
+        Rung 0 is whatever the primary pass ran (its failed attempt
+        counts as the rung's first try, so only retries remain); each
+        lower rung gets a fresh attempt plus retries.  The final rung
+        is the hook-free reference per-query loop — the exact dense
+        path of :meth:`SketchIndex.query` — so anything that can
+        execute at all delivers bit-identical rankings from there.
+        """
+        st = self.admission
+        policy = self.retry_policy
+        rungs = (["distributed"] if self._dist is not None else []) \
+            + ["batched", "reference"]
+        last_err = job.error
+        for ri, rung in enumerate(rungs):
+            if ri > 0:
+                job.fallbacks += 1
+                st.fallbacks += 1
+            delays = policy.delays()
+            # attempt 0 = the rung's first try; for rung 0 the primary
+            # pass already spent it.
+            for attempt in range(1 if ri == 0 else 0, 1 + len(delays)):
+                if attempt > 0:
+                    policy.sleep(delays[attempt - 1])
+                    job.retries += 1
+                    st.retries += 1
+                try:
+                    triples = self._run_bucket(
+                        job, queries, top_k, min_join, use_pref,
+                        n_shards, C, version, rung,
+                    )
+                    job.rung = rung
+                    job.error = None
+                    self._finish(job, triples, queries, results,
+                                 outcomes, top_k, min_join, True)
+                    return
+                except Exception as e:  # noqa: BLE001 — keep descending
+                    last_err = e
+        for qi in job.chunk:
+            outcomes[qi] = QueryOutcome(
+                qi, "failed", rung=rungs[-1], error="ladder_exhausted",
+                detail=repr(last_err), retries=job.retries,
+                fallbacks=job.fallbacks,
+            )
+        st.lost_queries += len(job.chunk)
+
+    def _run_bucket(
+        self, job: _BucketJob, queries: list, top_k: int,
+        min_join: int, use_pref: bool, n_shards: int, C: int,
+        version: int, rung: str,
+    ) -> list:
+        """Synchronously re-execute one bucket on the given rung and
+        return its per-query triples (job.staged is rebuilt to match
+        what this run actually did)."""
+        job.staged = {
+            "batches": 1,
+            "padded_lanes": (job.q_bucket - len(job.chunk)
+                             if rung != "reference" else 0),
+            "q_buckets": {job.q_bucket} if rung != "reference" else set(),
+        }
+        if rung == "reference":
+            # Per-query dense scoring through the partitioned local
+            # executor — exactly SketchIndex.query's prefilter=False
+            # path, and free of every fault-injection site by
+            # construction.
+            ex = _ex.PartitionedLocalExecutor(k=self.k)
+            triples = []
+            for qi in job.chunk:
+                train = self.index.train_arrays(queries[qi])
+                mi, js = ex.execute(job.sp.plan, train)
+                triples.append((mi[0], np.arange(C), js[0]))
+            return triples
+        ex = self._dist if rung == "distributed" else self._batched
+        job.trains = _ex.stack_trains_host(job.sketches)
+        if use_pref:
+            job.pend1 = ex.prefilter_dispatch(
+                job.sp.plan, job.trains, q_bucket=job.q_bucket
+            )
+            job.handle = self._shortlist_phase(
+                job, min_join, top_k, n_shards, C, version, rung=rung,
+            )
+        elif rung == "distributed":
+            job.handle = ex.topk_dispatch(
+                job.sp.plan, job.trains, topk_oversample(top_k, C),
+                q_bucket=job.q_bucket,
+            )
+        else:
+            job.handle = ex.dispatch(
+                job.sp.plan, job.trains, q_bucket=job.q_bucket
+            )
+        return self._collect_triples(job, C)
 
     # ------------------------------------------------------------------
     # Observability
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Serving counters: admission decisions, plan-cache traffic,
-        compiled-program population, and ingest transfer accounting."""
+        """Serving counters: admission decisions, resilience traffic
+        (quarantine/retry/fallback/fence), plan-cache traffic, compiled-
+        program population, and ingest transfer accounting."""
         return {
             "admission": self.admission.as_dict(),
             "plan_cache": self.plan_cache.stats,

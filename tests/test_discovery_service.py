@@ -414,6 +414,28 @@ class TestMultiShardParity:
         adm = svc.stats()["admission"]
         assert adm["prefiltered"] > 0 and adm["cands_filtered_out"] >= 0
         print("SHARD-PARITY-OK")
+
+        # Fault isolation across the mesh: a persistent fault on the
+        # distributed shortlist dispatch forces every bucket down one
+        # rung to the single-process batched executor — results stay
+        # bit-identical to the per-query dense reference and outcomes
+        # carry the fallback rung.
+        from repro.core.discovery import RetryPolicy, inject_faults
+        svc2 = DiscoveryService(index=index, mesh=mesh, max_q_bucket=4,
+                                retry_policy=RetryPolicy(
+                                    max_retries=1, sleep=lambda s: None))
+        with inject_faults({"shortlist_dispatch@distributed": "all"}):
+            res, outs = svc2.submit_safe(sks, top_k=3, min_join=4)
+        want = [index.query(s, top_k=3, min_join=4, prefilter=False)
+                for s in sks]
+        for r, w in zip(res, want):
+            assert flat(r) == flat(w)
+        assert all(o.ok and o.rung == "batched" for o in outs)
+        assert all(o.fallbacks == 1 for o in outs)
+        adm2 = svc2.stats()["admission"]
+        assert adm2["failed_buckets"] == 1
+        assert adm2["fallbacks"] == 1 and adm2["lost_queries"] == 0
+        print("FAULT-FALLBACK-OK")
     """)
 
     def test_four_shard_parity(self):
@@ -424,3 +446,4 @@ class TestMultiShardParity:
         )
         assert out.returncode == 0, out.stderr[-2000:]
         assert "SHARD-PARITY-OK" in out.stdout
+        assert "FAULT-FALLBACK-OK" in out.stdout

@@ -1,0 +1,599 @@
+"""Fault-isolated serving tests (ISSUE 6 acceptance):
+
+  (a) admission validation quarantines malformed query sketches into
+      structured ``QueryOutcome`` errors while the rest of the queue
+      serves bit-identically to looped ``SketchIndex.query``;
+  (b) an injected dispatch/collect fault in one (signature, Q-bucket)
+      batch retries with bounded backoff, then degrades down the
+      executor ladder — every rung bit-identical, every other bucket
+      untouched — and ``stats()`` reports the quarantine / retry /
+      fallback counts exactly (the Q=32 end-to-end acceptance test);
+  (c) non-finite MI lanes are fenced to the materialized reference
+      path instead of being ranked;
+  (d) ``add_table`` is transactional (a poisoned middle column leaves
+      the index untouched) and ``AdmissionStats`` stays consistent
+      with delivered results across mid-submit failures.
+
+The whole suite honors ``REPRO_FAULT_SEED`` (CI runs a small matrix):
+the seed varies which query is poisoned, *how* it is poisoned, and the
+fault harness's rng — the isolation invariants must hold for all.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import hashing
+from repro.core.discovery import (
+    BatchedExecutor,
+    DiscoveryService,
+    InjectedFault,
+    QueryOutcome,
+    RetryPolicy,
+    SketchIndex,
+    fence_nonfinite,
+    inject_faults,
+    stack_trains_host,
+    validate_query,
+)
+from repro.core.discovery import executors as _ex
+from repro.core.discovery import resilience
+from repro.core.discovery.planner import PlanCache
+from repro.core.discovery.resilience import FaultPlan
+from repro.core.sketch import build_sketch
+
+N_ROWS = 800
+SK_N = 64
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+RNG = np.random.default_rng(1000 + SEED)
+
+# Zero-sleep policy so retry/backoff tests run at full speed; the delay
+# *schedule* is still exercised (delays() is computed and indexed).
+FAST_RETRY = RetryPolicy(max_retries=2, sleep=lambda s: None)
+
+
+def _keys(seed=9):
+    raw = np.arange(N_ROWS, dtype=np.uint32)
+    return np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+
+
+KEYS = _keys()
+Y = RNG.normal(size=N_ROWS)
+
+
+def _mixed_index(n_cont=3, n_disc=2):
+    index = SketchIndex(n=SK_N, method="tupsk")
+    for i in range(n_cont):
+        index.add(f"cont{i}", "k", "v", KEYS,
+                  (Y + (0.2 + i) * RNG.normal(size=N_ROWS))
+                  .astype(np.float32), False)
+    for i in range(n_disc):
+        index.add(f"disc{i}", "k", "v", KEYS,
+                  RNG.integers(0, 4 + i, size=N_ROWS), True)
+    return index
+
+
+def _train(v, disc):
+    return build_sketch(KEYS, v, n=SK_N, method="tupsk", side="train",
+                        value_is_discrete=disc)
+
+
+def _mixed_queue(q, disc_every=3):
+    out = []
+    for i in range(q):
+        noisy = Y + (0.1 + 0.25 * i) * RNG.normal(size=N_ROWS)
+        if i % disc_every == disc_every - 1:
+            out.append(_train((noisy > 0).astype(np.int64), True))
+        else:
+            out.append(_train(noisy.astype(np.float32), False))
+    return out
+
+
+def _flat(res):
+    return [(m.table, mi, js) for m, mi, js in res]
+
+
+def _service(index, **kw):
+    kw.setdefault("retry_policy", FAST_RETRY)
+    return DiscoveryService(index=index, **kw)
+
+
+def _poison(kind: str):
+    """A query sketch that must be quarantined, by failure mode."""
+    if kind == "nonfinite_values":
+        sk = _train(np.ones(N_ROWS, np.float32), False)
+        vals = sk.values.copy()
+        vals[: max(1, sk.size // 4)] = np.nan
+        return dataclasses.replace(sk, values=vals), "nonfinite_values"
+    if kind == "empty_sketch":
+        sk = _train(Y.astype(np.float32), False)
+        return dataclasses.replace(
+            sk, mask=np.zeros_like(sk.mask)), "empty_sketch"
+    if kind == "capacity_mismatch":
+        sk = build_sketch(KEYS, Y.astype(np.float32), n=SK_N // 2,
+                          method="tupsk", side="train",
+                          value_is_discrete=False)
+        return sk, "capacity_mismatch"
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFaultHarness:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan({"warp_core": "all"})
+
+    def test_no_nesting(self):
+        with inject_faults({"collect": 1}):
+            with pytest.raises(RuntimeError, match="does not nest"):
+                with inject_faults({"collect": 1}):
+                    pass
+
+    def test_unarmed_is_noop(self):
+        resilience.maybe_fault("collect")  # no active plan -> no raise
+
+    def test_int_schedule_fails_first_n(self):
+        plan = FaultPlan({"collect": 2})
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                plan.check("collect", None)
+        plan.check("collect", None)  # third invocation passes
+        assert plan.fired == {"collect": 2}
+
+    def test_index_schedule(self):
+        plan = FaultPlan({"collect": [1]})
+        plan.check("collect", None)
+        with pytest.raises(InjectedFault):
+            plan.check("collect", None)
+        plan.check("collect", None)
+
+    def test_scoped_key_only_hits_its_scope(self):
+        plan = FaultPlan({"dispatch@distributed": "all"})
+        plan.check("dispatch", "batched")  # other scope: passes
+        with pytest.raises(InjectedFault):
+            plan.check("dispatch", "distributed")
+
+    def test_unscoped_key_hits_every_scope(self):
+        plan = FaultPlan({"dispatch": "all"})
+        with pytest.raises(InjectedFault):
+            plan.check("dispatch", "batched")
+        with pytest.raises(InjectedFault):
+            plan.check("dispatch", "distributed")
+
+
+# ---------------------------------------------------------------------------
+# Admission validation + quarantine
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    @pytest.fixture(scope="class")
+    def index(self):
+        return _mixed_index()
+
+    def test_valid_sketch_passes(self, index):
+        assert validate_query(_train(Y.astype(np.float32), False),
+                              index) is None
+
+    @pytest.mark.parametrize(
+        "kind", ["nonfinite_values", "empty_sketch", "capacity_mismatch"]
+    )
+    def test_error_codes(self, index, kind):
+        sk, code = _poison(kind)
+        got = validate_query(sk, index)
+        assert got is not None and got[0] == code
+
+    def test_not_a_sketch(self, index):
+        got = validate_query(object(), index)
+        assert got is not None and got[0] == "invalid_sketch"
+
+    def test_ragged_arrays(self, index):
+        sk = _train(Y.astype(np.float32), False)
+        bad = dataclasses.replace(sk, mask=np.ones(3, bool))
+        got = validate_query(bad, index)
+        assert got is not None and got[0] == "invalid_sketch"
+
+    def test_unknown_dtype_flag(self, index):
+        sk = _train(Y.astype(np.float32), False)
+        bad = dataclasses.replace(sk, value_is_discrete=1)
+        got = validate_query(bad, index)
+        assert got is not None and got[0] == "unknown_dtype"
+
+    def test_quarantine_preserves_other_results(self, index):
+        svc = _service(index)
+        queue = _mixed_queue(6)
+        baseline = svc.submit(queue, top_k=5, min_join=4)
+        bad, code = _poison("nonfinite_values")
+        res, outs = svc.submit_safe(queue + [bad], top_k=5, min_join=4)
+        assert res[-1] is None
+        assert outs[-1].status == "quarantined"
+        assert outs[-1].error == code and not outs[-1].ok
+        assert [_flat(r) for r in res[:-1]] == [_flat(r) for r in baseline]
+        assert all(o.ok for o in outs[:-1])
+        assert svc.admission.quarantined == 1
+
+    def test_all_quarantined(self, index):
+        svc = _service(index)
+        bad, _ = _poison("empty_sketch")
+        res, outs = svc.submit_safe([bad], top_k=5)
+        assert res == [None]
+        assert outs[0].status == "quarantined"
+        assert svc.admission.batches == 0
+
+
+# ---------------------------------------------------------------------------
+# Retry + executor-ladder fallback
+# ---------------------------------------------------------------------------
+
+
+class TestRecovery:
+    @pytest.fixture(scope="class")
+    def index(self):
+        return _mixed_index()
+
+    @pytest.fixture(scope="class")
+    def baseline(self, index):
+        queue = _mixed_queue(5)
+        svc = _service(index)
+        return queue, svc.submit(queue, top_k=5, min_join=4)
+
+    def _assert_clean_parity(self, svc, queue, baseline, outs, res,
+                             rung=None):
+        assert all(o.ok for o in outs)
+        assert [_flat(r) for r in res] == [_flat(r) for r in baseline]
+        if rung is not None:
+            assert {o.rung for o in outs} == {rung}
+
+    def test_transient_fault_retries_same_rung(self, index, baseline):
+        queue, base = baseline
+        svc = _service(index)
+        # One-shot fault: the first phase-2 dispatch dies, the first
+        # retry of that same bucket succeeds — no ladder descent.
+        with inject_faults({"shortlist_dispatch": [0]}) as plan:
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        assert plan.fired == {"shortlist_dispatch": 1}
+        self._assert_clean_parity(svc, queue, base, outs, res)
+        st = svc.admission
+        assert st.failed_buckets == 1
+        assert st.retries == 1 and st.fallbacks == 0
+        hit = [o for o in outs if o.retries]
+        assert hit and all(o.rung == "batched" for o in hit)
+
+    def test_persistent_fault_falls_back_to_reference(
+            self, index, baseline):
+        queue, base = baseline
+        svc = _service(index)
+        with inject_faults({"shortlist_dispatch": "all"}):
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        self._assert_clean_parity(svc, queue, base, outs, res,
+                                  rung="reference")
+        st = svc.admission
+        # 2 dtype buckets x (2 retries on the batched rung, then one
+        # descent to the hook-free reference loop).
+        assert st.failed_buckets == 2
+        assert st.retries == 4 and st.fallbacks == 2
+        assert st.lost_queries == 0
+
+    @pytest.mark.parametrize("site", ["stack_h2d", "prefilter_dispatch"])
+    def test_other_sites_recover(self, index, baseline, site):
+        queue, base = baseline
+        svc = _service(index)
+        with inject_faults({site: [0]}):
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        self._assert_clean_parity(svc, queue, base, outs, res)
+        assert svc.admission.retries >= 1
+
+    def test_collect_fault_recovers(self, index, baseline):
+        queue, base = baseline
+        svc = _service(index)
+        # collect invocations: phase-1 of bucket A = 0, phase-1 of
+        # bucket B = 1, phase-2 of A = 2 ... fault A's phase-2 sync.
+        with inject_faults({"collect": [2]}):
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        self._assert_clean_parity(svc, queue, base, outs, res)
+        assert svc.admission.retries >= 1
+
+    def test_dense_path_dispatch_fault(self, index):
+        queue = _mixed_queue(4)
+        svc = _service(index)
+        base = svc.submit(queue, top_k=5, min_join=4, prefilter=False)
+        with inject_faults({"dispatch": [0]}):
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        prefilter=False)
+        self._assert_clean_parity(svc, queue, base, outs, res)
+
+    def test_ladder_exhaustion_yields_failed_outcomes(
+            self, index, baseline, monkeypatch):
+        queue, base = baseline
+        svc = _service(index)
+
+        def boom(*a, **kw):
+            raise RuntimeError("reference rung down")
+
+        # Kill the batched rung at its earliest site and the reference
+        # rung via its executor: nothing can deliver.
+        monkeypatch.setattr(
+            _ex.PartitionedLocalExecutor, "execute", boom)
+        with inject_faults({"stack_h2d": "all"}):
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        assert all(r is None for r in res)
+        assert all(o.status == "failed" for o in outs)
+        assert all(o.error == "ladder_exhausted" for o in outs)
+        st = svc.admission
+        assert st.lost_queries == len(queue)
+        assert st.batches == 0  # nothing delivered -> nothing committed
+        monkeypatch.undo()
+        # The service is not wedged: the next clean submit delivers.
+        res2, outs2 = svc.submit_safe(queue, top_k=5, min_join=4)
+        self._assert_clean_parity(svc, queue, base, outs2, res2)
+
+    def test_plan_failure_isolated(self):
+        svc = _service(SketchIndex(n=SK_N))  # empty corpus
+        res, outs = svc.submit_safe(
+            [_train(Y.astype(np.float32), False)], top_k=5)
+        assert res == [None]
+        assert outs[0].status == "failed"
+        assert outs[0].error == "plan_failed"
+
+
+# ---------------------------------------------------------------------------
+# Numeric fences
+# ---------------------------------------------------------------------------
+
+
+class TestNumericFence:
+    @pytest.fixture(scope="class")
+    def index(self):
+        return _mixed_index()
+
+    def test_fence_repairs_bit_identically(self, index):
+        sk = _train(Y.astype(np.float32), False)
+        plan = index.plan(False, k=3)
+        mi, js = BatchedExecutor(k=3).execute(plan, stack_trains_host([sk]))
+        v, jrow = mi[0].copy(), js[0]
+        lanes = np.flatnonzero(jrow >= 4)[:3]
+        assert lanes.size, "corpus must have joinable candidates"
+        v[lanes] = np.nan
+        fixed, n = fence_nonfinite(
+            v, np.arange(len(index)), jrow, index, sk, 4, 3)
+        assert n == lanes.size
+        np.testing.assert_array_equal(fixed, mi[0])
+
+    def test_fence_ignores_ineligible_lanes(self, index):
+        # NaN in a lane below min_join (or a sentinel lane) must not be
+        # demoted — the ranking layer never reads it.
+        sk = _train(Y.astype(np.float32), False)
+        C = len(index)
+        v = np.full(C, np.nan, np.float32)
+        js = np.zeros(C, np.int32)
+        fixed, n = fence_nonfinite(v, np.arange(C), js, index, sk, 4, 3)
+        assert n == 0
+
+    def test_scores_site_drives_fence_end_to_end(self, index):
+        queue = _mixed_queue(5)
+        svc = _service(index)
+        base = svc.submit(queue, top_k=5, min_join=4)
+        with inject_faults({"scores": 2}, seed=SEED) as plan:
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        assert plan.corrupted > 0
+        assert [_flat(r) for r in res] == [_flat(r) for r in base]
+        assert sum(o.nonfinite_lanes for o in outs) == plan.corrupted
+        assert svc.admission.nonfinite_lanes == plan.corrupted
+
+
+# ---------------------------------------------------------------------------
+# Transactional ingest (satellite: add_table atomicity)
+# ---------------------------------------------------------------------------
+
+
+class _FakeColumn:
+    def __init__(self, values, discrete, poisoned=False):
+        self._values = values
+        self._discrete = discrete
+        self._poisoned = poisoned
+
+    @property
+    def is_discrete(self):
+        return self._discrete
+
+    def key_codes(self, seed=0):
+        return KEYS
+
+    def value_array(self):
+        if self._poisoned:
+            raise RuntimeError("storage backend lost this column")
+        return self._values
+
+
+class _FakeTable:
+    """Duck-typed Table: key column + value columns, one optionally
+    poisoned mid-iteration."""
+
+    name = "faketab"
+
+    def __init__(self, cols):
+        self._cols = {"k": _FakeColumn(KEYS, True), **cols}
+
+    def __getitem__(self, name):
+        return self._cols[name]
+
+    def pairs(self, key_column):
+        return [(key_column, c) for c in self._cols if c != key_column]
+
+
+class TestTransactionalIngest:
+    def _table(self, poison_middle):
+        return _FakeTable({
+            "a": _FakeColumn(Y.astype(np.float32), False),
+            "b": _FakeColumn(Y.astype(np.float32), False,
+                             poisoned=poison_middle),
+            "c": _FakeColumn(RNG.integers(0, 4, N_ROWS), True),
+        })
+
+    def test_poisoned_middle_column_rolls_back(self):
+        index = _mixed_index()
+        sk = _train(Y.astype(np.float32), False)
+        before_len = len(index)
+        before_version = index._version
+        before_res = _flat(index.query(sk, top_k=5, min_join=4))
+        with pytest.raises(RuntimeError, match="lost this column"):
+            index.add_table(self._table(poison_middle=True), "k")
+        assert len(index) == before_len
+        assert index._version == before_version
+        assert _flat(index.query(sk, top_k=5, min_join=4)) == before_res
+
+    def test_capacity_poison_rolls_back(self):
+        # A mid-table *validation* failure (not a storage error) must
+        # also leave nothing behind: capacity mismatch on column b.
+        index = _mixed_index()
+        tab = self._table(poison_middle=False)
+        tab._cols["b"] = _FakeColumn(
+            Y[: N_ROWS // 2].astype(np.float32), False)
+        tab._cols["b"].key_codes = lambda seed=0: KEYS[: N_ROWS // 2]
+        before_len = len(index)
+        with pytest.raises(Exception):
+            index.add_table(tab, "k")
+        assert len(index) == before_len
+
+    def test_clean_table_commits_all(self):
+        index = _mixed_index()
+        before = len(index)
+        index.add_table(self._table(poison_middle=False), "k")
+        assert len(index) == before + 3
+        names = [m.table for m in index.meta[-3:]]
+        assert names == ["faketab"] * 3
+
+    def test_flush_fault_leaves_store_consistent(self):
+        index = _mixed_index()
+        sk = _train(Y.astype(np.float32), False)
+        base = _flat(index.query(sk, top_k=5, min_join=4))
+        index.add("late", "k", "v", KEYS,
+                  (Y + 0.05 * RNG.normal(size=N_ROWS)).astype(np.float32),
+                  False)
+        with inject_faults({"flush": "all"}):
+            with pytest.raises(InjectedFault):
+                index.query(sk, top_k=5, min_join=4)
+        # The fault fired before any store mutation: the next query
+        # flushes the same pending rows and serves the grown corpus.
+        after = _flat(index.query(sk, top_k=5, min_join=4))
+        assert len(index) == 6  # 3 cont + 2 disc + "late"
+        assert index.ingest_stats["pending_rows"] == 0
+        assert "late" in [t for t, _, _ in after]
+        del base
+
+
+# ---------------------------------------------------------------------------
+# Stats consistency (satellite: no corruption on mid-submit raise)
+# ---------------------------------------------------------------------------
+
+
+class TestStatsConsistency:
+    def test_legacy_submit_counts_failure_and_stays_consistent(self):
+        index = _mixed_index()
+        svc = _service(index)
+        queue = [_train((Y + 0.3 * RNG.normal(size=N_ROWS))
+                        .astype(np.float32), False) for _ in range(3)]
+        with inject_faults({"shortlist_dispatch": "all"}):
+            with pytest.raises(InjectedFault):
+                svc.submit(queue, top_k=5, min_join=4)
+        st = svc.admission
+        # Arrival counters committed, delivery counters untouched —
+        # the failed submit delivered nothing and claims nothing.
+        assert st.submits == 1 and st.submitted == 3
+        assert st.failed_buckets == 1
+        assert st.batches == 0 and st.padded_lanes == 0
+        assert st.prefiltered == 0 and st.cands_considered == 0
+        # A clean retry delivers and commits exactly one bucket.
+        svc.submit(queue, top_k=5, min_join=4)
+        assert st.batches == 1
+        assert st.padded_lanes == 1  # 3 queries -> Q-bucket 4
+        assert st.prefiltered == 3
+
+    def test_plan_cache_counts_build_failures(self):
+        cache = PlanCache(4)
+
+        def boom():
+            raise RuntimeError("no plan for you")
+
+        with pytest.raises(RuntimeError):
+            cache.lookup(0, False, 4, boom)
+        assert cache.build_failures == 1
+        assert cache.misses == 0 and len(cache) == 0
+        assert cache.stats["build_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: Q=32 mixed burst, one poisoned query, one
+# injected bucket fault.
+# ---------------------------------------------------------------------------
+
+
+class TestEndToEndIsolation:
+    def test_q32_burst_poison_plus_bucket_fault(self):
+        index = _mixed_index()
+        svc = _service(index)
+        queue = _mixed_queue(32)
+        cont_idx = [i for i in range(32) if i % 3 != 2]
+        rng = np.random.default_rng(SEED)
+        poison_at = int(rng.choice(cont_idx))
+        kind = ["nonfinite_values", "empty_sketch",
+                "capacity_mismatch"][SEED % 3]
+        bad, code = _poison(kind)
+        queue[poison_at] = bad
+
+        # Reference truth: per-query SketchIndex.query over the same
+        # corpus (skipping the poisoned slot).
+        expected = {
+            i: _flat(index.query(queue[i], top_k=5, min_join=4, k=svc.k))
+            for i in range(32) if i != poison_at
+        }
+
+        # shortlist_dispatch invocation order: continuous bucket's
+        # phase-2 dispatch is 0 (the burst starts with a continuous
+        # query), the discrete bucket's is 1.  [0, 2, 3] kills the
+        # continuous bucket's primary attempt and both its batched-rung
+        # retries, forcing one descent to the reference rung; the
+        # discrete bucket never faults.
+        with inject_faults({"shortlist_dispatch": [0, 2, 3]},
+                           seed=SEED) as plan:
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+        assert plan.fired == {"shortlist_dispatch": 3}
+
+        # (1) the poisoned query: structured outcome, no result.
+        assert res[poison_at] is None
+        assert outs[poison_at].status == "quarantined"
+        assert outs[poison_at].error == code
+
+        # (2) the other 31: bit-identical to the looped reference.
+        for i, want in expected.items():
+            assert outs[i].ok, outs[i]
+            assert _flat(res[i]) == want, f"query {i} diverged"
+
+        # (3) rung accounting: continuous bucket fell to the reference
+        # loop, the discrete bucket served at the primary rung.
+        for i in range(32):
+            if i == poison_at:
+                continue
+            if i % 3 == 2:
+                assert outs[i].rung == "batched"
+                assert outs[i].retries == 0 and outs[i].fallbacks == 0
+            else:
+                assert outs[i].rung == "reference"
+                assert outs[i].retries == 2 and outs[i].fallbacks == 1
+
+        # (4) stats report the recovery exactly.
+        st = svc.stats()["admission"]
+        assert st["quarantined"] == 1
+        assert st["failed_buckets"] == 1
+        assert st["retries"] == 2
+        assert st["fallbacks"] == 1
+        assert st["lost_queries"] == 0
+        assert st["submitted"] == 31
+        assert st["batches"] == 2  # both buckets delivered
+        assert st["nonfinite_lanes"] == 0
