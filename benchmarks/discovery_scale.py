@@ -285,15 +285,20 @@ def bench_discovery_throughput(quick: bool = False) -> list[tuple]:
         return (time.perf_counter() - t0) / reps / Q_BURST * 1e6
 
     _svc_seq(); _svc_burst()  # warmup compiles for both paths
+    # Gate re-anchored from 3x when fused retrieval landed: the
+    # sequential query() baseline also takes the fused single-dispatch
+    # path now (~35% faster per solo query), so the batching ratio
+    # compressed while both absolute paths got faster.  Submit itself
+    # is tracked by this row's us_per_call in the snapshot.
     us_svc_seq = _measure(_svc_seq)
     us_svc = _measure(_svc_burst)
-    if us_svc_seq / us_svc < 3.0:
+    if us_svc_seq / us_svc < 2.0:
         us_svc_seq = _measure(_svc_seq)
         us_svc = _measure(_svc_burst)
-        if us_svc_seq / us_svc < 3.0:
+        if us_svc_seq / us_svc < 2.0:
             raise RuntimeError(
                 f"service burst submit regressed: "
-                f"{us_svc_seq / us_svc:.2f}x < 3x (twice)"
+                f"{us_svc_seq / us_svc:.2f}x < 2x (twice)"
             )
     adm = svc.stats()["admission"]
     rows.append(("discovery/service_mixed_burst", us_svc,
@@ -429,6 +434,198 @@ def bench_prefilter_large_corpus(quick: bool = False) -> list[tuple]:
         f"cands_per_s={C * 1e6 / us_pref:.0f};"
         f"speedup_vs_dense={us_dense / us_pref:.1f}x;"
         f"shortlist_ratio={ratio:.3f};C={C}",
+    )]
+
+
+_FUSED_BENCH_SCRIPT = """
+import faulthandler, json, os, time
+# Watchdog: 4 fake devices on a small CPU can (rarely) deadlock inside
+# an XLA collective if too many programs are in flight; dump all thread
+# stacks and die instead of wedging the harness (parent retries once).
+faulthandler.dump_traceback_later(300, exit=True)
+import numpy as np, jax
+from repro.core import hashing
+from repro.core.discovery import (
+    DiscoveryService, SketchIndex, build_shortlists, fused_shortlist_spec,
+    stack_trains,
+)
+from repro.core.discovery.planner import stage_min_join
+from repro.core.sketch import build_sketch
+
+n_queries = int(os.environ["FUSED_BENCH_QUERIES"])
+reps = int(os.environ["FUSED_BENCH_REPS"])
+mesh = jax.make_mesh((jax.device_count(),), ("data",))
+n_shards = jax.device_count()
+rng = np.random.default_rng(23)
+C, n_rows, n, joinable = 4096, 384, 8, 32
+keys = np.asarray(hashing.murmur3_32_np(
+    np.arange(n_rows, dtype=np.uint32), seed=np.uint32(3)))
+y = rng.normal(size=n_rows).astype(np.float32)
+index = SketchIndex(n=n, method="tupsk")
+far = 1
+for c in range(C):
+    if c % (C // joinable) == 0:  # joinable minority, balanced per shard
+        alpha = rng.uniform(0.1, 0.9)
+        v = (alpha * y + (1 - alpha)
+             * rng.normal(size=n_rows)).astype(np.float32)
+        index.add(f"hit{c}", "k", "v", keys, v, False)
+    else:  # disjoint key space: can never pass min_join
+        other = np.asarray(hashing.murmur3_32_np(
+            np.arange(far * n_rows, (far + 1) * n_rows, dtype=np.uint32),
+            seed=np.uint32(3)))
+        far += 1
+        index.add(f"far{c}", "k", "v", other,
+                  rng.normal(size=n_rows).astype(np.float32), False)
+sks = [
+    build_sketch(
+        keys, (a * y + (1 - a) * rng.normal(size=n_rows)).astype(np.float32),
+        n=n, method="tupsk", side="train", value_is_discrete=False,
+    )
+    for a in rng.uniform(0.1, 0.9, size=n_queries)
+]
+
+# -- service-level: bit-identity per window + host-sync accounting --------
+svc = DiscoveryService(index=index, mesh=mesh, max_q_bucket=1)
+def submit_sweep(fused):
+    out = []
+    for sk in sks:
+        out.extend(svc.submit([sk], top_k=8, min_join=4, fused=fused))
+    return out
+base = submit_sweep(False)  # warms compiles + shortlist hints
+adm0 = dict(svc.stats()["admission"])
+got = submit_sweep(True)
+adm1 = dict(svc.stats()["admission"])
+for b, g in zip(base, got):  # MI values, join sizes, AND ranking order
+    assert [(m.table, mi, js) for m, mi, js in b] == \\
+        [(m.table, mi, js) for m, mi, js in g]
+t0 = time.perf_counter()
+submit_sweep(False)
+sub_h = time.perf_counter() - t0
+t0 = time.perf_counter()
+submit_sweep(True)
+sub_f = time.perf_counter() - t0
+
+# -- retrieval path: the host boundary forces one sync inside every ------
+# -- window; the fused stream dispatches them all before collecting ------
+ex = index._distributed_executor(mesh, 3)
+plan = index.plan(False)
+trains = [stack_trains([index.train_arrays(sk)]) for sk in sks]
+spec = fused_shortlist_spec(plan, index.shortlist_hints, 4,
+                            multiple=n_shards, sharded=True)
+mj = stage_min_join(4)
+def host_once(tr):
+    js = ex.prefilter_dispatch(plan, tr).collect()   # sync 1: join sizes
+    sls = build_shortlists(plan, js, 4, multiple=n_shards)
+    return ex.shortlist_topk_dispatch(plan, tr, sls, 8).collect()  # sync 2
+for tr in trains[:2]:  # warm + executor-level bit-identity
+    b = host_once(tr)
+    g = ex.fused_topk_dispatch(plan, tr, spec, mj, 8).collect()
+    for x, yv in zip(b, g):
+        for u, w in zip(x, yv):
+            assert (np.asarray(u) == np.asarray(w)).all()
+best_h = best_f = float("inf")
+for _ in range(reps):
+    t0 = time.perf_counter()
+    for tr in trains:
+        host_once(tr)
+    best_h = min(best_h, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    # Fire-and-forget stream, depth-bounded: keep at most 8 windows in
+    # flight (unbounded depth can wedge the fake-device runtime when
+    # host threads outnumber cores), collecting in dispatch order.
+    depth, handles = 8, []
+    for tr in trains:
+        if len(handles) == depth:
+            handles.pop(0).collect()
+        handles.append(ex.fused_topk_dispatch(plan, tr, spec, mj, 8))
+    for h in handles:
+        h.collect()
+    best_f = min(best_f, time.perf_counter() - t0)
+print("RESULT " + json.dumps({
+    "us_host": best_h / n_queries * 1e6,
+    "us_fused": best_f / n_queries * 1e6,
+    "sub_us_host": sub_h / n_queries * 1e6,
+    "sub_us_fused": sub_f / n_queries * 1e6,
+    "host_syncs": adm1["host_syncs"] - adm0["host_syncs"],
+    "fused_windows": adm1["fused_windows"] - adm0["fused_windows"],
+    "n_shards": n_shards,
+}))
+"""
+
+
+def bench_fused_two_phase(quick: bool = False) -> list[tuple]:
+    """Gated fused-retrieval row: the device-resident two-phase
+    pipeline vs the PR 4 host-boundary path at equal ``min_join``,
+    on the distributed backend (4 host shards in a subprocess — the
+    mesh shape the shard-local compaction exists for).
+
+    Selective C=4096 corpus, served as a stream of single-query
+    windows.  The host-boundary path must sync join sizes and build
+    shortlists on the host *inside every window* before it can
+    dispatch phase 2, so the stream serializes on the boundary; the
+    fused path has no boundary, so every window's one program
+    dispatches before any collect and the only sync left is each
+    window's final MI/js collect.  Bit-identity of MI values, join
+    sizes, and top-k ranking is asserted per window at both the
+    service and the executor layer before timing.  Gate: >=2x over
+    the host-boundary stream, re-measured once before failing.
+    """
+    import json
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    n_queries = 16 if quick else 32
+    reps = 3 if quick else 7
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = f"{src}{os.pathsep}" + env.get("PYTHONPATH", "")
+    env["FUSED_BENCH_QUERIES"] = str(n_queries)
+    env["FUSED_BENCH_REPS"] = str(reps)
+
+    def _run_once():
+        proc = subprocess.run(
+            [sys.executable, "-c", _FUSED_BENCH_SCRIPT],
+            capture_output=True, text=True, env=env, timeout=1200,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"fused bench subprocess failed:\n{proc.stderr[-2000:]}"
+            )
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("RESULT ")][-1]
+        return json.loads(line[len("RESULT "):])
+
+    def _measure():
+        # One retry on infrastructure failure (watchdog-killed deadlock,
+        # harness timeout) — distinct from the perf-gate re-measure
+        # below, which only triggers on a clean-but-slow result.
+        try:
+            return _run_once()
+        except (RuntimeError, subprocess.TimeoutExpired):
+            return _run_once()
+
+    r = _measure()
+    if r["us_host"] / r["us_fused"] < 2.0:
+        r = _measure()
+        if r["us_host"] / r["us_fused"] < 2.0:
+            raise RuntimeError(
+                f"fused two-phase regressed: "
+                f"{r['us_host'] / r['us_fused']:.2f}x < 2x vs "
+                f"host boundary (twice)"
+            )
+    return [(
+        "discovery/fused_two_phase", r["us_fused"],
+        f"windows_per_s={1e6 / r['us_fused']:.0f};"
+        f"speedup_vs_host_boundary="
+        f"{r['us_host'] / r['us_fused']:.1f}x;"
+        f"submit_speedup={r['sub_us_host'] / r['sub_us_fused']:.1f}x;"
+        f"host_syncs_per_window="
+        f"{r['host_syncs'] / max(r['fused_windows'], 1):.1f};"
+        f"fused_windows={r['fused_windows']};"
+        f"shards={r['n_shards']};C=4096",
     )]
 
 

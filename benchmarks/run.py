@@ -26,8 +26,14 @@ BENCHES = [
     ("v_d", paper_tables.bench_v_d_performance),
     ("discovery", discovery_scale.bench_discovery_throughput),
     ("discovery_prefilter", discovery_scale.bench_prefilter_large_corpus),
+    ("discovery_fused", discovery_scale.bench_fused_two_phase),
     ("kernels", discovery_scale.bench_kernel_hot_spots),
 ]
+
+# Rows retired from the tracked snapshot: pruned on every merge so a
+# stale entry can't linger in BENCH_discovery.json once its bench is
+# gone (service_microbatch was folded into the service_mixed_burst row).
+RETIRED_ROWS = ("discovery/service_microbatch",)
 
 
 def _parse_derived(derived: str) -> dict:
@@ -80,6 +86,8 @@ def main() -> None:
         except (OSError, ValueError):
             pass
         merged.update(results)
+        for stale in RETIRED_ROWS:
+            merged.pop(stale, None)
         with open(args.json, "w") as f:
             json.dump(merged, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json} ({len(results)} rows updated)", flush=True)

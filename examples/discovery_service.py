@@ -208,8 +208,9 @@ print(f"\ntwo-phase retrieval: {adm['cands_filtered_out']} of "
 # ---------------------------------------------------------------------------
 # Scenario 5: fault isolation.  One user submits a sketch whose values
 # are corrupted (NaN), and — simulated through the deterministic
-# inject_faults harness — the continuous bucket's phase-2 dispatch dies
-# on its first attempt.  submit_safe quarantines the bad sketch,
+# inject_faults harness — the continuous bucket's fused two-phase
+# dispatch dies on its first attempt.  submit_safe quarantines the bad
+# sketch,
 # retries the faulted bucket, and every healthy query still comes back
 # bit-identical to a clean run.
 # ---------------------------------------------------------------------------
@@ -223,7 +224,7 @@ if not np.isnan(bad_sk.values[bad_sk.mask]).any():  # ensure it is poisoned
     bad_sk = dataclasses.replace(
         bad_sk, values=np.full_like(bad_sk.values, np.nan))
 
-with inject_faults({"shortlist_dispatch": [0]}) as fault_plan:
+with inject_faults({"fused_dispatch": [0]}) as fault_plan:
     results, outcomes = service.submit_safe(
         mixed_queue + [bad_sk], top_k=3)
 
@@ -234,7 +235,7 @@ for q in range(len(mixed_queue)):
            [(m.table, mi) for m, mi, _ in clean_answers[q]]
 adm = service.stats()["admission"]
 print(f"\nsubmit_safe under faults: 1 query quarantined "
-      f"({outcomes[-1].error}), {fault_plan.fired['shortlist_dispatch']} "
+      f"({outcomes[-1].error}), {fault_plan.fired['fused_dispatch']} "
       f"injected dispatch fault(s) recovered with {adm['retries']} "
       f"retry(ies) and {adm['fallbacks']} fallback(s); the other "
       f"{len(mixed_queue)} answers == clean run, bit for bit")

@@ -32,11 +32,21 @@ three layers, one module each:
 Retrieval is **two-phase** (joinability-gated): phase 1 is a cheap
 device-resident join-size prefilter — one vectorized ``searchsorted``
 intersect per (query, candidate) pair over the index's pre-fenced
-sorted keys — whose per-query shortlists (padded up a pow-two
-shortlist-size ladder) gate phase 2, the estimator-partitioned scoring
-of *only* the candidates that can pass ``min_join``.  Results are
-bit-identical to dense scoring + post-hoc filtering, at a cost that
-scales with the joinable fraction of the corpus instead of the corpus.
+sorted keys — whose per-query shortlists gate phase 2, the estimator-
+partitioned scoring of *only* the candidates that can pass
+``min_join``.  By default the two phases run **fused**: shortlist
+compaction (fixed-shape top-``s_bucket``-by-join-size selection along
+a pow-two shortlist-size ladder) and the phase-2 gather both execute
+on device, so nothing crosses the host boundary between phases — the
+one remaining host sync per bucket is the final result collect.  On
+the distributed backend the compaction and gather are *shard-local*
+inside ``shard_map``, feeding the existing on-device cross-shard top-k
+merge.  Shortlist widths adapt via :class:`ShortlistHints`; a window
+whose survivors overflow its rung falls back to the host-boundary
+reference path (reusing the already-computed device join sizes) and
+grows the rung for next time.  Either way results are bit-identical to
+dense scoring + post-hoc filtering, at a cost that scales with the
+joinable fraction of the corpus instead of the corpus.
 
 On top of the three layers sits the serving front-end,
 :mod:`~repro.core.discovery.service`: :class:`DiscoveryService` runs
@@ -91,22 +101,27 @@ from repro.core.discovery.index import CandidateMeta, SketchIndex
 from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
     MIN_SHORTLIST,
+    FusedSpec,
     GroupPlan,
     PlanCache,
     PlanLease,
     QueryPlan,
     ServicePlan,
     Shortlist,
+    ShortlistHints,
+    ShortlistOverflow,
     bucket_queries,
     bucket_rows,
     bucket_shortlist,
     build_shortlists,
     estimator_id,
+    fused_shortlist_spec,
     make_plan,
     pack_group,
     partition_by_estimator,
     plan_signature,
     shortlist_signature,
+    stage_min_join,
 )
 from repro.core.discovery.resilience import (
     FAULT_SITES,
@@ -133,8 +148,13 @@ __all__ = [
     "PlanCache",
     "PlanLease",
     "Shortlist",
+    "ShortlistHints",
+    "ShortlistOverflow",
+    "FusedSpec",
     "build_shortlists",
+    "fused_shortlist_spec",
     "shortlist_signature",
+    "stage_min_join",
     "make_plan",
     "pack_group",
     "partition_by_estimator",

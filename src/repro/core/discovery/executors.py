@@ -55,6 +55,24 @@ scorers' own ``jnp.sum(mask)`` and phase-2 lanes run the same
 homogeneous scorer body, so two-phase results are bit-identical to the
 dense path at equal ``min_join``.
 
+**Fused two-phase retrieval** goes one step further and removes the
+phase boundary entirely: ``fused_dispatch`` (batched) /
+``fused_topk_dispatch`` (distributed) run prefilter -> shortlist
+compaction -> gather -> score as one device pipeline.  The compaction
+is a fixed-shape stable argsort-by-pass/fail (identical selection
+discipline to the host :func:`~repro.core.discovery.planner.build_shortlists`,
+so results stay bit-identical), its width chosen *before* dispatch from
+:class:`~repro.core.discovery.planner.ShortlistHints`; padded lanes are
+sentinel-fenced on device.  Nothing crosses the bus between dispatch
+and the final collect — the mesh variant compacts and gathers
+shard-locally inside the collective, so no shard materializes a global
+group array.  A width guess too small for the batch raises
+:class:`~repro.core.discovery.planner.ShortlistOverflow` at collect;
+the caller then rebuilds host shortlists from the handle's
+``js_blocks()`` (the phase-1 work is reused, not recomputed) and runs
+the classic two-step path — bit-identically.  The two-step handles
+above remain the reference and fallback path.
+
 The estimator-id -> estimator mapping lives in exactly one place
 (:func:`_estimate`); the legacy switch scorer (`score_batch`), the seed
 reference (`score_batch_reference`), and every partitioned program
@@ -85,10 +103,12 @@ from repro.core.discovery.planner import (
     EST_MLE,
     GroupPlan,
     QueryPlan,
+    ShortlistOverflow,
     _next_pow2,
     make_plan,
     pack_group,
     partition_by_estimator,
+    stage_min_join,
 )
 from repro.core.discovery.resilience import maybe_fault
 from repro.parallel.compat import shard_map
@@ -299,6 +319,75 @@ def _gather_shortlist(keys, vals_f, vals_u, mask, rows):
     return keys[rows], vals_f[rows], vals_u[rows], mask[rows]
 
 
+def _compact_shortlist(js, live, min_join, sentinel, index, s_bucket: int):
+    """Device shortlist compaction — the fused replacement for the host
+    :func:`~repro.core.discovery.planner.build_shortlists` boundary.
+
+    Same selection discipline, traced: the cumulative count of passing
+    rows is monotone, so the l-th passing row (passing rows first,
+    ascending row order — exactly the host path's stable-argsort
+    selection) is the first position where the prefix sum reaches
+    ``l + 1``; a batched ``searchsorted`` reads all ``s_bucket`` lanes
+    off the prefix sum in O(s log bucket), and dead lanes are fenced
+    (row -> 0, global id -> sentinel, join size -> 0).  No device sort
+    and no scatter (XLA's CPU scatter serialises; this path is an
+    order of magnitude cheaper).  Because the ordering, the cut, and
+    the fences match the host path bit for bit, everything downstream
+    (scores, ranking) is bit-identical.  ``counts`` is returned
+    *unclamped* so the collect-side fence can detect
+    ``counts > s_bucket`` — the overflow signal.  Returns
+    (rows, gidx, jsz, counts), all fixed-shape.
+    """
+    passing = (js >= min_join) & live[None, :]
+    cum = jnp.cumsum(passing, axis=1, dtype=jnp.int32)
+    counts = cum[:, -1]
+    lanes = jnp.arange(1, s_bucket + 1, dtype=jnp.int32)
+    rows_raw = jax.vmap(
+        lambda cs: jnp.searchsorted(cs, lanes, side="left")
+    )(cum)
+    lane_live = (
+        jnp.arange(s_bucket, dtype=jnp.int32)[None, :] < counts[:, None]
+    )
+    rows = jnp.where(lane_live, rows_raw.astype(jnp.int32), 0)
+    gidx = jnp.where(lane_live, index[rows], sentinel)
+    jsz = jnp.where(
+        lane_live, jnp.take_along_axis(js, rows, axis=1), 0
+    )
+    return rows, gidx, jsz, counts
+
+
+@functools.partial(jax.jit, static_argnames=("est_id", "k", "s_bucket"))
+def _fused_score_group(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+    index, live, min_join, sentinel,
+    *, est_id: int, k: int, s_bucket: int,
+):
+    """Fused prefilter -> compact -> gather -> score for one group.
+
+    One compiled program per (est_id, Q-bucket, group bucket,
+    s_bucket): join sizes, the shortlist compaction, the row gather,
+    and the homogeneous scorer all fuse on device.  ``min_join`` and
+    ``sentinel`` are traced int32 scalars (device-staged by the caller)
+    so varied thresholds don't fork the program ladder.  The full
+    (Q, bucket) join-size block rides along in the output: it is only
+    transferred if the caller's overflow fallback asks for it.
+    Returns (mi (Q, s_bucket), gidx, jsz, js (Q, bucket), counts (Q,)).
+    """
+    js = _join_sizes_impl(train_keys, train_mask, cand_keys, cand_mask)
+    rows, gidx, jsz, counts = _compact_shortlist(
+        js, live, min_join, sentinel, index, s_bucket
+    )
+    mi, _ = jax.vmap(
+        lambda tk, tf, tu, tm, r: _score_group_impl(
+            tk, tf, tu, tm,
+            cand_keys[r], cand_vals_f[r], cand_vals_u[r], cand_mask[r],
+            est_id=est_id, k=k,
+        )
+    )(train_keys, train_vals_f, train_vals_u, train_mask, rows)
+    return mi, gidx, jsz, js, counts
+
+
 def _pad_rows_q(a: np.ndarray, q_bucket: int) -> np.ndarray:
     """Pad a host (Q, ...) shortlist operand to ``q_bucket`` query lanes
     by repeating lane 0 (the same discipline as :func:`pad_trains_q`)."""
@@ -323,7 +412,8 @@ class _PendingJoinSizes:
     def collect(self):
         maybe_fault("collect")
         q = self._q_live
-        return [(gp, np.asarray(_cut_q(js, q))) for gp, js in self._blocks]
+        host = jax.device_get([_cut_q(js, q) for _gp, js in self._blocks])
+        return [(gp, js) for (gp, _), js in zip(self._blocks, host)]
 
 
 class _PendingShortlist:
@@ -340,18 +430,102 @@ class _PendingShortlist:
     def collect(self):
         maybe_fault("collect")
         q = self._q_live
-        host = [(sl, np.asarray(_cut_q(mi, q))) for sl, mi in self._blocks]
+        mis = jax.device_get([_cut_q(mi, q) for _sl, mi in self._blocks])
+        host = [(sl, mi) for (sl, _), mi in zip(self._blocks, mis)]
         out = []
         for qi in range(q):
             if not host:
                 out.append((np.zeros(0, np.float32),
-                            np.zeros(0, np.int64),
+                            np.zeros(0, np.int32),
                             np.zeros(0, np.int32)))
                 continue
             out.append((
                 np.concatenate([mi[qi] for _, mi in host]),
                 np.concatenate([sl.gidx[qi] for sl, _ in host]),
                 np.concatenate([sl.js[qi] for sl, _ in host]),
+            ))
+        return out
+
+
+class _PendingFused:
+    """Dispatched fused two-phase batch (batched backend): per-group
+    (Q, s_bucket) score/index/join-size blocks pending transfer.
+
+    ``collect`` transfers the per-group survivor counts and score
+    blocks in one batched device sync, then checks the compaction
+    fence: any group whose survivor count exceeds its staged
+    ``s_bucket`` raises
+    :class:`~repro.core.discovery.planner.ShortlistOverflow` *before*
+    the resilience layer's collect fault site fires — overflow is part
+    of the fused protocol (the caller falls back to the host boundary,
+    reusing this handle's ``js_blocks()``), not a failure.  On a clean
+    fence it returns the same per-query (values, global indices, join
+    sizes) triples as the two-step ``_PendingShortlist``.
+
+    ``observed`` (per-est_id max survivor count) and ``shortlisted``
+    are populated at collect/overflow time for hint adaptation and
+    admission stats.
+    """
+
+    def __init__(self, blocks: list, q_live: int):
+        # blocks: [(group, s_bucket, mi, gidx, jsz, js, counts)]
+        self._blocks = blocks
+        self._q_live = q_live
+        self.observed: dict[int, int] = {}
+        self.shortlisted = 0
+
+    def _fence_host(self, cs):
+        overflow = False
+        shortlisted = 0
+        for (gp, s_bucket, *_rest), c in zip(self._blocks, cs):
+            m = int(c.max(initial=0))
+            self.observed[gp.est_id] = max(
+                self.observed.get(gp.est_id, 0), m
+            )
+            shortlisted += int(c.sum())
+            if m > s_bucket:
+                overflow = True
+        self.shortlisted = shortlisted
+        if overflow:
+            raise ShortlistOverflow(
+                "fused shortlist compaction overflowed its staged bucket"
+            )
+
+    def _check_fence(self):
+        self._fence_host(jax.device_get(
+            [_cut_q(c, self._q_live) for *_h, c in self._blocks]
+        ))
+
+    def js_blocks(self):
+        """Phase-1 join sizes, host-side — the overflow fallback's
+        :func:`~repro.core.discovery.planner.build_shortlists` operand.
+        The device work already done is reused, not recomputed."""
+        q = self._q_live
+        return [
+            (gp, np.asarray(_cut_q(js, q)))
+            for gp, _s, _mi, _gi, _jz, js, _c in self._blocks
+        ]
+
+    def collect(self):
+        q = self._q_live
+        cs, host = jax.device_get((
+            [_cut_q(c, q) for *_h, c in self._blocks],
+            [(_cut_q(mi, q), _cut_q(gidx, q), _cut_q(jsz, q))
+             for _gp, _s, mi, gidx, jsz, _js, _c in self._blocks],
+        ))
+        self._fence_host(cs)
+        maybe_fault("collect")
+        out = []
+        for qi in range(q):
+            if not host:
+                out.append((np.zeros(0, np.float32),
+                            np.zeros(0, np.int32),
+                            np.zeros(0, np.int32)))
+                continue
+            out.append((
+                np.concatenate([mi[qi] for mi, _, _ in host]),
+                np.concatenate([gi[qi] for _, gi, _ in host]),
+                np.concatenate([jz[qi] for _, _, jz in host]),
             ))
         return out
 
@@ -482,13 +656,85 @@ class _PendingTopk:
         maybe_fault("collect")
         q = self._q_live
         if self._vals is None:
-            empty = (np.zeros(0, np.float32), np.zeros(0, np.int64),
+            empty = (np.zeros(0, np.float32), np.zeros(0, np.int32),
                      np.zeros(0, np.int32))
             return [empty for _ in range(q)]
         kl = self._k_live
-        v = np.asarray(_cut_q(self._vals, q))
-        gi = np.asarray(_cut_q(self._gidx, q)).astype(np.int64)
-        js = np.asarray(_cut_q(self._jsz, q))
+        v, gi, js = jax.device_get((
+            _cut_q(self._vals, q), _cut_q(self._gidx, q),
+            _cut_q(self._jsz, q),
+        ))
+        if kl is not None and kl < v.shape[1]:
+            v, gi, js = v[:, :kl], gi[:, :kl], js[:, :kl]
+        return [(v[i], gi[i], js[i]) for i in range(q)]
+
+
+class _PendingFusedTopk(_PendingTopk):
+    """Dispatched fused two-phase top-k (distributed backend): the
+    device-merged (Q, k_merge) triples of `_PendingTopk`, plus the
+    shard-local compaction fence.
+
+    ``collect`` transfers the per-(group, shard) survivor counts and
+    the merged triple in one batched device sync, then checks the
+    fence: a shard whose local survivor count exceeds its ``s_shard``
+    lanes raises
+    :class:`~repro.core.discovery.planner.ShortlistOverflow` (the
+    caller rebuilds host shortlists from ``js_blocks()`` and runs the
+    two-step mesh path).  Only on a clean fence does the resilience
+    layer's collect fault site fire — exactly once, as on the
+    ``_PendingTopk`` path.
+    """
+
+    def __init__(self, vals, gidx, jsz, q_live: int, k_live: int,
+                 fence: list):
+        super().__init__(vals, gidx, jsz, q_live, k_live=k_live)
+        # fence: [(group, s_shard, counts (Qb, n_shards), js (Qb, rows))]
+        self._fence = fence
+        self.observed: dict[int, int] = {}
+        self.shortlisted = 0
+
+    def _fence_host(self, cs):
+        overflow = False
+        shortlisted = 0
+        for (gp, s_shard, _counts, _js), c in zip(self._fence, cs):
+            m = int(c.max(initial=0))
+            self.observed[gp.est_id] = max(
+                self.observed.get(gp.est_id, 0), m
+            )
+            shortlisted += int(c.sum())
+            if m > s_shard:
+                overflow = True
+        self.shortlisted = shortlisted
+        if overflow:
+            raise ShortlistOverflow(
+                "fused shard-local compaction overflowed its staged bucket"
+            )
+
+    def _check_fence(self):
+        self._fence_host(jax.device_get(
+            [_cut_q(c, self._q_live) for _gp, _s, c, _js in self._fence]
+        ))
+
+    def js_blocks(self):
+        q = self._q_live
+        return [
+            (gp, np.asarray(_cut_q(js, q)))
+            for gp, _s, _c, js in self._fence
+        ]
+
+    def collect(self):
+        q = self._q_live
+        if self._vals is None:
+            self._check_fence()
+            return super().collect()
+        cs, v, gi, js = jax.device_get((
+            [_cut_q(c, q) for _gp, _s, c, _js in self._fence],
+            _cut_q(self._vals, q), _cut_q(self._gidx, q),
+            _cut_q(self._jsz, q),
+        ))
+        self._fence_host(cs)
+        maybe_fault("collect")
+        kl = self._k_live
         if kl is not None and kl < v.shape[1]:
             v, gi, js = v[:, :kl], gi[:, :kl], js[:, :kl]
         return [(v[i], gi[i], js[i]) for i in range(q)]
@@ -554,7 +800,7 @@ class Executor:
         out = []
         for q in range(mi.shape[0]):
             order = np.argsort(-mi[q], kind="stable")[:min(top_k, mi.shape[1])]
-            out.append((mi[q][order], order.astype(np.int64), js[q][order]))
+            out.append((mi[q][order], order.astype(np.int32), js[q][order]))
         return out
 
 
@@ -668,6 +914,44 @@ class BatchedExecutor(Executor):
             )
             blocks.append((sl, mi))
         return _PendingShortlist(blocks, Q)
+
+    def fused_dispatch(
+        self, plan, trains, spec, min_join, *, q_bucket: int | None = None,
+    ):
+        """Fused two-phase: one program per group runs prefilter,
+        shortlist compaction, gather, and score without leaving the
+        device — nothing crosses the bus until the handle's
+        ``collect``.  ``spec`` is a
+        :class:`~repro.core.discovery.planner.FusedSpec` carrying the
+        pre-chosen per-group compaction widths; ``min_join`` may be a
+        python int (staged through the memo cache) or an already-staged
+        device scalar.  The handle raises ``ShortlistOverflow`` at
+        collect when a width guess was too small — fall back to the
+        host boundary via its ``js_blocks()``."""
+        maybe_fault("fused_dispatch", "batched")
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        mj = (min_join if isinstance(min_join, jax.Array)
+              else stage_min_join(min_join))
+        sentinel = plan.sentinel_dev
+        if sentinel is None:
+            sentinel = jnp.asarray(np.int32(plan.n_candidates))
+        blocks = []
+        for gp, s_bucket in zip(plan.groups, spec.s_buckets):
+            index_dev = gp.index_dev
+            if index_dev is None:
+                index_dev = jnp.asarray(gp.index.astype(np.int32))
+            mi, gidx, jsz, js, counts = _fused_score_group(
+                *t_args, *_cand_args(gp), index_dev, gp.live, mj,
+                sentinel, est_id=gp.est_id, k=self.k,
+                s_bucket=int(s_bucket),
+            )
+            blocks.append((gp, int(s_bucket), mi, gidx, jsz, js, counts))
+        return _PendingFused(blocks, Q)
 
 
 def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
@@ -798,6 +1082,62 @@ def _make_shortlist_shard_scorer(mesh: Mesh, est_id: int, k_shard: int, k: int):
     return _register_shard_scorer(jax.jit(fn))
 
 
+@functools.lru_cache(maxsize=128)
+def _make_fused_shard_scorer(
+    mesh: Mesh, est_id: int, s_shard: int, k_shard: int, k: int
+):
+    """Compiled shard_map fused two-phase scorer for one group.
+
+    Everything happens shard-locally: each shard prefilters its own
+    candidate rows, compacts its own top-``s_shard`` shortlist (the
+    same stable-argsort discipline as the host boundary, over local
+    rows), gathers from its *local* arrays, scores, and emits its top
+    ``k_shard`` winners — no shard ever touches a global group array,
+    and the gather payload stays O(s_shard · cap) per shard.  Survivor
+    counts ((Q, 1) per shard -> (Q, shards)) and the local join-size
+    blocks ride along for the collect-side overflow fence and the
+    host-boundary fallback respectively.  ``gi`` rows already hold
+    *global* candidate ids (the plan's device-resident index, sharded),
+    so winners merge across groups without re-indexing.
+    """
+    axis = "data"
+    sh = P(None, axis)
+    rep = P()
+
+    def local(tk, tf, tu, tm, ck, cf, cu, cm, gi, live, mj, sentinel):
+        js = _join_sizes_impl(tk, tm, ck, cm)
+        rows, gidx, jsz, counts = _compact_shortlist(
+            js, live, mj, sentinel, gi, s_shard
+        )
+        mi, _ = jax.vmap(
+            lambda a, b, c, d, r: _score_group_impl(
+                a, b, c, d, ck[r], cf[r], cu[r], cm[r],
+                est_id=est_id, k=k,
+            )
+        )(tk, tf, tu, tm, rows)
+        lane_live = gidx != sentinel
+        fenced = jnp.where(lane_live, mi, -jnp.inf)
+        v, pos = jax.lax.top_k(fenced, k_shard)
+        return (
+            v,
+            jnp.take_along_axis(gidx, pos, axis=1),
+            jnp.take_along_axis(jsz, pos, axis=1),
+            counts[:, None],
+            js,
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, rep,
+                  P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), rep, rep),
+        out_specs=(sh, sh, sh, sh, sh),
+        check=False,
+    )
+    return _register_shard_scorer(jax.jit(fn))
+
+
 def compile_count() -> int:
     """Total compiled specializations across the discovery scorer
     programs — the admission-control test hook.
@@ -812,7 +1152,7 @@ def compile_count() -> int:
     fns = [_score_group, _score_group_many, score_batch,
            score_batch_reference, _globalize_rows, _merge_topk_device,
            _join_sizes, _gather_score_group, _gather_shortlist,
-           *_SHARD_SCORERS]
+           _fused_score_group, *_SHARD_SCORERS]
     return sum(
         f._cache_size() for f in fns if hasattr(f, "_cache_size")
     )
@@ -829,6 +1169,13 @@ def _globalize_rows(i, index_dev, *, k_shard: int, shard_rows: int):
     return index_dev[i + (shard * shard_rows)[None, :]]
 
 
+def _concat1(xs):
+    """Cross-group concat that skips the dispatch when there is only
+    one group — the common single-estimator corpus would otherwise pay
+    three no-op device programs per query window."""
+    return xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("k_final",))
 def _merge_topk_device(v, gi, js, *, k_final: int):
     """Cross-group merge on device: one ``lax.top_k`` over the
@@ -841,6 +1188,29 @@ def _merge_topk_device(v, gi, js, *, k_final: int):
         jnp.take_along_axis(gi, pos, axis=1),
         jnp.take_along_axis(js, pos, axis=1),
     )
+
+
+# Replicated stagings of tiny scalars (min_join, sentinel) per mesh:
+# keyed by (mesh, id(source)) with a strong reference to the source so
+# the id cannot be recycled while the entry lives.  Bounded: the
+# min_join cache upstream is itself bounded and sentinels are one per
+# live plan.
+_REPL_CACHE: dict = {}
+_REPL_CACHE_MAX = 256
+
+
+def _stage_replicated(mesh: Mesh, arr: jax.Array) -> jax.Array:
+    """Memoized mesh-replicated copy of a device scalar, so repeat
+    dispatches re-ship nothing (the fused transfer-guard contract)."""
+    key = (mesh, id(arr))
+    hit = _REPL_CACHE.get(key)
+    if hit is not None and hit[0] is arr:
+        return hit[1]
+    if len(_REPL_CACHE) >= _REPL_CACHE_MAX:
+        _REPL_CACHE.clear()
+    out = jax.device_put(arr, jax.NamedSharding(mesh, P()))
+    _REPL_CACHE[key] = (arr, out)
+    return out
 
 
 def _pad_group_to_shards(
@@ -862,9 +1232,12 @@ def _pad_group_to_shards(
     # Padded key rows must stay searchsorted-safe: re-fence through the
     # one effective-keys helper (idempotent for the live rows).
     arrays["keys"] = effective_keys(arrays["keys"], arrays["mask"])
-    index = np.concatenate([gp.index, np.full(pad, sentinel, np.int64)])
+    index = np.concatenate(
+        [gp.index.astype(np.int32), np.full(pad, sentinel, np.int32)]
+    )
     live = jnp.pad(gp.live, (0, pad))
-    return GroupPlan(gp.est_id, arrays, index, live, gp.size)
+    return GroupPlan(gp.est_id, arrays, index, live, gp.size,
+                     jnp.asarray(index))
 
 
 class GroupMajorDistributedExecutor(Executor):
@@ -901,10 +1274,43 @@ class GroupMajorDistributedExecutor(Executor):
             _pad_group_to_shards(gp, n_shards, plan.n_candidates)
             for gp in plan.groups
         ]
-        # Device-resident row->candidate index per group, uploaded once
-        # per plan so the on-device merge never re-ships it per query.
+        # Stage every group buffer mesh-resident once per plan —
+        # candidate arrays, live mask, and row->candidate index sharded
+        # over 'data' exactly as the shard_map in_specs consume them.
+        # Repeat dispatches against a cached plan then move *nothing*
+        # across the bus (the fused path's transfer-guard contract);
+        # without this, jit would silently re-shard the single-device
+        # plan buffers on every call.
+        row_sh = jax.NamedSharding(self.mesh, P("data"))
+        groups = [
+            GroupPlan(
+                gp.est_id,
+                {
+                    name: jax.device_put(
+                        a, jax.NamedSharding(
+                            self.mesh,
+                            P("data", *(None,) * (a.ndim - 1)),
+                        )
+                    )
+                    for name, a in gp.arrays.items()
+                },
+                gp.index,
+                jax.device_put(gp.live, row_sh),
+                gp.size,
+                jax.device_put(
+                    gp.index_dev if gp.index_dev is not None
+                    else jnp.asarray(gp.index.astype(np.int32)),
+                    row_sh,
+                ),
+            )
+            for gp in groups
+        ]
+        # Replicated row->candidate index per group for the *post*-
+        # collective merge (``_globalize_rows`` consumes it outside
+        # shard_map, so it needs the un-sharded layout).
         gi_devs = [
-            jnp.asarray(gp.index.astype(np.int32)) for gp in groups
+            jax.device_put(gp.index_dev, jax.NamedSharding(self.mesh, P()))
+            for gp in groups
         ]
         while len(self._pad_cache) >= self._PAD_CACHE_MAX:
             self._pad_cache.pop(next(iter(self._pad_cache)))
@@ -950,9 +1356,9 @@ class GroupMajorDistributedExecutor(Executor):
                 shard_rows=gp.bucket // n_shards,
             ))
             jss.append(js)
-        flat_v = jnp.concatenate(vs, axis=1)
-        flat_gi = jnp.concatenate(gis, axis=1)
-        flat_js = jnp.concatenate(jss, axis=1)
+        flat_v = _concat1(vs)
+        flat_gi = _concat1(gis)
+        flat_js = _concat1(jss)
         width = int(flat_v.shape[1])
         # Merge on the same pow-2 k-ladder as the shard scorers; the
         # exact result count is sliced off host-side at collect.
@@ -1014,7 +1420,7 @@ class GroupMajorDistributedExecutor(Executor):
                 continue
             rows = jnp.asarray(_pad_rows_q(sl.rows, qb))
             cands = _gather_shortlist(*_cand_args(sl.group), rows)
-            gi = jnp.asarray(_pad_rows_q(sl.gidx, qb).astype(np.int32))
+            gi = jnp.asarray(_pad_rows_q(sl.gidx, qb))
             live = jnp.asarray(
                 _pad_rows_q(sl.gidx < plan.n_candidates, qb)
             )
@@ -1028,15 +1434,75 @@ class GroupMajorDistributedExecutor(Executor):
             jss.append(j)
         if not vs:
             return _PendingTopk(None, None, None, Q)
-        flat_v = jnp.concatenate(vs, axis=1)
-        flat_gi = jnp.concatenate(gis, axis=1)
-        flat_js = jnp.concatenate(jss, axis=1)
+        flat_v = _concat1(vs)
+        flat_gi = _concat1(gis)
+        flat_js = _concat1(jss)
         width = int(flat_v.shape[1])
         k_merge = min(_next_pow2(top_k), width)
         vals, gidx, jsz = _merge_topk_device(
             flat_v, flat_gi, flat_js, k_final=k_merge
         )
         return _PendingTopk(vals, gidx, jsz, Q, k_live=min(top_k, width))
+
+    def fused_topk_dispatch(
+        self, plan, trains, spec, min_join, top_k: int,
+        *, q_bucket: int | None = None,
+    ):
+        """Fused two-phase on the mesh: prefilter, shortlist
+        compaction, gather, score, and per-shard top-k all run
+        shard-locally inside one collective per group, followed by the
+        usual on-device cross-group merge — no shard materializes a
+        global group array and no host sync happens before the
+        handle's ``collect``.  ``spec.s_buckets`` must be divisible by
+        the shard count (build it with ``multiple=n_shards``); each
+        shard compacts ``s_bucket // n_shards`` lanes, so the overflow
+        fence is per (group, shard).  Overflow at collect falls back to
+        the two-step mesh path via the handle's ``js_blocks()``."""
+        maybe_fault("fused_dispatch", "distributed")
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        n_shards, groups, _ = self._groups(plan)
+        mj = _stage_replicated(
+            self.mesh,
+            min_join if isinstance(min_join, jax.Array)
+            else stage_min_join(min_join),
+        )
+        sentinel = plan.sentinel_dev
+        if sentinel is None:
+            sentinel = jnp.asarray(np.int32(plan.n_candidates))
+        sentinel = _stage_replicated(self.mesh, sentinel)
+        vs, gis, jss, fence = [], [], [], []
+        for gp, s_bucket in zip(groups, spec.s_buckets):
+            s_shard = max(min(int(s_bucket), gp.bucket) // n_shards, 1)
+            k_shard = max(min(_next_pow2(top_k), s_shard), 1)
+            fn = _make_fused_shard_scorer(
+                self.mesh, gp.est_id, s_shard, k_shard, self.k
+            )
+            v, g, j, counts, js = fn(
+                *t_args, *_cand_args(gp), gp.index_dev, gp.live,
+                mj, sentinel,
+            )
+            vs.append(v)
+            gis.append(g)
+            jss.append(j)
+            fence.append((gp, s_shard, counts, js))
+        if not vs:
+            return _PendingFusedTopk(None, None, None, Q, 0, fence)
+        flat_v = _concat1(vs)
+        flat_gi = _concat1(gis)
+        flat_js = _concat1(jss)
+        width = int(flat_v.shape[1])
+        k_merge = min(_next_pow2(top_k), width)
+        vals, gidx, jsz = _merge_topk_device(
+            flat_v, flat_gi, flat_js, k_final=k_merge
+        )
+        return _PendingFusedTopk(
+            vals, gidx, jsz, Q, min(top_k, width), fence
+        )
 
 
 def get_executor(

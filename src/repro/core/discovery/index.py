@@ -56,9 +56,12 @@ from repro.core.discovery.planner import (
     GroupPlan,
     MIN_BUCKET,
     QueryPlan,
+    ShortlistHints,
+    ShortlistOverflow,
     _PlanPins,
     build_shortlists,
     estimator_id,
+    fused_shortlist_spec,
 )
 from repro.core.discovery.resilience import maybe_fault
 from repro.core.sketch import Sketch, build_sketch
@@ -78,6 +81,12 @@ def topk_oversample(top_k: int, n_candidates: int) -> int:
     return max(min(top_k * 4, n_candidates), 1)
 
 _KEY_MAX = np.uint32(0xFFFFFFFF)
+
+# Gather indices, group row ids, and the dead-candidate sentinel are
+# int32 end-to-end (device compaction, shard merges, host ranking all
+# share the one dtype); ingest refuses to grow past the int32 index
+# space rather than silently wrapping.
+_MAX_ROWS_I32 = 2**31 - 1
 
 
 @dataclass
@@ -145,6 +154,11 @@ class _DeviceStore:
     def ensure_rows(self, need: int) -> None:
         if need <= self.cap_rows:
             return
+        if need > _MAX_ROWS_I32:
+            raise OverflowError(
+                f"device store cannot grow to {need} rows: candidate "
+                f"indices are int32 end-to-end (max {_MAX_ROWS_I32})"
+            )
         new_cap = max(self.cap_rows, MIN_BUCKET)
         while new_cap < need:
             new_cap *= 2
@@ -236,6 +250,10 @@ class SketchIndex:
         self._groups: dict[bool, _GroupState] = {}
         self._stacked_cache: dict[tuple[bool, int], tuple[int, dict]] = {}
         self._plan_cache: dict[bool, tuple[int, QueryPlan]] = {}
+        # Adaptive compaction-width rungs for the fused two-phase path,
+        # shared with the service front-end (one workload memory per
+        # corpus, whichever entry point drives it).
+        self.shortlist_hints = ShortlistHints()
         # One distributed executor per (mesh, k), held across queries so
         # its shard-padded-group cache actually hits on repeat calls —
         # and shared with the service front-end (same cache, same device
@@ -283,6 +301,11 @@ class SketchIndex:
                 sk: Sketch) -> None:
         """Append one validated sketch to the host buffers (the device
         stores pick it up at the next flush)."""
+        if len(self.meta) >= _MAX_ROWS_I32:
+            raise OverflowError(
+                "index is full: candidate ids (and the dead-row "
+                f"sentinel) are int32 end-to-end (max {_MAX_ROWS_I32})"
+            )
         if self._cap_cols is None:
             self._cap_cols = sk.capacity
         self.meta.append(
@@ -494,12 +517,16 @@ class SketchIndex:
             store = state.stores[eid]
             g = store.rows
             index = np.concatenate([
-                np.asarray(state.index[eid], np.int64),
-                np.full(store.cap_rows - g, C, np.int64),
+                np.asarray(state.index[eid], np.int32),
+                np.full(store.cap_rows - g, C, np.int32),
             ])
             live = jnp.asarray(np.arange(store.cap_rows) < g)
-            groups.append(GroupPlan(eid, store.arrays, index, live, g))
-        plan = QueryPlan(y_is_discrete, C, groups, pins=self._pins)
+            groups.append(
+                GroupPlan(eid, store.arrays, index, live, g,
+                          jnp.asarray(index))
+            )
+        plan = QueryPlan(y_is_discrete, C, groups, pins=self._pins,
+                         sentinel_dev=jnp.asarray(np.int32(C)))
         self._plan_cache[y_is_discrete] = (self._version, plan)
         return plan
 
@@ -550,37 +577,111 @@ class SketchIndex:
         # add work.  Explicit True/False overrides for tests/benches.
         return (min_join > 0) if prefilter is None else bool(prefilter)
 
+    def _fused_triples(self, plan: QueryPlan, trains, top_k: int,
+                       min_join: int, ex, n_shards: int) -> list:
+        """One fused device pipeline, with the host boundary as the
+        overflow fallback.
+
+        Dispatch -> collect moves nothing across the bus except the
+        final triples (and the tiny survivor-count fence).  When the
+        staged compaction width was too small, the handle raises
+        :class:`~repro.core.discovery.planner.ShortlistOverflow`; the
+        already-computed device join sizes are then pulled once
+        (``js_blocks``) and the classic build-shortlists -> phase-2
+        path finishes the batch bit-identically.  Either way the
+        observed survivor counts update ``shortlist_hints`` so repeat
+        traffic converges onto the fused path.
+        """
+        sharded = n_shards > 1
+        on_mesh = hasattr(ex, "fused_topk_dispatch")
+        hints = self.shortlist_hints
+        spec = fused_shortlist_spec(
+            plan, hints, min_join,
+            multiple=n_shards if sharded else 1, sharded=sharded,
+        )
+        if on_mesh:
+            handle = ex.fused_topk_dispatch(
+                plan, trains, spec, min_join, top_k
+            )
+        else:
+            handle = ex.fused_dispatch(plan, trains, spec, min_join)
+        try:
+            triples = handle.collect()
+            overflowed = False
+        except ShortlistOverflow:
+            triples = None
+            overflowed = True
+        for eid, m in handle.observed.items():
+            hints.observe(
+                (plan.y_discrete, eid, int(min_join), sharded), m,
+                overflowed=overflowed,
+            )
+        if overflowed:
+            shortlists = build_shortlists(
+                plan, handle.js_blocks(), min_join,
+                multiple=n_shards if sharded else 1,
+            )
+            if on_mesh:
+                triples = ex.shortlist_topk_dispatch(
+                    plan, trains, shortlists, top_k
+                ).collect()
+            else:
+                triples = ex.shortlist_dispatch(
+                    plan, trains, shortlists
+                ).collect()
+        return triples
+
     def _two_phase(self, plan: QueryPlan, trains, top_k: int,
-                   min_join: int, mesh: Mesh | None, k: int) -> list:
+                   min_join: int, mesh: Mesh | None, k: int,
+                   fused: bool | None = None) -> list:
         """Joinability-gated retrieval: join-size prefilter shortlists
         (phase 1), then gather-and-score only the survivors (phase 2).
         Returns one ranked result list per query — bit-identical to the
         dense path at equal ``min_join`` (phase 1 reduces the same
         match mask the scorers sum; phase-2 lanes run the same
-        homogeneous scorer body; ranking order is (score, index))."""
+        homogeneous scorer body; ranking order is (score, index)).
+
+        ``fused`` (default on) runs both phases as one device pipeline
+        with no host sync between them; ``fused=False`` forces the
+        classic host-boundary path (the reference the fused path is
+        bit-identity-tested against)."""
+        use_fused = True if fused is None else bool(fused)
         if mesh is not None:
             ex = self._distributed_executor(mesh, k)
-            shortlists = build_shortlists(
-                plan, ex.prefilter_dispatch(plan, trains).collect(),
-                min_join, multiple=mesh.shape["data"],
-            )
-            triples = ex.shortlist_topk_dispatch(
-                plan, trains, shortlists, top_k
-            ).collect()
+            if use_fused:
+                triples = self._fused_triples(
+                    plan, trains, top_k, min_join, ex,
+                    mesh.shape["data"],
+                )
+            else:
+                shortlists = build_shortlists(
+                    plan, ex.prefilter_dispatch(plan, trains).collect(),
+                    min_join, multiple=mesh.shape["data"],
+                )
+                triples = ex.shortlist_topk_dispatch(
+                    plan, trains, shortlists, top_k
+                ).collect()
         else:
             ex = _ex.BatchedExecutor(k=k)
-            shortlists = build_shortlists(
-                plan, ex.prefilter_dispatch(plan, trains).collect(),
-                min_join,
-            )
-            triples = ex.shortlist_dispatch(plan, trains, shortlists).collect()
+            if use_fused:
+                triples = self._fused_triples(
+                    plan, trains, top_k, min_join, ex, 1
+                )
+            else:
+                shortlists = build_shortlists(
+                    plan, ex.prefilter_dispatch(plan, trains).collect(),
+                    min_join,
+                )
+                triples = ex.shortlist_dispatch(
+                    plan, trains, shortlists
+                ).collect()
         return [
             self._rank(v, gi, js, top_k, min_join) for v, gi, js in triples
         ]
 
     def query(self, train_sketch: Sketch, top_k: int = 10,
               mesh: Mesh | None = None, min_join: int = 8, k: int = 3,
-              prefilter: bool | None = None):
+              prefilter: bool | None = None, fused: bool | None = None):
         """Rank candidates by estimated MI with the train target.
 
         ``k`` is the KSG-family neighbor count the estimators score
@@ -590,13 +691,18 @@ class SketchIndex:
         can pass ``min_join``, and only those are gathered and scored —
         results are bit-identical to the dense path, which scored every
         candidate and discarded the sub-``min_join`` ones afterwards.
+        ``fused`` (default on when the prefilter engages) keeps both
+        phases on device with no intervening host sync;
+        ``fused=False`` forces the host-boundary reference path.
         Returns a list of (CandidateMeta, mi, join_size), best first.
         """
         train = self.train_arrays(train_sketch)
         C = len(self.meta)
         plan = self.plan(train_sketch.value_is_discrete)
         if self._use_prefilter(prefilter, min_join):
-            return self._two_phase(plan, train, top_k, min_join, mesh, k)[0]
+            return self._two_phase(
+                plan, train, top_k, min_join, mesh, k, fused=fused
+            )[0]
         if mesh is not None:
             ex = self._distributed_executor(mesh, k)
             # Oversample so the min_join post-filter can discard
@@ -612,7 +718,8 @@ class SketchIndex:
     def query_many(self, train_sketches: list[Sketch], top_k: int = 10,
                    min_join: int = 8, mesh: Mesh | None = None,
                    executor=None, k: int = 3,
-                   prefilter: bool | None = None):
+                   prefilter: bool | None = None,
+                   fused: bool | None = None):
         """Answer Q concurrent discovery queries in one executor pass.
 
         All train sketches must share one target dtype (the estimator
@@ -624,7 +731,10 @@ class SketchIndex:
         ``min_join`` > 0) routes the batch through two-phase retrieval:
         one batched join-size program per group shortlists all Q
         queries at once, then only shortlist candidates are gathered
-        and scored.  Passing ``executor=`` keeps the dense path (the
+        and scored — by default as one *fused* device pipeline with no
+        host sync between the phases (``fused=False`` forces the
+        host-boundary reference path).  Passing ``executor=`` keeps the
+        dense path (the
         pushdown picks its own backend); combining it with an explicit
         ``prefilter=True`` raises.  Returns one result list per train
         sketch.
@@ -652,7 +762,9 @@ class SketchIndex:
                 "or pass prefilter=False/None for dense scoring)"
             )
         if self._use_prefilter(prefilter, min_join) and executor is None:
-            return self._two_phase(plan, trains, top_k, min_join, mesh, k)
+            return self._two_phase(
+                plan, trains, top_k, min_join, mesh, k, fused=fused
+            )
         if executor is None:
             ex = (self._distributed_executor(mesh, k) if mesh is not None
                   else _ex.BatchedExecutor(k=k))

@@ -47,6 +47,12 @@ Layout decisions made here:
     the collected (Q, bucket) join sizes into per-group
     :class:`Shortlist` layouts (ascending candidate order, sentinel-
     fenced padding) that any executor's phase-2 can gather from.
+    The *fused* pipeline removes that boundary: compaction widths are
+    chosen up front from :class:`ShortlistHints` (an adaptive pow-2
+    rung per workload) via :func:`fused_shortlist_spec`, and the
+    selection itself runs on device inside the executor — the host
+    path remains as the bit-identical fallback when a width guess
+    overflows (:class:`ShortlistOverflow`).
 
 The admission-control bookkeeping on top of the ladders lives in
 :class:`PlanCache`: one entry per (corpus version, target dtype,
@@ -90,6 +96,11 @@ __all__ = [
     "QueryPlan",
     "PlanLease",
     "Shortlist",
+    "ShortlistOverflow",
+    "ShortlistHints",
+    "FusedSpec",
+    "fused_shortlist_spec",
+    "stage_min_join",
     "build_shortlists",
     "plan_signature",
     "shortlist_signature",
@@ -199,9 +210,14 @@ class GroupPlan:
 
     est_id: int
     arrays: dict  # keys / vals_f / vals_u / mask, each (bucket, cap)
-    index: np.ndarray  # (bucket,) int64, dead rows -> n_candidates
+    index: np.ndarray  # (bucket,) int32, dead rows -> n_candidates
     live: jax.Array  # (bucket,) bool
     size: int  # live rows
+    # Device-resident copy of ``index`` — the fused two-phase path maps
+    # compacted group rows to global candidate ids on device, so the
+    # mapping must already live there (uploading it at dispatch would
+    # reintroduce the host sync the fused path exists to remove).
+    index_dev: jax.Array = field(default=None, compare=False, repr=False)
 
     @property
     def bucket(self) -> int:
@@ -258,6 +274,10 @@ class QueryPlan:
     # Retain-epoch counter of the owning SketchIndex (None for ad-hoc
     # plans built by make_plan, which own their buffers outright).
     pins: object = field(default=None, compare=False, repr=False)
+    # Device int32 scalar == n_candidates: the dead-candidate sentinel
+    # the fused compaction writes into padded shortlist lanes.  Staged
+    # at plan build so dispatch-time code touches no host values.
+    sentinel_dev: jax.Array = field(default=None, compare=False, repr=False)
 
     def retain(self) -> PlanLease:
         """Pin this plan's device buffers across ingest flushes.
@@ -299,9 +319,9 @@ def pack_group(
         "mask": mask,
     }
     index = np.concatenate(
-        [idx.astype(np.int64), np.full(bucket - g, n_candidates, np.int64)]
+        [idx.astype(np.int32), np.full(bucket - g, n_candidates, np.int32)]
     )
-    return GroupPlan(eid, arrays, index, live, g)
+    return GroupPlan(eid, arrays, index, live, g, jnp.asarray(index))
 
 
 def plan_signature(plan: QueryPlan) -> tuple:
@@ -335,7 +355,7 @@ class Shortlist:
 
     group: GroupPlan
     rows: np.ndarray  # (Q, s_bucket) int32 group-row indices, pad -> 0
-    gidx: np.ndarray  # (Q, s_bucket) int64 global ids, pad -> sentinel
+    gidx: np.ndarray  # (Q, s_bucket) int32 global ids, pad -> sentinel
     js: np.ndarray  # (Q, s_bucket) int32 join sizes, pad -> 0
     s_bucket: int
     shortlisted: int  # live (query, candidate) entries across all Q
@@ -390,13 +410,130 @@ def build_shortlists(
         lane_live = np.arange(s_bucket)[None, :] < counts[:, None]
         rows = np.where(lane_live, order, 0).astype(np.int32)
         gidx = np.where(
-            lane_live, gp.index[order], np.int64(plan.n_candidates)
-        )
+            lane_live, gp.index[order], np.int32(plan.n_candidates)
+        ).astype(np.int32)
         jsz = np.where(
             lane_live, np.take_along_axis(js, order, axis=1), 0
         ).astype(np.int32)
         out.append(Shortlist(gp, rows, gidx, jsz, s_bucket, int(counts.sum())))
     return out
+
+
+class ShortlistOverflow(Exception):
+    """Fused compaction found more prefilter survivors than the staged
+    ``s_bucket`` has lanes for.  The caller falls back to the host
+    :func:`build_shortlists` boundary for this batch — reusing the
+    already-computed device join sizes — and the overflow observation
+    grows the :class:`ShortlistHints` rung so the next batch at this
+    selectivity stays fused."""
+
+
+class ShortlistHints:
+    """Adaptive per-workload shortlist-bucket predictor.
+
+    The host path sizes ``s_bucket`` *after* counting survivors — which
+    is exactly the sync the fused path removes — so the fused path must
+    pick its compaction width *before* phase 1 runs.  This class keeps a
+    tiny per-(dtype, estimator, ``min_join``, backend) memory of the
+    pow-2 rung that fit recent batches:
+
+      * **grow** immediately to ``bucket_shortlist(observed)`` when a
+        batch overflows or nearly fills its rung;
+      * **shrink** only when the observed rung has a full rung of
+        headroom below the current one (``bucket * 4 <= current``), and
+        then only by stepping down to ``bucket * 2`` — one-rung
+        hysteresis, so alternating selectivities don't oscillate.
+
+    Wrong guesses are a perf event, not a correctness event: too-big
+    wastes lanes (still bit-identical — padded lanes are fenced), and
+    too-small raises :class:`ShortlistOverflow`, which falls back to the
+    host-boundary path for that batch.
+    """
+
+    def __init__(self):
+        self._rungs: dict[tuple, int] = {}
+        self.overflows = 0
+
+    def get(self, key: tuple) -> int:
+        return self._rungs.get(key, MIN_SHORTLIST)
+
+    def observe(self, key: tuple, observed: int, overflowed: bool = False) -> None:
+        tgt = bucket_shortlist(int(observed))
+        cur = self._rungs.get(key, MIN_SHORTLIST)
+        if overflowed:
+            self.overflows += 1
+        if tgt > cur:
+            self._rungs[key] = tgt
+        elif tgt * 4 <= cur:
+            self._rungs[key] = tgt * 2
+
+
+@dataclass(frozen=True)
+class FusedSpec:
+    """Per-group compaction widths for one fused two-phase pass.
+
+    ``s_buckets`` aligns with ``plan.groups`` (entries clamped to each
+    group's row bucket); ``signature`` is the PlanCache ``s_key`` — the
+    ``"fused"`` prefix keeps it disjoint from host-path
+    :func:`shortlist_signature` keys so the two pipelines never share a
+    cache entry.
+    """
+
+    s_buckets: tuple
+    signature: tuple
+
+
+def fused_shortlist_spec(
+    plan: QueryPlan,
+    hints: ShortlistHints,
+    min_join: int,
+    multiple: int = 1,
+    sharded: bool = False,
+) -> FusedSpec:
+    """Choose each group's compaction width from the hint table.
+
+    ``multiple`` is the mesh shard count; the mesh compaction (and its
+    overflow fence, and therefore the hint it feeds) is *per shard*, so
+    the sharded width is the per-shard rung times the shard count —
+    clamped so no shard compacts more lanes than it holds rows.
+    ``sharded`` keys the hints so a mesh's per-shard survivor counts
+    don't pollute the batched backend's global rungs.
+    """
+    s_buckets = []
+    for gp in plan.groups:
+        key = (bool(plan.y_discrete), gp.est_id, int(min_join), sharded)
+        rung = bucket_shortlist(hints.get(key))
+        if multiple > 1:
+            rows_local = max(bucket_rows(gp.bucket, multiple) // multiple, 1)
+            s = min(rung, rows_local) * multiple
+        else:
+            s = min(rung, bucket_rows(gp.bucket))
+        s_buckets.append(s)
+    sig = tuple(
+        ("fused", gp.est_id, s)
+        for gp, s in zip(plan.groups, s_buckets)
+    )
+    return FusedSpec(tuple(s_buckets), sig)
+
+
+# Memoized device int32 scalars for ``min_join`` thresholds.  The fused
+# dispatch passes the threshold as a traced operand (a static arg would
+# fork the compiled-program ladder per distinct min_join); memoizing the
+# upload means steady-state dispatch moves no host bytes at all — which
+# the transfer-guard tests rely on.
+_MIN_JOIN_CACHE: dict[int, jax.Array] = {}
+_MIN_JOIN_CACHE_MAX = 256
+
+
+def stage_min_join(min_join: int) -> jax.Array:
+    mj = int(min_join)
+    dev = _MIN_JOIN_CACHE.get(mj)
+    if dev is None:
+        if len(_MIN_JOIN_CACHE) >= _MIN_JOIN_CACHE_MAX:
+            _MIN_JOIN_CACHE.pop(next(iter(_MIN_JOIN_CACHE)))
+        dev = jnp.asarray(np.int32(mj))
+        _MIN_JOIN_CACHE[mj] = dev
+    return dev
 
 
 def shortlist_signature(shortlists: list) -> tuple:

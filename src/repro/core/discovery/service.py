@@ -46,8 +46,16 @@ current as of each ``submit``.
 each admitted bucket runs two-phase retrieval (join-size prefilter ->
 shortlist gather-and-score — see ``executors.py``), so the expensive
 kNN-MI work scales with the *joinable* fraction of the corpus, not the
-corpus.  ``stats()`` reports the candidate pairs the gate filtered out
-of estimator scoring, alongside the shortlist-bucket ladder traffic.
+corpus.  By default both phases run as one *fused* device pipeline:
+compaction widths come from the index's adaptive
+:class:`~repro.core.discovery.planner.ShortlistHints` and the only
+host sync a bucket pays is its final result collect (counted in
+``host_syncs``; ``fused_windows`` counts buckets the fused path
+delivered).  A compaction-width overflow falls back to the
+host-boundary path for that bucket — bit-identically, reusing the
+device join sizes already computed.  ``stats()`` reports the candidate
+pairs the gate filtered out of estimator scoring, alongside the
+shortlist-bucket ladder traffic.
 
 **Fault isolation** (see ``resilience.py``): ``submit_safe`` wraps the
 same pipeline in the resilience layer and returns ``(results,
@@ -85,8 +93,10 @@ from repro.core.discovery.index import SketchIndex, topk_oversample
 from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
     PlanCache,
+    ShortlistOverflow,
     bucket_queries,
     build_shortlists,
+    fused_shortlist_spec,
     plan_signature,
     shortlist_signature,
 )
@@ -115,6 +125,10 @@ class AdmissionStats:
     prefiltered: int = 0     # queries served via two-phase retrieval
     cands_considered: int = 0   # (query, candidate) pairs seen by phase 1
     cands_shortlisted: int = 0  # pairs that reached phase-2 scoring
+    fused_windows: int = 0   # buckets delivered by the fused device path
+    host_syncs: int = 0      # device->host sync points paid by delivered
+    #                          buckets (fused/dense: 1; host-boundary
+    #                          two-phase: 2; fused overflow fallback: 3)
     failed_buckets: int = 0  # buckets whose primary executor pass raised
     retries: int = 0         # same-rung re-attempts across all buckets
     fallbacks: int = 0       # executor-ladder descents across all buckets
@@ -135,6 +149,8 @@ class AdmissionStats:
             "prefiltered": self.prefiltered,
             "cands_considered": self.cands_considered,
             "cands_shortlisted": self.cands_shortlisted,
+            "fused_windows": self.fused_windows,
+            "host_syncs": self.host_syncs,
             # What the joinability gate saved: estimator work the dense
             # path would have paid for candidates min_join discards.
             "cands_filtered_out":
@@ -264,6 +280,7 @@ class DiscoveryService:
         top_k: int = 10,
         min_join: int = 8,
         prefilter: bool | None = None,
+        fused: bool | None = None,
     ) -> list[list]:
         """Answer a mixed, arbitrarily-sized queue of discovery queries.
 
@@ -280,12 +297,14 @@ class DiscoveryService:
         with ``prefilter`` on (the default whenever ``min_join`` > 0)
         each bucket runs two-phase retrieval — a cheap join-size pass
         over every candidate, then estimator scoring of only the
-        shortlist that can pass ``min_join``.  Phase-1 programs for all
-        buckets are dispatched before any phase-1 transfer, and every
-        bucket's phase-2 is dispatched before the first phase-2
-        transfer, so the dispatch-before-transfer discipline holds
-        within each phase.  ``stats()`` reports how many candidate
-        pairs the gate filtered out of estimator scoring.
+        shortlist that can pass ``min_join``.  ``fused`` (default on
+        when the prefilter engages) runs both phases as one device
+        pipeline per bucket: no host sync between them, one collect at
+        the end (``fused=False`` forces the host-boundary reference
+        path, whose phase-1 programs for all buckets are dispatched
+        before any phase-1 transfer, and likewise for phase 2).
+        ``stats()`` reports how many candidate pairs the gate filtered
+        out of estimator scoring, plus ``fused_windows``/``host_syncs``.
 
         This is the legacy all-or-nothing surface: the first bucket
         failure is counted (``failed_buckets``) and re-raised, with the
@@ -295,7 +314,7 @@ class DiscoveryService:
         """
         results, _ = self._submit(
             list(queries), top_k=top_k, min_join=min_join,
-            prefilter=prefilter, isolate=False,
+            prefilter=prefilter, fused=fused, isolate=False,
         )
         return results
 
@@ -306,6 +325,7 @@ class DiscoveryService:
         top_k: int = 10,
         min_join: int = 8,
         prefilter: bool | None = None,
+        fused: bool | None = None,
     ) -> tuple[list, list]:
         """Fault-isolated :meth:`submit`: ``(results, outcomes)``.
 
@@ -324,12 +344,13 @@ class DiscoveryService:
         """
         return self._submit(
             list(queries), top_k=top_k, min_join=min_join,
-            prefilter=prefilter, isolate=True,
+            prefilter=prefilter, fused=fused, isolate=True,
         )
 
     def _submit(
         self, queries: list[Sketch], *, top_k: int, min_join: int,
         prefilter: bool | None, isolate: bool,
+        fused: bool | None = None,
     ) -> tuple[list, list]:
         if not queries:
             return [], []
@@ -360,6 +381,7 @@ class DiscoveryService:
         C = len(self.index)
         version = self.index._version
         use_pref = self.index._use_prefilter(prefilter, min_join)
+        use_fused = use_pref and (True if fused is None else bool(fused))
         n_shards = self.mesh.shape["data"] if self.mesh is not None else 1
         primary_rung = "distributed" if self._dist is not None else "batched"
 
@@ -416,10 +438,18 @@ class DiscoveryService:
                     "batches": 1,
                     "padded_lanes": job.q_bucket - len(job.chunk),
                     "q_buckets": {job.q_bucket},
+                    "host_syncs": 1,
                 }
                 job.sketches = [queries[i] for i in job.chunk]
                 job.trains = _ex.stack_trains_host(job.sketches)
-                if use_pref:
+                if use_fused:
+                    # Fused two-phase: the whole prefilter -> compact ->
+                    # gather -> score pipeline is enqueued here; the
+                    # bucket's only host sync is its collect in step 3.
+                    job.handle = self._fused_dispatch(
+                        job, min_join, top_k, n_shards, C, version
+                    )
+                elif use_pref:
                     ex = self._dist if self._dist is not None \
                         else self._batched
                     job.pend1 = ex.prefilter_dispatch(
@@ -441,11 +471,12 @@ class DiscoveryService:
                     st.failed_buckets += 1
                     raise
 
-        # 2b. two-phase buckets: collect join sizes, build shortlists,
-        # and dispatch phase 2 for every bucket before collecting any
-        # phase-2 result (bucket i+1's prefilter overlaps bucket i's
-        # shortlist build on device).
-        if use_pref:
+        # 2b. host-boundary two-phase buckets only: collect join sizes,
+        # build shortlists, and dispatch phase 2 for every bucket before
+        # collecting any phase-2 result (bucket i+1's prefilter overlaps
+        # bucket i's shortlist build on device).  Fused buckets were
+        # fully enqueued in step 2 and skip this phase entirely.
+        if use_pref and not use_fused:
             for job in jobs:
                 if job.error is not None:
                     continue
@@ -466,7 +497,9 @@ class DiscoveryService:
             if job.error is not None:
                 continue
             try:
-                triples = self._collect_triples(job, C)
+                triples = self._collect_triples(
+                    job, C, min_join, top_k, n_shards, version
+                )
             except Exception as e:  # noqa: BLE001
                 job.error = e
                 if not isolate:
@@ -496,8 +529,16 @@ class DiscoveryService:
         phase 2; returns the pending phase-2 handle."""
         rung = rung or job.rung
         on_mesh = rung == "distributed"
+        pend1 = job.pend1
+        # A fused handle that overflowed its shortlist rungs replays its
+        # phase-1 join sizes here (already computed on device — no extra
+        # scoring pass), so the fallback costs one more sync, not a full
+        # re-dispatch.
+        js = pend1.js_blocks() if hasattr(pend1, "js_blocks") \
+            else pend1.collect()
+        job.staged["host_syncs"] = job.staged.get("host_syncs", 1) + 1
         shortlists = build_shortlists(
-            job.sp.plan, job.pend1.collect(), min_join,
+            job.sp.plan, js, min_join,
             multiple=n_shards if on_mesh else 1,
         )
         s_key = shortlist_signature(shortlists)
@@ -524,14 +565,83 @@ class DiscoveryService:
             job.sp.plan, job.trains, shortlists, q_bucket=job.q_bucket
         )
 
-    def _collect_triples(self, job: _BucketJob, C: int) -> list:
+    def _fused_dispatch(
+        self, job: _BucketJob, min_join: int, top_k: int,
+        n_shards: int, C: int, version: int, rung: str | None = None,
+    ):
+        """Enqueue a bucket's whole fused two-phase pipeline (prefilter,
+        on-device shortlist compaction, shard-local gather, scoring) in
+        one dispatch; returns the pending fused handle.  The shortlist
+        widths come from the adaptive hint ladder, so the plan-cache key
+        — and the compiled-program population — stays bounded exactly
+        as on the host-boundary path."""
+        rung = rung or job.rung
+        on_mesh = rung == "distributed"
+        spec = fused_shortlist_spec(
+            job.sp.plan, self.index.shortlist_hints, min_join,
+            multiple=n_shards if on_mesh else 1, sharded=on_mesh,
+        )
+        self.plan_cache.lookup(
+            version, job.y_disc, job.q_bucket,
+            lambda p=job.sp.plan: p, s_key=spec.signature,
+        )
+        job.staged["prefiltered"] = len(job.chunk)
+        job.staged["cands_considered"] = len(job.chunk) * C
+        job.staged["s_buckets"] = {s for _, _, s in spec.signature}
+        job.staged["fused_windows"] = 1
+        if on_mesh:
+            return self._dist.fused_topk_dispatch(
+                job.sp.plan, job.trains, spec, min_join, top_k,
+                q_bucket=job.q_bucket,
+            )
+        return self._batched.fused_dispatch(
+            job.sp.plan, job.trains, spec, min_join,
+            q_bucket=job.q_bucket,
+        )
+
+    def _collect_triples(
+        self, job: _BucketJob, C: int, min_join: int, top_k: int,
+        n_shards: int, version: int,
+    ) -> list:
         """First host sync of a bucket's handle -> one (values, global
-        indices, join sizes) triple per live query."""
+        indices, join sizes) triple per live query.
+
+        A fused handle checks its overflow fence here: if any query's
+        surviving-candidate count exceeded its shortlist rung, the hints
+        ladder is grown and the bucket falls back to the host-boundary
+        path — reusing the fused pass's device-resident join sizes, so
+        only phase 2 re-executes."""
         handle = job.handle
         if isinstance(handle, _ex._PendingScores):
             mi, js = handle.collect()
-            gi = np.arange(C)
+            gi = np.arange(C, dtype=np.int32)
             return [(mi[q], gi, js[q]) for q in range(len(job.chunk))]
+        if isinstance(handle, (_ex._PendingFused, _ex._PendingFusedTopk)):
+            on_mesh = isinstance(handle, _ex._PendingFusedTopk)
+            hints = self.index.shortlist_hints
+            try:
+                triples = handle.collect()
+            except ShortlistOverflow:
+                for eid, seen in handle.observed.items():
+                    hints.observe(
+                        (job.y_disc, eid, int(min_join), on_mesh),
+                        seen, overflowed=True,
+                    )
+                job.pend1 = handle
+                job.handle = self._shortlist_phase(
+                    job, min_join, top_k, n_shards, C, version
+                )
+                job.staged["host_syncs"] = 3
+                job.staged["fused_windows"] = 0
+                return self._collect_triples(
+                    job, C, min_join, top_k, n_shards, version
+                )
+            for eid, seen in handle.observed.items():
+                hints.observe(
+                    (job.y_disc, eid, int(min_join), on_mesh), seen
+                )
+            job.staged["cands_shortlisted"] = handle.shortlisted
+            return triples
         return handle.collect()
 
     def _finish(
@@ -571,6 +681,8 @@ class DiscoveryService:
         st.cands_shortlisted += staged.get("cands_shortlisted", 0)
         st.q_buckets.update(staged.get("q_buckets", ()))
         st.s_buckets.update(staged.get("s_buckets", ()))
+        st.host_syncs += staged.get("host_syncs", 0)
+        st.fused_windows += staged.get("fused_windows", 0)
 
     # ------------------------------------------------------------------
     # Recovery ladder
@@ -641,6 +753,7 @@ class DiscoveryService:
             "padded_lanes": (job.q_bucket - len(job.chunk)
                              if rung != "reference" else 0),
             "q_buckets": {job.q_bucket} if rung != "reference" else set(),
+            "host_syncs": 1,
         }
         if rung == "reference":
             # Per-query dense scoring through the partitioned local
@@ -672,7 +785,9 @@ class DiscoveryService:
             job.handle = ex.dispatch(
                 job.sp.plan, job.trains, q_bucket=job.q_bucket
             )
-        return self._collect_triples(job, C)
+        return self._collect_triples(
+            job, C, min_join, top_k, n_shards, version
+        )
 
     # ------------------------------------------------------------------
     # Observability

@@ -415,6 +415,53 @@ class TestMultiShardParity:
         assert adm["prefiltered"] > 0 and adm["cands_filtered_out"] >= 0
         print("SHARD-PARITY-OK")
 
+        # Fused shard-local gather (ISSUE 7): the single-dispatch
+        # pipeline — shard-local compaction + gather inside shard_map,
+        # feeding the on-device cross-shard merge — equals the forced
+        # host-boundary path and the dense reference, through real
+        # 4-shard programs; the warm pass runs with zero host syncs
+        # between phases (transfer guard + booby-trapped host builder).
+        for s in sks:
+            fz = index.query(s, top_k=3, min_join=4, mesh=mesh)
+            hb = index.query(s, top_k=3, min_join=4, mesh=mesh,
+                             fused=False)
+            assert flat(fz) == flat(hb)
+        got_f = svc.submit(sks, top_k=3, min_join=4)
+        got_h = svc.submit(sks, top_k=3, min_join=4, fused=False)
+        assert [flat(g) for g in got_f] == [flat(g) for g in got_h]
+        assert svc.stats()["admission"]["fused_windows"] > 0
+
+        from repro.core.discovery import (
+            fused_shortlist_spec, stack_trains, stage_min_join,
+        )
+        from repro.core.discovery import planner as _pl
+        import repro.core.discovery.index as _ixm
+        _real_bs = _pl.build_shortlists
+        def _boom(*a, **k):
+            raise AssertionError("host shortlist build on fused path")
+        _pl.build_shortlists = _boom
+        _ixm.build_shortlists = _boom
+        tr1 = stack_trains([index.train_arrays(sks[0])])
+        # pre-replicate the staged trains onto the mesh: that h2d is
+        # part of dispatch *setup*, not the inter-phase boundary the
+        # guard polices
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(mesh, P())
+        tr1 = {k: jax.device_put(v, rep) if hasattr(v, "shape") else v
+               for k, v in tr1.items()}
+        plan = index.plan(False)
+        spec = fused_shortlist_spec(plan, index.shortlist_hints, 4,
+                                    multiple=4, sharded=True)
+        stage_min_join(4)
+        ex.fused_topk_dispatch(plan, tr1, spec, 4, 3).collect()  # warm
+        with jax.transfer_guard("disallow"):
+            h = ex.fused_topk_dispatch(plan, tr1, spec, 4, 3)
+            triples = h.collect()
+        assert len(triples) == 1 and len(triples[0][0]) > 0
+        _pl.build_shortlists = _real_bs
+        _ixm.build_shortlists = _real_bs
+        print("FUSED-SHARD-OK")
+
         # Fault isolation across the mesh: a persistent fault on the
         # distributed shortlist dispatch forces every bucket down one
         # rung to the single-process batched executor — results stay
@@ -424,8 +471,11 @@ class TestMultiShardParity:
         svc2 = DiscoveryService(index=index, mesh=mesh, max_q_bucket=4,
                                 retry_policy=RetryPolicy(
                                     max_retries=1, sleep=lambda s: None))
+        # fused=False pins the host-boundary path so the armed
+        # shortlist_dispatch site is actually on the primary rung
         with inject_faults({"shortlist_dispatch@distributed": "all"}):
-            res, outs = svc2.submit_safe(sks, top_k=3, min_join=4)
+            res, outs = svc2.submit_safe(sks, top_k=3, min_join=4,
+                                         fused=False)
         want = [index.query(s, top_k=3, min_join=4, prefilter=False)
                 for s in sks]
         for r, w in zip(res, want):
@@ -446,4 +496,5 @@ class TestMultiShardParity:
         )
         assert out.returncode == 0, out.stderr[-2000:]
         assert "SHARD-PARITY-OK" in out.stdout
+        assert "FUSED-SHARD-OK" in out.stdout
         assert "FAULT-FALLBACK-OK" in out.stdout

@@ -1,0 +1,442 @@
+"""Fused two-phase retrieval tests (ISSUE 7 acceptance):
+
+  (a) the fused pipeline (on-device shortlist compaction + gather, no
+      host sync between phases) is bit-identical to the PR 4
+      host-boundary path at equal ``min_join`` — swept over min_join,
+      mixed dtypes, interleaved ingest, and the all-filtered empty
+      window, plus a hypothesis property sweep over random corpora;
+  (b) the (Q-bucket, s-bucket) ladder bounds the fused compiled-program
+      population (via the ``compile_count`` hook);
+  (c) ``jax.transfer_guard("disallow")`` around dispatch -> collect
+      proves zero host transfers between phases on both backends, with
+      the host shortlist builder booby-trapped as a tripwire;
+  (d) shortlist overflow is a protocol, not a failure: the service
+      falls back to the host-boundary path bit-identically, grows the
+      hint ladder, and accounts the extra syncs;
+  (e) gather indices are int32 end-to-end, and ingest refuses to grow
+      past the int32 index space.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+from repro.core import hashing
+from repro.core.discovery import (
+    BatchedExecutor,
+    DiscoveryService,
+    GroupMajorDistributedExecutor,
+    MIN_SHORTLIST,
+    RetryPolicy,
+    ShortlistHints,
+    ShortlistOverflow,
+    SketchIndex,
+    build_shortlists,
+    compile_count,
+    fused_shortlist_spec,
+    inject_faults,
+    stack_trains,
+    stage_min_join,
+)
+from repro.core.discovery import index as index_mod
+from repro.core.discovery import planner as planner_mod
+from repro.core.discovery.index import _MAX_ROWS_I32, _DeviceStore
+from repro.core.sketch import build_sketch
+
+N_ROWS = 1200
+SK_N = 64
+KEY_SPACE = 3000  # small enough that candidates genuinely join
+RNG = np.random.default_rng(7)
+
+
+def _keys(seed=9, lo=0):
+    raw = np.arange(lo, lo + N_ROWS, dtype=np.uint32)
+    return np.asarray(hashing.murmur3_32_np(raw, seed=np.uint32(seed)))
+
+
+def _mixed_index(keys, y, rng, n_joinable=3, n_disjoint=3, n_disc=2):
+    """Corpus spanning all estimator groups with a joinable core and a
+    disjoint tail (the selectivity regime the gate exists for)."""
+    index = SketchIndex(n=SK_N, method="tupsk")
+    for i in range(n_joinable):
+        index.add(f"cont{i}", "k", "v", keys,
+                  (y + (0.2 + i) * rng.normal(size=N_ROWS))
+                  .astype(np.float32), False)
+    for i in range(n_disc):
+        index.add(f"disc{i}", "k", "v", keys,
+                  rng.integers(0, 4 + i, size=N_ROWS), True)
+    for i in range(n_disjoint):
+        other = _keys(seed=9, lo=(i + 1) * N_ROWS)
+        index.add(f"far{i}", "k", "v", other,
+                  rng.normal(size=N_ROWS).astype(np.float32), False)
+    return index
+
+
+def _train(keys, v, disc=False):
+    return build_sketch(keys, v, n=SK_N, method="tupsk", side="train",
+                        value_is_discrete=disc)
+
+
+def _queue(keys, y, rng, q, disc_every=3):
+    out = []
+    for i in range(q):
+        noisy = y + (0.1 + 0.25 * i) * rng.normal(size=N_ROWS)
+        if i % disc_every == disc_every - 1:
+            out.append(_train(keys, (noisy > 0).astype(np.int64), True))
+        else:
+            out.append(_train(keys, noisy.astype(np.float32), False))
+    return out
+
+
+def _flat(res):
+    return [(m.table, mi, js) for m, mi, js in res]
+
+
+def _norm(triple, C):
+    """Drop sentinel lanes and canonicalize order for bitwise compare."""
+    v, gi, js = (np.asarray(a) for a in triple)
+    keep = gi < C
+    v, gi, js = v[keep], gi[keep], js[keep]
+    order = np.argsort(gi, kind="stable")
+    return v[order], gi[order], js[order]
+
+
+class TestFusedParity:
+    """Fused == host-boundary, bitwise, at every layer."""
+
+    def test_index_query_min_join_sweep(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(0))
+        for disc in (False, True):
+            sk = _train(keys, (y > 0).astype(np.int64) if disc
+                        else y, disc)
+            for mj in (1, 4, 16, 200):
+                fused = index.query(sk, top_k=6, min_join=mj)
+                host = index.query(sk, top_k=6, min_join=mj, fused=False)
+                assert _flat(fused) == _flat(host), (disc, mj)
+
+    def test_query_many_interleaved_ingest(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(1)
+        index = _mixed_index(keys, y, rng)
+        sks = _queue(keys, y, rng, 5, disc_every=99)  # one dtype per batch
+        for step in range(3):
+            got = index.query_many(sks, top_k=5, min_join=4)
+            want = index.query_many(sks, top_k=5, min_join=4, fused=False)
+            assert [_flat(g) for g in got] == [_flat(w) for w in want]
+            index.add(f"late{step}", "k", "v", keys,
+                      (0.5 * y + rng.normal(size=N_ROWS))
+                      .astype(np.float32), False)
+
+    def test_all_filtered_empty_window(self):
+        """A window where no candidate passes min_join: the fused path
+        must deliver the same empty rankings, not trip its fence."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(2))
+        sk = _train(keys, y)
+        huge = N_ROWS + 1
+        fused = index.query(sk, top_k=5, min_join=huge)
+        host = index.query(sk, top_k=5, min_join=huge, fused=False)
+        assert fused == [] and host == []
+        # hints observed zero survivors without overflowing
+        assert index.shortlist_hints.overflows == 0
+
+    def test_service_submit_parity(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(3)
+        index = _mixed_index(keys, y, rng)
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+        sks = _queue(keys, y, rng, 7)
+        cold = svc.submit(sks, top_k=5, min_join=4)
+        warm = svc.submit(sks, top_k=5, min_join=4)
+        host = svc.submit(sks, top_k=5, min_join=4, fused=False)
+        assert [_flat(r) for r in cold] == [_flat(r) for r in warm] \
+            == [_flat(r) for r in host]
+        assert svc.stats()["admission"]["fused_windows"] > 0
+
+    @given(seed=st.integers(0, 2**16),
+           min_join=st.sampled_from([1, 4, 32]),
+           disc=st.booleans())
+    @settings(max_examples=6, deadline=None)
+    def test_property_random_corpora(self, seed, min_join, disc):
+        rng = np.random.default_rng(seed)
+        keys = _keys(seed=seed % 97)
+        y = rng.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, rng,
+                             n_joinable=2 + seed % 3,
+                             n_disjoint=1 + seed % 2)
+        sk = _train(keys, (y > 0).astype(np.int64) if disc else y, disc)
+        fused = index.query(sk, top_k=5, min_join=min_join)
+        host = index.query(sk, top_k=5, min_join=min_join, fused=False)
+        assert _flat(fused) == _flat(host)
+
+
+class TestExecutorFusedBitwise:
+    """Executor-level: the fused triples equal the two-step
+    prefilter -> host shortlist -> gather-and-score triples bitwise
+    (values, indices, and join sizes), not merely same ranking."""
+
+    def test_batched_fused_vs_host_shortlists(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(4))
+        sk = _train(keys, y)
+        plan = index.plan(False)
+        C = plan.n_candidates
+        bx = BatchedExecutor()
+        trains = stack_trains([index.train_arrays(sk)])
+        hints = ShortlistHints()
+        for mj in (1, 5, 12):
+            # overflow-retry loop: grow hints until the spec fits
+            for _ in range(8):
+                spec = fused_shortlist_spec(plan, hints, mj)
+                handle = bx.fused_dispatch(plan, trains, spec, mj)
+                try:
+                    fused = handle.collect()
+                    break
+                except ShortlistOverflow:
+                    for eid, seen in handle.observed.items():
+                        hints.observe((False, eid, mj, False), seen,
+                                      overflowed=True)
+            else:
+                pytest.fail("hints never converged")
+            js_blocks = bx.prefilter_dispatch(plan, trains).collect()
+            sls = build_shortlists(plan, js_blocks, mj)
+            host = bx.shortlist_dispatch(plan, trains, sls).collect()
+            for f, h in zip(fused, host):
+                fv, fg, fj = _norm(f, C)
+                hv, hg, hj = _norm(h, C)
+                np.testing.assert_array_equal(fg, hg)
+                np.testing.assert_array_equal(fv, hv)
+                np.testing.assert_array_equal(fj, hj)
+                assert fg.dtype == np.int32 == hg.dtype
+
+    def test_fused_js_bitwise_vs_prefilter(self):
+        """The fused handle's replayable join sizes (the overflow
+        fallback's input) are bitwise the standalone prefilter's."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(5))
+        sk = _train(keys, y)
+        plan = index.plan(False)
+        bx = BatchedExecutor()
+        trains = stack_trains([index.train_arrays(sk)])
+        spec = fused_shortlist_spec(plan, ShortlistHints(), 4)
+        handle = bx.fused_dispatch(plan, trains, spec, 4)
+        want = bx.prefilter_dispatch(plan, trains).collect()
+        got = handle.js_blocks()
+        assert len(got) == len(want)
+        for (gp_g, js_g), (gp_w, js_w) in zip(got, want):
+            assert gp_g is gp_w
+            np.testing.assert_array_equal(np.asarray(js_g),
+                                          np.asarray(js_w))
+
+
+class TestCompileBound:
+    def test_fused_program_population_bounded(self):
+        """Same shapes + same ladder rungs => zero new compiles on a
+        second sweep with different data."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(6)
+        index = _mixed_index(keys, y, rng)
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+
+        def sweep(r):
+            for q in (1, 3, 5):
+                for mj in (1, 4):
+                    svc.submit(_queue(keys, y, r, q), top_k=5, min_join=mj)
+
+        sweep(np.random.default_rng(100))
+        warm = compile_count()
+        sweep(np.random.default_rng(200))
+        assert compile_count() == warm
+
+
+class TestOverflowProtocol:
+    def _overflow_corpus(self):
+        """> MIN_SHORTLIST joinable candidates in one estimator group,
+        so cold hints (rung = MIN_SHORTLIST) must overflow."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(8)
+        index = SketchIndex(n=SK_N, method="tupsk")
+        for i in range(MIN_SHORTLIST + 4):
+            index.add(f"cont{i}", "k", "v", keys,
+                      (y + (0.2 + i) * rng.normal(size=N_ROWS))
+                      .astype(np.float32), False)
+        return index, keys, y
+
+    def test_executor_raises_and_reports(self):
+        index, keys, y = self._overflow_corpus()
+        sk = _train(keys, y)
+        plan = index.plan(False)
+        bx = BatchedExecutor()
+        trains = stack_trains([index.train_arrays(sk)])
+        spec = fused_shortlist_spec(plan, ShortlistHints(), 1)
+        handle = bx.fused_dispatch(plan, trains, spec, 1)
+        with pytest.raises(ShortlistOverflow):
+            handle.collect()
+        assert max(handle.observed.values()) > MIN_SHORTLIST
+
+    def test_service_falls_back_bit_identically_and_adapts(self):
+        index, keys, y = self._overflow_corpus()
+        svc = DiscoveryService(index=index, max_q_bucket=4)
+        sk = _train(keys, y)
+        base = svc.stats()["admission"]
+        cold = svc.submit([sk], top_k=5, min_join=1)
+        st1 = svc.stats()["admission"]
+        # overflow fallback: 3 syncs (fence, join-size replay, final
+        # collect), and the window does not count as fused
+        assert st1["host_syncs"] - base["host_syncs"] == 3
+        assert st1["fused_windows"] == base["fused_windows"]
+        assert index.shortlist_hints.overflows > 0
+        warm = svc.submit([sk], top_k=5, min_join=1)
+        st2 = svc.stats()["admission"]
+        assert st2["host_syncs"] - st1["host_syncs"] == 1
+        assert st2["fused_windows"] - st1["fused_windows"] == 1
+        host = svc.submit([sk], top_k=5, min_join=1, fused=False)
+        st3 = svc.stats()["admission"]
+        assert st3["host_syncs"] - st2["host_syncs"] == 2
+        assert _flat(cold[0]) == _flat(warm[0]) == _flat(host[0])
+
+    def test_fused_dispatch_fault_recovers_on_pr4_path(self):
+        """The fused_dispatch fault site degrades to the host-boundary
+        ladder (recovery rungs never re-enter the fused path) and stays
+        bit-identical."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        rng = np.random.default_rng(9)
+        index = _mixed_index(keys, y, rng)
+        svc = DiscoveryService(index=index, max_q_bucket=4,
+                               retry_policy=RetryPolicy(
+                                   max_retries=1, sleep=lambda s: None))
+        sks = _queue(keys, y, rng, 4)
+        with inject_faults({"fused_dispatch": 1}):
+            res, outs = svc.submit_safe(sks, top_k=5, min_join=4)
+        assert all(o.ok for o in outs)
+        assert any(o.retries > 0 or o.fallbacks > 0 for o in outs)
+        want = svc.submit(sks, top_k=5, min_join=4, fused=False)
+        assert [_flat(r) for r in res] == [_flat(w) for w in want]
+
+
+@pytest.mark.transfer_guard
+class TestTransferGuard:
+    """The proof of the tentpole: dispatch -> collect completes under
+    ``jax.transfer_guard("disallow")`` — no host round-trip between the
+    phases — with ``build_shortlists`` booby-trapped so any silent
+    fallback to the host path fails loudly."""
+
+    def _setup(self, mesh=None):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(10))
+        sk = _train(keys, y)
+        # warm everything host-side: hints, compiled programs, the
+        # staged min_join scalar, and the device-resident plan arrays
+        index.query(sk, top_k=5, min_join=4, mesh=mesh)
+        plan = index.plan(False)
+        trains = stack_trains([index.train_arrays(sk)])
+        stage_min_join(4)
+        return index, plan, trains
+
+    def test_batched_no_transfers_between_phases(self, monkeypatch):
+        index, plan, trains = self._setup()
+
+        def boom(*a, **k):  # tripwire
+            raise AssertionError("host shortlist build on fused path")
+
+        monkeypatch.setattr(planner_mod, "build_shortlists", boom)
+        monkeypatch.setattr(index_mod, "build_shortlists", boom)
+        bx = BatchedExecutor()
+        spec = fused_shortlist_spec(plan, index.shortlist_hints, 4)
+        bx.fused_dispatch(plan, trains, spec, 4).collect()  # warm compile
+        with jax.transfer_guard("disallow"):
+            handle = bx.fused_dispatch(plan, trains, spec, 4)
+            triples = handle.collect()
+        assert len(triples) == 1 and len(triples[0][0]) > 0
+
+    def test_distributed_no_transfers_between_phases(self, monkeypatch):
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        index, plan, trains = self._setup(mesh=mesh)
+
+        def boom(*a, **k):
+            raise AssertionError("host shortlist build on fused path")
+
+        monkeypatch.setattr(planner_mod, "build_shortlists", boom)
+        monkeypatch.setattr(index_mod, "build_shortlists", boom)
+        dist = GroupMajorDistributedExecutor(mesh)
+        sharded = mesh.shape["data"] > 1
+        spec = fused_shortlist_spec(
+            plan, index.shortlist_hints, 4,
+            multiple=mesh.shape["data"] if sharded else 1,
+            sharded=sharded,
+        )
+        dist.fused_topk_dispatch(plan, trains, spec, 4, 5).collect()
+        with jax.transfer_guard("disallow"):
+            handle = dist.fused_topk_dispatch(plan, trains, spec, 4, 5)
+            triples = handle.collect()
+        assert len(triples) == 1 and len(triples[0][0]) > 0
+
+    def test_fused_query_never_builds_host_shortlists(self, monkeypatch):
+        """Index-level: the default (fused) query path must not touch
+        the host shortlist builder at all; the forced host path must."""
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(11))
+        sk = _train(keys, y)
+        index.query(sk, top_k=5, min_join=4)  # warm hints (no overflow)
+        calls = []
+        real = index_mod.build_shortlists
+        monkeypatch.setattr(
+            index_mod, "build_shortlists",
+            lambda *a, **k: calls.append(1) or real(*a, **k),
+        )
+        index.query(sk, top_k=5, min_join=4)
+        assert calls == []
+        index.query(sk, top_k=5, min_join=4, fused=False)
+        assert calls == [1]
+
+
+class TestInt32EndToEnd:
+    def test_triples_are_int32(self):
+        keys = _keys()
+        y = RNG.normal(size=N_ROWS).astype(np.float32)
+        index = _mixed_index(keys, y, np.random.default_rng(12))
+        sk = _train(keys, y)
+        plan = index.plan(False)
+        assert all(gp.index.dtype == np.int32 for gp in plan.groups)
+        bx = BatchedExecutor()
+        trains = stack_trains([index.train_arrays(sk)])
+        spec = fused_shortlist_spec(plan, index.shortlist_hints, 1000)
+        for v, gi, js in bx.fused_dispatch(
+                plan, trains, spec, 1000).collect():
+            assert np.asarray(gi).dtype == np.int32
+        js_blocks = bx.prefilter_dispatch(plan, trains).collect()
+        sls = build_shortlists(plan, js_blocks, 4)
+        assert all(sl.gidx.dtype == np.int32 for sl in sls
+                   if sl is not None)
+
+    def test_device_store_refuses_int32_overflow(self):
+        store = _DeviceStore(cap_cols=SK_N)
+        with pytest.raises(OverflowError):
+            store.ensure_rows(_MAX_ROWS_I32 + 1)
+
+    def test_index_commit_refuses_int32_overflow(self):
+        keys = _keys()
+        index = SketchIndex(n=SK_N, method="tupsk")
+
+        class _Huge(list):
+            def __len__(self):
+                return _MAX_ROWS_I32
+
+        index.meta = _Huge()
+        with pytest.raises(OverflowError):
+            index.add("t", "k", "v", keys,
+                      RNG.normal(size=N_ROWS).astype(np.float32), False)

@@ -366,7 +366,14 @@ class TestShortlistCompileBound:
         misses = svc.plan_cache.stats["misses"]
         svc.submit([sk], min_join=4)  # same selectivity: all hits
         assert svc.plan_cache.stats["misses"] == misses
-        svc.submit([sk], min_join=2000)  # empty shortlist: new s_key
+        # the fused spec keys by shortlist *rungs* (the compiled
+        # shapes), not by per-min_join selectivity: equal rungs hit
+        # even across a selectivity change
+        svc.submit([sk], min_join=2000)
+        assert svc.plan_cache.stats["misses"] == misses
+        # the host-boundary path keys by the observed shortlist
+        # signature: the empty window is a distinct s_key
+        svc.submit([sk], min_join=2000, fused=False)
         assert svc.plan_cache.stats["misses"] > misses
 
 

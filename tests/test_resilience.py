@@ -255,8 +255,12 @@ class TestRecovery:
         svc = _service(index)
         # One-shot fault: the first phase-2 dispatch dies, the first
         # retry of that same bucket succeeds — no ladder descent.
+        # fused=False pins the host-boundary path these sites live on
+        # (the fused pipeline's sites are covered in
+        # test_fused_two_phase.py)
         with inject_faults({"shortlist_dispatch": [0]}) as plan:
-            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        fused=False)
         assert plan.fired == {"shortlist_dispatch": 1}
         self._assert_clean_parity(svc, queue, base, outs, res)
         st = svc.admission
@@ -270,7 +274,8 @@ class TestRecovery:
         queue, base = baseline
         svc = _service(index)
         with inject_faults({"shortlist_dispatch": "all"}):
-            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        fused=False)
         self._assert_clean_parity(svc, queue, base, outs, res,
                                   rung="reference")
         st = svc.admission
@@ -285,7 +290,8 @@ class TestRecovery:
         queue, base = baseline
         svc = _service(index)
         with inject_faults({site: [0]}):
-            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        fused=False)
         self._assert_clean_parity(svc, queue, base, outs, res)
         assert svc.admission.retries >= 1
 
@@ -295,7 +301,8 @@ class TestRecovery:
         # collect invocations: phase-1 of bucket A = 0, phase-1 of
         # bucket B = 1, phase-2 of A = 2 ... fault A's phase-2 sync.
         with inject_faults({"collect": [2]}):
-            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        fused=False)
         self._assert_clean_parity(svc, queue, base, outs, res)
         assert svc.admission.retries >= 1
 
@@ -501,7 +508,7 @@ class TestStatsConsistency:
                         .astype(np.float32), False) for _ in range(3)]
         with inject_faults({"shortlist_dispatch": "all"}):
             with pytest.raises(InjectedFault):
-                svc.submit(queue, top_k=5, min_join=4)
+                svc.submit(queue, top_k=5, min_join=4, fused=False)
         st = svc.admission
         # Arrival counters committed, delivery counters untouched —
         # the failed submit delivered nothing and claims nothing.
@@ -562,7 +569,8 @@ class TestEndToEndIsolation:
         # discrete bucket never faults.
         with inject_faults({"shortlist_dispatch": [0, 2, 3]},
                            seed=SEED) as plan:
-            res, outs = svc.submit_safe(queue, top_k=5, min_join=4)
+            res, outs = svc.submit_safe(queue, top_k=5, min_join=4,
+                                        fused=False)
         assert plan.fired == {"shortlist_dispatch": 3}
 
         # (1) the poisoned query: structured outcome, no result.
