@@ -27,6 +27,7 @@ BENCHES = [
     ("discovery", discovery_scale.bench_discovery_throughput),
     ("discovery_prefilter", discovery_scale.bench_prefilter_large_corpus),
     ("discovery_fused", discovery_scale.bench_fused_two_phase),
+    ("discovery_tiered", discovery_scale.bench_tiered_containment_gate),
     ("kernels", discovery_scale.bench_kernel_hot_spots),
 ]
 

@@ -48,6 +48,20 @@ grows the rung for next time.  Either way results are bit-identical to
 dense scoring + post-hoc filtering, at a cost that scales with the
 joinable fraction of the corpus instead of the corpus.
 
+For 10^5+-candidate corpora a **phase-0 containment tier** can sit in
+front of the whole pipeline (``min_containment`` > 0): the index keeps
+a compact bottom-``sig_width`` key signature per candidate resident
+for the *entire* corpus, one vectorized signature-intersection program
+estimates each candidate's containment of the query keys, and only
+candidates at or above the threshold enter the exact phases — which
+then run at survivor width, not corpus width.  Survivor buffers ride
+their own pow-two ladder (:class:`TierSpec`); an overflow re-runs the
+window ungated (same fence-and-fallback shape as the shortlist rung).
+The gate is an estimate — a high-recall subset of the ungated ranking,
+exact for candidates holding <= ``sig_width`` keys; at the default
+``min_containment=0`` the path is bit-identical to the ungated fused
+pipeline.
+
 On top of the three layers sits the serving front-end,
 :mod:`~repro.core.discovery.service`: :class:`DiscoveryService` runs
 admission control over arbitrary mixed/bursty query queues — per-
@@ -101,6 +115,7 @@ from repro.core.discovery.index import CandidateMeta, SketchIndex
 from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
     MIN_SHORTLIST,
+    MIN_SURVIVORS,
     FusedSpec,
     GroupPlan,
     PlanCache,
@@ -110,9 +125,12 @@ from repro.core.discovery.planner import (
     Shortlist,
     ShortlistHints,
     ShortlistOverflow,
+    SurvivorOverflow,
+    TierSpec,
     bucket_queries,
     bucket_rows,
     bucket_shortlist,
+    bucket_survivors,
     build_shortlists,
     estimator_id,
     fused_shortlist_spec,
@@ -121,7 +139,9 @@ from repro.core.discovery.planner import (
     partition_by_estimator,
     plan_signature,
     shortlist_signature,
+    stage_min_containment,
     stage_min_join,
+    tier_spec,
 )
 from repro.core.discovery.resilience import (
     FAULT_SITES,
@@ -150,11 +170,15 @@ __all__ = [
     "Shortlist",
     "ShortlistHints",
     "ShortlistOverflow",
+    "SurvivorOverflow",
     "FusedSpec",
+    "TierSpec",
     "build_shortlists",
     "fused_shortlist_spec",
+    "tier_spec",
     "shortlist_signature",
     "stage_min_join",
+    "stage_min_containment",
     "make_plan",
     "pack_group",
     "partition_by_estimator",
@@ -163,8 +187,10 @@ __all__ = [
     "bucket_rows",
     "bucket_queries",
     "bucket_shortlist",
+    "bucket_survivors",
     "MAX_Q_BUCKET",
     "MIN_SHORTLIST",
+    "MIN_SURVIVORS",
     "Executor",
     "PartitionedLocalExecutor",
     "BatchedExecutor",

@@ -93,6 +93,7 @@ from repro.core import estimators
 from repro.core.join import (
     effective_keys,
     presorted_join_size,
+    signature_join_size,
     sketch_join_jax,
     sketch_join_presorted,
 )
@@ -104,10 +105,12 @@ from repro.core.discovery.planner import (
     GroupPlan,
     QueryPlan,
     ShortlistOverflow,
+    SurvivorOverflow,
     _next_pow2,
     make_plan,
     pack_group,
     partition_by_estimator,
+    stage_min_containment,
     stage_min_join,
 )
 from repro.core.discovery.resilience import maybe_fault
@@ -388,6 +391,128 @@ def _fused_score_group(
     return mi, gidx, jsz, js, counts
 
 
+# ---------------------------------------------------------------------------
+# Tiered (phase-0 containment-gated) retrieval programs.
+# ---------------------------------------------------------------------------
+
+
+def _containment_gate_impl(
+    train_keys, train_mask, sig, live, min_cont, *, s_surv: int,
+):
+    """Phase-0 containment gate for one group.
+
+    One vectorized signature-intersection pass over every candidate row:
+    ``sig`` is the group's corpus-resident (rows, width + 1) int32
+    signature tier, and each (query, candidate) pair costs one
+    ``width``-wide searchsorted probe instead of a capacity-wide one —
+    the tier touches ~width ints per candidate where the full prefilter
+    reads the whole key row.  Estimated containment is
+    ``est_join_size / train_size`` (:func:`signature_join_size`);
+    rows at or above the (traced, device-staged) ``min_cont`` threshold
+    are compacted into an ``s_surv``-lane survivor buffer with the same
+    prefix-sum + batched-searchsorted discipline as
+    :func:`_compact_shortlist` — ascending row order, so everything
+    downstream keeps the dense path's stable ranking ties.  ``counts``
+    is returned unclamped: ``counts > s_surv`` is the survivor-buffer
+    overflow fence (the caller falls back to the ungated fused path).
+    Returns (rows (Q, s_surv), lane_live (Q, s_surv), counts (Q,)).
+    """
+    tsize = jnp.maximum(
+        jnp.sum(train_mask, axis=1), 1
+    ).astype(jnp.float32)
+    est = jax.vmap(
+        lambda tk, tm: jax.vmap(
+            lambda s: signature_join_size(tk, tm, s)
+        )(sig)
+    )(train_keys, train_mask)
+    cont = est / tsize[:, None]
+    passing = (cont >= min_cont) & live[None, :]
+    cum = jnp.cumsum(passing, axis=1, dtype=jnp.int32)
+    counts = cum[:, -1]
+    lanes = jnp.arange(1, s_surv + 1, dtype=jnp.int32)
+    rows_raw = jax.vmap(
+        lambda cs: jnp.searchsorted(cs, lanes, side="left")
+    )(cum)
+    lane_live = (
+        jnp.arange(s_surv, dtype=jnp.int32)[None, :] < counts[:, None]
+    )
+    rows = jnp.where(lane_live, rows_raw.astype(jnp.int32), 0)
+    return rows, lane_live, counts
+
+
+# Standalone phase-0 program (tests and ad-hoc callers); the tiered
+# pipeline below inlines the same body so gate + pipeline fuse into one
+# dispatch per group.
+_containment_gate = jax.jit(
+    _containment_gate_impl, static_argnames=("s_surv",)
+)
+
+
+def _tiered_pipeline_impl(
+    train_keys, train_vals_f, train_vals_u, train_mask,
+    cand_keys, cand_vals_f, cand_vals_u, cand_mask,
+    sig, index, live, min_join, min_cont, sentinel,
+    *, est_id: int, k: int, s_surv: int, s_bucket: int,
+):
+    """Gate -> prefilter -> compact -> gather -> score for one group.
+
+    The phase-0 gate compacts the corpus down to ``s_surv`` survivor
+    lanes; every *exact* phase that follows — the join-size prefilter,
+    the shortlist compaction, the gather, the homogeneous scorer — runs
+    at survivor width instead of corpus width.  That is the tier's
+    entire speedup: the only O(corpus) work left per window is the
+    ``width``-int signature sweep.  Survivor rows are ascending, the
+    within-survivor compaction preserves ascending row order, and the
+    scorer body is the dense path's own — so the results for every
+    candidate that clears the gate are bit-identical to the ungated
+    fused path's entries for those candidates.  Both ``counts`` come
+    back unclamped: phase-0 counts fence the survivor buffer, phase-1
+    counts fence the shortlist, and either tripping means the caller
+    re-runs the window ungated (the PR 6 fence-and-fallback shape).
+    Returns (mi (Q, s_bucket), gidx, jsz, counts0 (Q,), counts1 (Q,)).
+    """
+    rows0, live0, counts0 = _containment_gate_impl(
+        train_keys, train_mask, sig, live, min_cont, s_surv=s_surv
+    )
+    ckr = cand_keys[rows0]
+    cmr = cand_mask[rows0]
+    js = jax.vmap(
+        lambda tk, tm, ckq, cmq: jax.vmap(
+            lambda c, m: presorted_join_size(tk, tm, c, m)
+        )(ckq, cmq)
+    )(train_keys, train_mask, ckr, cmr)
+    passing = (js >= min_join) & live0
+    cum = jnp.cumsum(passing, axis=1, dtype=jnp.int32)
+    counts1 = cum[:, -1]
+    lanes = jnp.arange(1, s_bucket + 1, dtype=jnp.int32)
+    pos_raw = jax.vmap(
+        lambda cs: jnp.searchsorted(cs, lanes, side="left")
+    )(cum)
+    lane_live = (
+        jnp.arange(s_bucket, dtype=jnp.int32)[None, :] < counts1[:, None]
+    )
+    pos = jnp.where(lane_live, pos_raw.astype(jnp.int32), 0)
+    rows = jnp.take_along_axis(rows0, pos, axis=1)
+    gidx = jnp.where(lane_live, index[rows], sentinel)
+    jsz = jnp.where(
+        lane_live, jnp.take_along_axis(js, pos, axis=1), 0
+    )
+    mi, _ = jax.vmap(
+        lambda a, b, c, d, r: _score_group_impl(
+            a, b, c, d,
+            cand_keys[r], cand_vals_f[r], cand_vals_u[r], cand_mask[r],
+            est_id=est_id, k=k,
+        )
+    )(train_keys, train_vals_f, train_vals_u, train_mask, rows)
+    return mi, gidx, jsz, counts0, counts1
+
+
+_tiered_score_group = jax.jit(
+    _tiered_pipeline_impl,
+    static_argnames=("est_id", "k", "s_surv", "s_bucket"),
+)
+
+
 def _pad_rows_q(a: np.ndarray, q_bucket: int) -> np.ndarray:
     """Pad a host (Q, ...) shortlist operand to ``q_bucket`` query lanes
     by repeating lane 0 (the same discipline as :func:`pad_trains_q`)."""
@@ -514,6 +639,83 @@ class _PendingFused:
              for _gp, _s, mi, gidx, jsz, _js, _c in self._blocks],
         ))
         self._fence_host(cs)
+        maybe_fault("collect")
+        out = []
+        for qi in range(q):
+            if not host:
+                out.append((np.zeros(0, np.float32),
+                            np.zeros(0, np.int32),
+                            np.zeros(0, np.int32)))
+                continue
+            out.append((
+                np.concatenate([mi[qi] for mi, _, _ in host]),
+                np.concatenate([gi[qi] for _, gi, _ in host]),
+                np.concatenate([jz[qi] for _, _, jz in host]),
+            ))
+        return out
+
+
+class _PendingTiered:
+    """Dispatched tiered (phase-0-gated) batch (batched backend):
+    per-group (Q, s_bucket) score/index/join-size blocks pending
+    transfer, plus both compaction fences.
+
+    ``collect`` transfers the survivor counts, shortlist counts, and
+    score blocks in one batched device sync, then checks both fences:
+    a group whose phase-0 survivor count exceeds its ``s_surv`` lanes
+    *or* whose within-survivor shortlist count exceeds its ``s_bucket``
+    lanes raises
+    :class:`~repro.core.discovery.planner.SurvivorOverflow` before the
+    resilience layer's collect fault site fires — the caller re-runs
+    the window through the ungated fused path (whose own overflow
+    protocol then applies).  ``observed_t0`` / ``observed`` (per-est_id
+    max counts) feed the survivor and shortlist hint rungs;
+    ``survivors`` / ``shortlisted`` feed admission stats.
+    """
+
+    def __init__(self, blocks: list, q_live: int):
+        # blocks: [(group, s_surv, s_bucket, mi, gidx, jsz, c0, c1)]
+        self._blocks = blocks
+        self._q_live = q_live
+        self.observed: dict[int, int] = {}
+        self.observed_t0: dict[int, int] = {}
+        self.shortlisted = 0
+        self.survivors = 0
+
+    def _fence_host(self, c0s, c1s):
+        overflow = False
+        survivors = shortlisted = 0
+        for (gp, s_surv, s_bucket, *_rest), c0, c1 in zip(
+            self._blocks, c0s, c1s
+        ):
+            m0 = int(c0.max(initial=0))
+            m1 = int(c1.max(initial=0))
+            self.observed_t0[gp.est_id] = max(
+                self.observed_t0.get(gp.est_id, 0), m0
+            )
+            self.observed[gp.est_id] = max(
+                self.observed.get(gp.est_id, 0), m1
+            )
+            survivors += int(c0.sum())
+            shortlisted += int(c1.sum())
+            if m0 > s_surv or m1 > s_bucket:
+                overflow = True
+        self.survivors = survivors
+        self.shortlisted = shortlisted
+        if overflow:
+            raise SurvivorOverflow(
+                "phase-0 containment gate overflowed its staged buffers"
+            )
+
+    def collect(self):
+        q = self._q_live
+        c0s, c1s, host = jax.device_get((
+            [_cut_q(c0, q) for *_h, c0, _c1 in self._blocks],
+            [_cut_q(c1, q) for *_h, c1 in self._blocks],
+            [(_cut_q(mi, q), _cut_q(gidx, q), _cut_q(jsz, q))
+             for _gp, _s0, _s1, mi, gidx, jsz, _c0, _c1 in self._blocks],
+        ))
+        self._fence_host(c0s, c1s)
         maybe_fault("collect")
         out = []
         for qi in range(q):
@@ -740,6 +942,74 @@ class _PendingFusedTopk(_PendingTopk):
         return [(v[i], gi[i], js[i]) for i in range(q)]
 
 
+class _PendingTieredTopk(_PendingTopk):
+    """Dispatched tiered top-k (distributed backend): the device-merged
+    (Q, k_merge) triples of ``_PendingTopk`` plus both shard-local
+    fences — phase-0 survivor counts and within-survivor shortlist
+    counts per (group, shard).  A shard exceeding either staged width
+    raises :class:`~repro.core.discovery.planner.SurvivorOverflow`; the
+    caller re-runs the window through the ungated fused mesh path.
+    Only on a clean fence does the collect fault site fire."""
+
+    def __init__(self, vals, gidx, jsz, q_live: int, k_live: int,
+                 fence: list):
+        super().__init__(vals, gidx, jsz, q_live, k_live=k_live)
+        # fence: [(group, s_surv_shard, s_shard,
+        #          counts0 (Qb, shards), counts1 (Qb, shards))]
+        self._fence = fence
+        self.observed: dict[int, int] = {}
+        self.observed_t0: dict[int, int] = {}
+        self.shortlisted = 0
+        self.survivors = 0
+
+    def _fence_host(self, c0s, c1s):
+        overflow = False
+        survivors = shortlisted = 0
+        for (gp, s_surv, s_shard, _c0, _c1), c0, c1 in zip(
+            self._fence, c0s, c1s
+        ):
+            m0 = int(c0.max(initial=0))
+            m1 = int(c1.max(initial=0))
+            self.observed_t0[gp.est_id] = max(
+                self.observed_t0.get(gp.est_id, 0), m0
+            )
+            self.observed[gp.est_id] = max(
+                self.observed.get(gp.est_id, 0), m1
+            )
+            survivors += int(c0.sum())
+            shortlisted += int(c1.sum())
+            if m0 > s_surv or m1 > s_shard:
+                overflow = True
+        self.survivors = survivors
+        self.shortlisted = shortlisted
+        if overflow:
+            raise SurvivorOverflow(
+                "shard-local containment gate overflowed its staged "
+                "buffers"
+            )
+
+    def collect(self):
+        q = self._q_live
+        if self._vals is None:
+            self._fence_host(*jax.device_get((
+                [_cut_q(c0, q) for _g, _s0, _s1, c0, _c1 in self._fence],
+                [_cut_q(c1, q) for _g, _s0, _s1, _c0, c1 in self._fence],
+            )))
+            return super().collect()
+        c0s, c1s, v, gi, js = jax.device_get((
+            [_cut_q(c0, q) for _g, _s0, _s1, c0, _c1 in self._fence],
+            [_cut_q(c1, q) for _g, _s0, _s1, _c0, c1 in self._fence],
+            _cut_q(self._vals, q), _cut_q(self._gidx, q),
+            _cut_q(self._jsz, q),
+        ))
+        self._fence_host(c0s, c1s)
+        maybe_fault("collect")
+        kl = self._k_live
+        if kl is not None and kl < v.shape[1]:
+            v, gi, js = v[:, :kl], gi[:, :kl], js[:, :kl]
+        return [(v[i], gi[i], js[i]) for i in range(q)]
+
+
 def _as_stacked_trains(trains: dict | list[dict]) -> dict:
     if isinstance(trains, dict):
         if trains["keys"].ndim == 1:  # single query -> Q == 1
@@ -953,6 +1223,56 @@ class BatchedExecutor(Executor):
             blocks.append((gp, int(s_bucket), mi, gidx, jsz, js, counts))
         return _PendingFused(blocks, Q)
 
+    def tiered_dispatch(
+        self, plan, trains, tspec, spec, min_join, min_containment,
+        *, q_bucket: int | None = None,
+    ):
+        """Tiered retrieval: the phase-0 containment gate plus the
+        fused pipeline, one dispatch per group, nothing across the bus
+        until the handle's ``collect``.  ``tspec`` is a
+        :class:`~repro.core.discovery.planner.TierSpec` carrying the
+        survivor-buffer widths, ``spec`` the usual
+        :class:`~repro.core.discovery.planner.FusedSpec` (each group's
+        shortlist width is clamped to its survivor width — phase 1
+        cannot pass more rows than phase 0 kept).  ``min_containment``
+        may be a float (staged through the memo cache) or an
+        already-staged device scalar.  The handle raises
+        ``SurvivorOverflow`` at collect when either staged width was
+        too small — re-run the window through ``fused_dispatch``."""
+        maybe_fault("tiered_dispatch", "batched")
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        mj = (min_join if isinstance(min_join, jax.Array)
+              else stage_min_join(min_join))
+        mc = (min_containment if isinstance(min_containment, jax.Array)
+              else stage_min_containment(min_containment))
+        sentinel = plan.sentinel_dev
+        if sentinel is None:
+            sentinel = jnp.asarray(np.int32(plan.n_candidates))
+        blocks = []
+        for gp, s_surv, s_bucket in zip(
+            plan.groups, tspec.s_survivors, spec.s_buckets
+        ):
+            if gp.sig is None:
+                raise ValueError(
+                    "tiered dispatch on a plan without a signature tier"
+                )
+            sb = min(int(s_bucket), int(s_surv))
+            index_dev = gp.index_dev
+            if index_dev is None:
+                index_dev = jnp.asarray(gp.index.astype(np.int32))
+            mi, gidx, jsz, c0, c1 = _tiered_score_group(
+                *t_args, *_cand_args(gp), gp.sig, index_dev, gp.live,
+                mj, mc, sentinel, est_id=gp.est_id, k=self.k,
+                s_surv=int(s_surv), s_bucket=sb,
+            )
+            blocks.append((gp, int(s_surv), sb, mi, gidx, jsz, c0, c1))
+        return _PendingTiered(blocks, Q)
+
 
 def _shard_topk_plan(c_padded: int, n_shards: int, top_k: int) -> tuple[int, int]:
     """Per-shard and global result counts for a distributed top-k.
@@ -1138,6 +1458,55 @@ def _make_fused_shard_scorer(
     return _register_shard_scorer(jax.jit(fn))
 
 
+@functools.lru_cache(maxsize=128)
+def _make_tiered_shard_scorer(
+    mesh: Mesh, est_id: int, s_surv: int, s_bucket: int, k_shard: int,
+    k: int,
+):
+    """Compiled shard_map tiered scorer for one group.
+
+    The corpus is partitioned across shards (signature tier and full
+    store sharded identically over 'data', so the survivor gather stays
+    shard-local); each shard runs the whole gate -> prefilter ->
+    compact -> gather -> score pipeline on its own rows and emits its
+    top ``k_shard`` winners for the usual on-device cross-group merge.
+    Both compaction fences ((Q, 1) per shard -> (Q, shards)) ride along
+    for the collect-side overflow check.  Widths are per shard.
+    """
+    axis = "data"
+    sh = P(None, axis)
+    rep = P()
+
+    def local(tk, tf, tu, tm, ck, cf, cu, cm, sig, gi, live, mj, mc,
+              sentinel):
+        mi, gidx, jsz, c0, c1 = _tiered_pipeline_impl(
+            tk, tf, tu, tm, ck, cf, cu, cm, sig, gi, live, mj, mc,
+            sentinel, est_id=est_id, k=k, s_surv=s_surv,
+            s_bucket=s_bucket,
+        )
+        lane_live = gidx != sentinel
+        fenced = jnp.where(lane_live, mi, -jnp.inf)
+        v, pos = jax.lax.top_k(fenced, k_shard)
+        return (
+            v,
+            jnp.take_along_axis(gidx, pos, axis=1),
+            jnp.take_along_axis(jsz, pos, axis=1),
+            c0[:, None],
+            c1[:, None],
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, rep,
+                  P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), P(axis), rep, rep, rep),
+        out_specs=(sh, sh, sh, sh, sh),
+        check=False,
+    )
+    return _register_shard_scorer(jax.jit(fn))
+
+
 def compile_count() -> int:
     """Total compiled specializations across the discovery scorer
     programs — the admission-control test hook.
@@ -1152,7 +1521,8 @@ def compile_count() -> int:
     fns = [_score_group, _score_group_many, score_batch,
            score_batch_reference, _globalize_rows, _merge_topk_device,
            _join_sizes, _gather_score_group, _gather_shortlist,
-           _fused_score_group, *_SHARD_SCORERS]
+           _fused_score_group, _containment_gate, _tiered_score_group,
+           *_SHARD_SCORERS]
     return sum(
         f._cache_size() for f in fns if hasattr(f, "_cache_size")
     )
@@ -1236,8 +1606,14 @@ def _pad_group_to_shards(
         [gp.index.astype(np.int32), np.full(pad, sentinel, np.int32)]
     )
     live = jnp.pad(gp.live, (0, pad))
+    sig = gp.sig
+    if sig is not None:
+        # Signature pad rows carry the -1 key fence (and a -1 live-key
+        # count, clamped to 0 in the gate); they are dead via ``live``
+        # regardless.
+        sig = jnp.pad(sig, ((0, pad), (0, 0)), constant_values=-1)
     return GroupPlan(gp.est_id, arrays, index, live, gp.size,
-                     jnp.asarray(index))
+                     jnp.asarray(index), sig)
 
 
 class GroupMajorDistributedExecutor(Executor):
@@ -1301,6 +1677,12 @@ class GroupMajorDistributedExecutor(Executor):
                     gp.index_dev if gp.index_dev is not None
                     else jnp.asarray(gp.index.astype(np.int32)),
                     row_sh,
+                ),
+                # Signature tier rows partition across shards exactly
+                # like the full store, so the tiered pipeline's
+                # survivor gather never leaves the shard.
+                None if gp.sig is None else jax.device_put(
+                    gp.sig, jax.NamedSharding(self.mesh, P("data", None))
                 ),
             )
             for gp in groups
@@ -1501,6 +1883,82 @@ class GroupMajorDistributedExecutor(Executor):
             flat_v, flat_gi, flat_js, k_final=k_merge
         )
         return _PendingFusedTopk(
+            vals, gidx, jsz, Q, min(top_k, width), fence
+        )
+
+    def tiered_topk_dispatch(
+        self, plan, trains, tspec, spec, min_join, min_containment,
+        top_k: int, *, q_bucket: int | None = None,
+    ):
+        """Tiered retrieval on the mesh: the phase-0 containment gate
+        and the whole fused pipeline run shard-locally inside one
+        collective per group (corpus partitioned across shards, the
+        signature tier sharded identically to the full store), followed
+        by the usual on-device winner merge.  Build ``tspec`` and
+        ``spec`` with ``multiple=n_shards`` so the staged widths divide
+        the shard count; both fences are per (group, shard).  Overflow
+        at collect re-runs the window through
+        :meth:`fused_topk_dispatch` (ungated)."""
+        maybe_fault("tiered_dispatch", "distributed")
+        trains = _as_stacked_trains(trains)
+        Q = int(trains["keys"].shape[0])
+        if q_bucket is not None:
+            trains = pad_trains_q(trains, q_bucket)
+        t_args = (trains["keys"], trains["vals_f"],
+                  trains["vals_u"], trains["mask"])
+        n_shards, groups, _ = self._groups(plan)
+        mj = _stage_replicated(
+            self.mesh,
+            min_join if isinstance(min_join, jax.Array)
+            else stage_min_join(min_join),
+        )
+        mc = _stage_replicated(
+            self.mesh,
+            min_containment
+            if isinstance(min_containment, jax.Array)
+            else stage_min_containment(min_containment),
+        )
+        sentinel = plan.sentinel_dev
+        if sentinel is None:
+            sentinel = jnp.asarray(np.int32(plan.n_candidates))
+        sentinel = _stage_replicated(self.mesh, sentinel)
+        vs, gis, jss, fence = [], [], [], []
+        for gp, s_surv, s_bucket in zip(
+            groups, tspec.s_survivors, spec.s_buckets
+        ):
+            if gp.sig is None:
+                raise ValueError(
+                    "tiered dispatch on a plan without a signature tier"
+                )
+            rows_local = max(gp.bucket // n_shards, 1)
+            s_surv_shard = max(min(int(s_surv), gp.bucket) // n_shards, 1)
+            s_surv_shard = min(s_surv_shard, rows_local)
+            s_shard = max(min(int(s_bucket), gp.bucket) // n_shards, 1)
+            s_shard = min(s_shard, s_surv_shard)
+            k_shard = max(min(_next_pow2(top_k), s_shard), 1)
+            fn = _make_tiered_shard_scorer(
+                self.mesh, gp.est_id, s_surv_shard, s_shard, k_shard,
+                self.k,
+            )
+            v, g, j, c0, c1 = fn(
+                *t_args, *_cand_args(gp), gp.sig, gp.index_dev, gp.live,
+                mj, mc, sentinel,
+            )
+            vs.append(v)
+            gis.append(g)
+            jss.append(j)
+            fence.append((gp, s_surv_shard, s_shard, c0, c1))
+        if not vs:
+            return _PendingTieredTopk(None, None, None, Q, 0, fence)
+        flat_v = _concat1(vs)
+        flat_gi = _concat1(gis)
+        flat_js = _concat1(jss)
+        width = int(flat_v.shape[1])
+        k_merge = min(_next_pow2(top_k), width)
+        vals, gidx, jsz = _merge_topk_device(
+            flat_v, flat_gi, flat_js, k_final=k_merge
+        )
+        return _PendingTieredTopk(
             vals, gidx, jsz, Q, min(top_k, width), fence
         )
 

@@ -58,10 +58,12 @@ from repro.core.discovery.planner import (
     QueryPlan,
     ShortlistHints,
     ShortlistOverflow,
+    SurvivorOverflow,
     _PlanPins,
     build_shortlists,
     estimator_id,
     fused_shortlist_spec,
+    tier_spec,
 )
 from repro.core.discovery.resilience import maybe_fault
 from repro.core.sketch import Sketch, build_sketch
@@ -125,6 +127,29 @@ _DTYPES = {
 }
 _FILL = {"keys": _KEY_MAX, "vals_f": 0, "vals_u": 0, "mask": False}
 
+# Device bytes per (row, capacity-column) slot of the full-sketch tier:
+# keys u32 + vals_f f32 + vals_u u32 + mask bool.
+_SKETCH_BYTES_PER_SLOT = 13
+
+
+def _signature_block(block: dict[str, np.ndarray], w: int) -> np.ndarray:
+    """Phase-0 signatures for a host block about to be flushed.
+
+    The block's keys are already *effective* (masked slots fenced to
+    0xFFFFFFFF, valid prefix first, ascending), so the first ``w``
+    columns ARE each candidate's bottom-``w`` sorted keys — the KMV
+    sub-sample :func:`repro.core.join.signature_join_size` estimates
+    from.  Bitcast to int32 (the fence becomes -1) and extended with
+    one live-key-count column.  Derived from the same host arrays as
+    the full-sketch flush, inside the same transactional append, so the
+    two tiers can never disagree about a candidate.
+    """
+    keys = np.ascontiguousarray(block["keys"], dtype=np.uint32)
+    count = block["mask"].sum(axis=1, dtype=np.int32)
+    return np.concatenate(
+        [keys.view(np.int32)[:, :w], count[:, None]], axis=1
+    )
+
 
 class _DeviceStore:
     """Preallocated device arrays with power-of-two row-capacity doubling.
@@ -132,10 +157,24 @@ class _DeviceStore:
     Rows [0, rows) are live; rows beyond carry an all-False mask (and
     KEY_MAX keys), so they join empty and score 0.0 wherever they leak
     into a padded batch.
+
+    ``sig_cols`` (the group-major stores set it) adds the phase-0
+    signature tier: a parallel ``(cap_rows, sig_cols + 1)`` int32 array
+    under ``arrays["sig"]`` — bottom-``sig_cols`` keys per candidate
+    plus a live-key-count column, dead lanes fenced to -1.  It rides
+    the same capacity ladder, the same donation discipline, and the
+    same ``append_block`` transaction as the full sketches: the fault
+    site fires once, before either tier mutates.
     """
 
-    def __init__(self, cap_cols: int):
+    def __init__(self, cap_cols: int, sig_cols: int | None = None):
         self.cap_cols = cap_cols
+        self.sig_cols = sig_cols
+        self._dtypes = dict(_DTYPES)
+        self._fill = dict(_FILL)
+        if sig_cols:
+            self._dtypes["sig"] = np.int32
+            self._fill["sig"] = -1
         self.cap_rows = 0
         self.rows = 0
         self.arrays: dict[str, jax.Array] = {}
@@ -144,10 +183,24 @@ class _DeviceStore:
         self.inplace_flushes = 0
         self.copied_flushes = 0
 
+    def _cols(self, name: str) -> int:
+        return self.sig_cols + 1 if name == "sig" else self.cap_cols
+
+    @property
+    def device_bytes(self) -> dict[str, int]:
+        """Allocated device bytes per tier (capacity, not live rows)."""
+        return {
+            "sketch": self.cap_rows * self.cap_cols * _SKETCH_BYTES_PER_SLOT,
+            "signature": (
+                self.cap_rows * (self.sig_cols + 1) * 4
+                if self.sig_cols else 0
+            ),
+        }
+
     def _pad_rows(self, name: str, arr: jax.Array, new_rows: int) -> jax.Array:
         pad = jnp.full(
-            (new_rows - arr.shape[0], self.cap_cols),
-            _FILL[name], _DTYPES[name],
+            (new_rows - arr.shape[0], self._cols(name)),
+            self._fill[name], self._dtypes[name],
         )
         return jnp.concatenate([arr, pad], axis=0)
 
@@ -164,8 +217,10 @@ class _DeviceStore:
             new_cap *= 2
         if self.cap_rows == 0:
             self.arrays = {
-                name: jnp.full((new_cap, self.cap_cols), _FILL[name], dt)
-                for name, dt in _DTYPES.items()
+                name: jnp.full(
+                    (new_cap, self._cols(name)), self._fill[name], dt
+                )
+                for name, dt in self._dtypes.items()
             }
         else:
             self.arrays = {
@@ -197,9 +252,12 @@ class _DeviceStore:
         n_new = block["keys"].shape[0]
         if n_new == 0:
             return
+        if self.sig_cols and "sig" not in block:
+            block = {**block, "sig": _signature_block(block, self.sig_cols)}
         # Fault-injection site: fires *before* any store mutation, so an
         # injected flush failure leaves rows/arrays consistent and the
-        # next flush retries the same pending block.
+        # next flush retries the same pending block — both tiers, since
+        # the signature rows ride the same write loop below.
         maybe_fault("flush")
         self.ensure_rows(self.rows + n_new)
         row0 = np.int32(self.rows)
@@ -230,10 +288,15 @@ class SketchIndex:
     """Repository-side index: candidate sketches, device-resident, with
     incremental ingest and plan-cached group-major batch layouts."""
 
-    def __init__(self, n: int = 256, method: str = "tupsk", agg: str = "first"):
+    def __init__(self, n: int = 256, method: str = "tupsk",
+                 agg: str = "first", sig_width: int = 16):
         self.n = n
         self.method = method
         self.agg = agg
+        # Phase-0 signature width: bottom-``sig_width`` keys per
+        # candidate held corpus-resident for the containment gate
+        # (clamped to the sketch capacity; <= 0 disables the tier).
+        self.sig_width = int(sig_width)
         self.meta: list[CandidateMeta] = []
         self._keys: list[np.ndarray] = []
         self._vals_f: list[np.ndarray] = []
@@ -254,6 +317,12 @@ class SketchIndex:
         # shared with the service front-end (one workload memory per
         # corpus, whichever entry point drives it).
         self.shortlist_hints = ShortlistHints()
+        # Separate rung table for the tiered (phase-0-gated) path: its
+        # survivor rungs use "tier0"-prefixed keys, and its *shortlist*
+        # rungs — sized to the post-gate survivor population, which
+        # undercounts the ungated one — must not shrink the rungs the
+        # ungated fused path converged to (and vice versa).
+        self.tier_hints = ShortlistHints()
         # One distributed executor per (mesh, k), held across queries so
         # its shard-padded-group cache actually hits on repeat calls —
         # and shared with the service front-end (same cache, same device
@@ -407,6 +476,16 @@ class SketchIndex:
             "pending_rows": len(self.meta) - flushed,
             "inplace_flushes": sum(st.inplace_flushes for st in all_stores),
             "copied_flushes": sum(st.copied_flushes for st in all_stores),
+            # Per-tier device-memory accounting: full-sketch bucket
+            # bytes vs corpus-resident phase-0 signature bytes (both at
+            # allocated capacity).  The ratio is the memory side of the
+            # signature-width tradeoff the README documents.
+            "sketch_bytes": sum(
+                st.device_bytes["sketch"] for st in all_stores
+            ),
+            "signature_bytes": sum(
+                st.device_bytes["signature"] for st in all_stores
+            ),
         }
 
     # ------------------------------------------------------------------
@@ -439,6 +518,15 @@ class SketchIndex:
             )
         return self._store
 
+    def _sig_cols(self) -> int | None:
+        """Committed signature width: the requested ``sig_width`` clamped
+        to the sketch capacity (a signature can't be wider than the key
+        row it samples — and at capacity <= width the gate's estimate is
+        exact, the signature being the complete key set)."""
+        if self.sig_width <= 0 or self._cap_cols is None:
+            return None
+        return min(self.sig_width, self._cap_cols)
+
     def _flush_groups(self, y_discrete: bool) -> _GroupState:
         state = self._groups.setdefault(bool(y_discrete), _GroupState())
         C = len(self.meta)
@@ -449,7 +537,7 @@ class SketchIndex:
                 by_eid.setdefault(eid, []).append(i)
             for eid, idx in by_eid.items():
                 store = state.stores.setdefault(
-                    eid, _DeviceStore(self._cap_cols)
+                    eid, _DeviceStore(self._cap_cols, self._sig_cols())
                 )
                 store.append_block(
                     self._host_block(idx), donate=self._pins.count == 0
@@ -522,8 +610,9 @@ class SketchIndex:
             ])
             live = jnp.asarray(np.arange(store.cap_rows) < g)
             groups.append(
-                GroupPlan(eid, store.arrays, index, live, g,
-                          jnp.asarray(index))
+                GroupPlan(eid, {name: store.arrays[name] for name in _DTYPES},
+                          index, live, g, jnp.asarray(index),
+                          sig=store.arrays.get("sig"))
             )
         plan = QueryPlan(y_is_discrete, C, groups, pins=self._pins,
                          sentinel_dev=jnp.asarray(np.int32(C)))
@@ -631,9 +720,78 @@ class SketchIndex:
                 ).collect()
         return triples
 
+    def _tiered_triples(self, plan: QueryPlan, trains, top_k: int,
+                        min_join: int, min_containment: float,
+                        ex, n_shards: int) -> list:
+        """Phase-0 containment gate in front of the fused pipeline.
+
+        One vectorized signature-intersection pass over ALL C corpus
+        candidates estimates each one's containment of the train keys;
+        only the survivors reach the (exact) join-size prefilter,
+        compaction, gather, and scoring — all of which then run at
+        survivor width instead of corpus width.  The one-host-sync
+        contract is the fused path's: dispatch -> collect moves only
+        the final triples plus the two count fences.  A fence breach
+        (:class:`~repro.core.discovery.planner.SurvivorOverflow`)
+        re-runs the window through the ungated
+        :meth:`_fused_triples` — same fence-and-fallback shape as the
+        PR 6 shortlist overflow, one rung up.  Both survivor and
+        shortlist rungs live in ``tier_hints`` (never the ungated
+        path's table — gated shortlist counts undercount ungated ones).
+        """
+        sharded = n_shards > 1
+        on_mesh = hasattr(ex, "tiered_topk_dispatch")
+        hints = self.tier_hints
+        mult = n_shards if sharded else 1
+        tspec = tier_spec(
+            plan, hints, min_containment, multiple=mult, sharded=sharded
+        )
+        spec = fused_shortlist_spec(
+            plan, hints, min_join, multiple=mult, sharded=sharded
+        )
+        if on_mesh:
+            handle = ex.tiered_topk_dispatch(
+                plan, trains, tspec, spec, min_join, min_containment,
+                top_k,
+            )
+        else:
+            handle = ex.tiered_dispatch(
+                plan, trains, tspec, spec, min_join, min_containment
+            )
+        try:
+            triples = handle.collect()
+            overflowed = False
+        except SurvivorOverflow:
+            triples = None
+            overflowed = True
+        mc_key = round(float(min_containment), 6)
+        for eid, m in handle.observed_t0.items():
+            hints.observe(
+                ("tier0", plan.y_discrete, eid, mc_key, sharded), m,
+                overflowed=overflowed,
+            )
+        for eid, m in handle.observed.items():
+            if overflowed:
+                # A truncated survivor buffer truncates the observed
+                # within-survivor shortlist count with it; the survivor
+                # count is that count's sound upper bound (the
+                # shortlist is a subset of the survivors), so growing
+                # to it re-converges in one round instead of two.
+                m = max(m, handle.observed_t0.get(eid, 0))
+            hints.observe(
+                (plan.y_discrete, eid, int(min_join), sharded), m,
+                overflowed=overflowed,
+            )
+        if overflowed:
+            triples = self._fused_triples(
+                plan, trains, top_k, min_join, ex, n_shards
+            )
+        return triples
+
     def _two_phase(self, plan: QueryPlan, trains, top_k: int,
                    min_join: int, mesh: Mesh | None, k: int,
-                   fused: bool | None = None) -> list:
+                   fused: bool | None = None,
+                   min_containment: float = 0.0) -> list:
         """Joinability-gated retrieval: join-size prefilter shortlists
         (phase 1), then gather-and-score only the survivors (phase 2).
         Returns one ranked result list per query — bit-identical to the
@@ -644,11 +802,33 @@ class SketchIndex:
         ``fused`` (default on) runs both phases as one device pipeline
         with no host sync between them; ``fused=False`` forces the
         classic host-boundary path (the reference the fused path is
-        bit-identity-tested against)."""
+        bit-identity-tested against).  ``min_containment`` > 0 engages
+        the phase-0 containment gate in front of the fused pipeline
+        (requires the signature tier and the fused path); at 0 the
+        window routes through the untouched fused path — bit-identity
+        to the ungated contract holds trivially.
+        """
         use_fused = True if fused is None else bool(fused)
+        gate = float(min_containment) > 0.0
+        if gate and not use_fused:
+            raise ValueError(
+                "min_containment > 0 requires the fused pipeline "
+                "(fused=False forces the host-boundary reference path, "
+                "which has no phase-0 gate)"
+            )
+        if gate and any(gp.sig is None for gp in plan.groups):
+            raise ValueError(
+                "min_containment > 0 requires a signature tier; this "
+                "index was built with sig_width <= 0"
+            )
         if mesh is not None:
             ex = self._distributed_executor(mesh, k)
-            if use_fused:
+            if gate:
+                triples = self._tiered_triples(
+                    plan, trains, top_k, min_join, min_containment, ex,
+                    mesh.shape["data"],
+                )
+            elif use_fused:
                 triples = self._fused_triples(
                     plan, trains, top_k, min_join, ex,
                     mesh.shape["data"],
@@ -663,7 +843,11 @@ class SketchIndex:
                 ).collect()
         else:
             ex = _ex.BatchedExecutor(k=k)
-            if use_fused:
+            if gate:
+                triples = self._tiered_triples(
+                    plan, trains, top_k, min_join, min_containment, ex, 1
+                )
+            elif use_fused:
                 triples = self._fused_triples(
                     plan, trains, top_k, min_join, ex, 1
                 )
@@ -681,7 +865,8 @@ class SketchIndex:
 
     def query(self, train_sketch: Sketch, top_k: int = 10,
               mesh: Mesh | None = None, min_join: int = 8, k: int = 3,
-              prefilter: bool | None = None, fused: bool | None = None):
+              prefilter: bool | None = None, fused: bool | None = None,
+              min_containment: float = 0.0):
         """Rank candidates by estimated MI with the train target.
 
         ``k`` is the KSG-family neighbor count the estimators score
@@ -694,14 +879,32 @@ class SketchIndex:
         ``fused`` (default on when the prefilter engages) keeps both
         phases on device with no intervening host sync;
         ``fused=False`` forces the host-boundary reference path.
+        ``min_containment`` > 0 adds the phase-0 containment gate in
+        front of the fused pipeline: one signature-intersection pass
+        over the whole corpus estimates containment
+        (est_join_size / train_size) and only candidates at or above
+        the threshold reach the exact phases.  The gate is an
+        *estimate* — results are a high-recall subset of the ungated
+        ranking, exact for candidates holding <= ``sig_width`` keys;
+        at 0 (default) the path is the ungated fused pipeline,
+        bit-identical to PR 6 behavior.
         Returns a list of (CandidateMeta, mi, join_size), best first.
         """
         train = self.train_arrays(train_sketch)
         C = len(self.meta)
         plan = self.plan(train_sketch.value_is_discrete)
+        if float(min_containment) > 0.0 and not self._use_prefilter(
+            prefilter, min_join
+        ):
+            raise ValueError(
+                "min_containment > 0 requires two-phase retrieval "
+                "(prefilter=False disables the pipeline the gate "
+                "fronts)"
+            )
         if self._use_prefilter(prefilter, min_join):
             return self._two_phase(
-                plan, train, top_k, min_join, mesh, k, fused=fused
+                plan, train, top_k, min_join, mesh, k, fused=fused,
+                min_containment=min_containment,
             )[0]
         if mesh is not None:
             ex = self._distributed_executor(mesh, k)
@@ -719,7 +922,8 @@ class SketchIndex:
                    min_join: int = 8, mesh: Mesh | None = None,
                    executor=None, k: int = 3,
                    prefilter: bool | None = None,
-                   fused: bool | None = None):
+                   fused: bool | None = None,
+                   min_containment: float = 0.0):
         """Answer Q concurrent discovery queries in one executor pass.
 
         All train sketches must share one target dtype (the estimator
@@ -761,9 +965,18 @@ class SketchIndex:
                 "two-phase path picks its own backend (drop executor=, "
                 "or pass prefilter=False/None for dense scoring)"
             )
+        if float(min_containment) > 0.0 and (
+            executor is not None
+            or not self._use_prefilter(prefilter, min_join)
+        ):
+            raise ValueError(
+                "min_containment > 0 requires the two-phase path "
+                "(incompatible with executor= and with prefilter=False)"
+            )
         if self._use_prefilter(prefilter, min_join) and executor is None:
             return self._two_phase(
-                plan, trains, top_k, min_join, mesh, k, fused=fused
+                plan, trains, top_k, min_join, mesh, k, fused=fused,
+                min_containment=min_containment,
             )
         if executor is None:
             ex = (self._distributed_executor(mesh, k) if mesh is not None

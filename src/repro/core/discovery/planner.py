@@ -97,10 +97,16 @@ __all__ = [
     "PlanLease",
     "Shortlist",
     "ShortlistOverflow",
+    "SurvivorOverflow",
     "ShortlistHints",
     "FusedSpec",
     "fused_shortlist_spec",
+    "MIN_SURVIVORS",
+    "bucket_survivors",
+    "TierSpec",
+    "tier_spec",
     "stage_min_join",
+    "stage_min_containment",
     "build_shortlists",
     "plan_signature",
     "shortlist_signature",
@@ -129,6 +135,13 @@ MAX_Q_BUCKET = 64
 # same 8-slot shortlist, so the phase-2 gather-and-score programs are
 # keyed on a pow-2 shortlist axis just like rows and Q.
 MIN_SHORTLIST = 8
+
+# Smallest bucket on the phase-0 survivor ladder (tiered retrieval).
+# The containment gate compacts its survivors into a buffer of this
+# ladder's rungs; like the shortlist ladder it keeps the compiled
+# gather-and-score shape set pow-2-bounded no matter how selective a
+# given ``min_containment`` turns out to be.
+MIN_SURVIVORS = 8
 
 
 def estimator_id(x_discrete: bool, y_discrete: bool) -> int:
@@ -179,6 +192,23 @@ def bucket_shortlist(n: int, multiple: int = 1) -> int:
     return b
 
 
+def bucket_survivors(n: int, multiple: int = 1) -> int:
+    """Survivor-count ladder bucket for ``n`` phase-0 gate survivors.
+
+    Next power of two >= max(n, MIN_SURVIVORS), rounded up to
+    ``multiple`` (a mesh shard count) when it does not already divide.
+    The tiered pipeline's phase-1/2 programs run at survivor width
+    instead of corpus width, and are compiled per (Q-bucket, survivor
+    bucket, shortlist bucket, estimator) — this ladder bounds that set
+    under arbitrary ``min_containment`` selectivity, exactly as
+    :func:`bucket_shortlist` does for ``min_join``.
+    """
+    b = _next_pow2(max(n, MIN_SURVIVORS))
+    if multiple > 1 and b % multiple:
+        b = -(-b // multiple) * multiple
+    return b
+
+
 def bucket_queries(q: int, cap: int = MAX_Q_BUCKET) -> int:
     """Q-axis ladder bucket for a batch of ``q`` concurrent queries.
 
@@ -218,6 +248,12 @@ class GroupPlan:
     # mapping must already live there (uploading it at dispatch would
     # reintroduce the host sync the fused path exists to remove).
     index_dev: jax.Array = field(default=None, compare=False, repr=False)
+    # Phase-0 signature tier: (bucket, width + 1) int32 — columns
+    # [0, width) hold a bottom-``width`` sub-sample of each candidate's
+    # sorted effective keys (bitcast uint32 -> int32; dead lanes carry
+    # -1 == the 0xFFFFFFFF key fence), column ``width`` the candidate's
+    # live key count.  None when the owning index has no signature tier.
+    sig: jax.Array = field(default=None, compare=False, repr=False)
 
     @property
     def bucket(self) -> int:
@@ -428,6 +464,15 @@ class ShortlistOverflow(Exception):
     selectivity stays fused."""
 
 
+class SurvivorOverflow(Exception):
+    """Phase-0 containment gate found more survivors than the staged
+    survivor buffer has lanes for.  The caller falls back to the
+    ungated fused path for this window — the same fence-and-fallback
+    shape as :class:`ShortlistOverflow`, riding the same batched
+    collect — and the observation grows the survivor rung so the next
+    window at this selectivity stays gated."""
+
+
 class ShortlistHints:
     """Adaptive per-workload shortlist-bucket predictor.
 
@@ -534,6 +579,74 @@ def stage_min_join(min_join: int) -> jax.Array:
         dev = jnp.asarray(np.int32(mj))
         _MIN_JOIN_CACHE[mj] = dev
     return dev
+
+
+# Same discipline for ``min_containment`` thresholds: a float32 device
+# scalar per distinct (rounded) threshold, so the phase-0 gate dispatch
+# moves no host bytes either — the tier rides inside the same
+# transfer-guarded span as the fused pipeline it fronts.
+_MIN_CONT_CACHE: dict[float, jax.Array] = {}
+_MIN_CONT_CACHE_MAX = 256
+
+
+def stage_min_containment(min_containment: float) -> jax.Array:
+    mc = round(float(min_containment), 6)
+    dev = _MIN_CONT_CACHE.get(mc)
+    if dev is None:
+        if len(_MIN_CONT_CACHE) >= _MIN_CONT_CACHE_MAX:
+            _MIN_CONT_CACHE.pop(next(iter(_MIN_CONT_CACHE)))
+        dev = jnp.asarray(np.float32(mc))
+        _MIN_CONT_CACHE[mc] = dev
+    return dev
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """Per-group phase-0 survivor-buffer widths for one tiered pass.
+
+    ``s_survivors`` aligns with ``plan.groups`` (entries clamped to
+    each group's row bucket); ``signature`` is the tier's contribution
+    to the PlanCache ``s_key`` — the ``"tier0"`` prefix keeps it
+    disjoint from both the host :func:`shortlist_signature` keys and
+    the ``"fused"`` entries, so a gated window and its ungated twin
+    never share a cache entry.
+    """
+
+    s_survivors: tuple
+    signature: tuple
+
+
+def tier_spec(
+    plan: QueryPlan,
+    hints: ShortlistHints,
+    min_containment: float,
+    multiple: int = 1,
+    sharded: bool = False,
+) -> TierSpec:
+    """Choose each group's survivor-buffer width from the hint table.
+
+    Mirrors :func:`fused_shortlist_spec`: the hint key carries the
+    (rounded) containment threshold instead of ``min_join`` — survivor
+    counts track the gate's selectivity, not the join predicate's —
+    and the sharded width is the per-shard rung times the shard count,
+    clamped so no shard compacts more lanes than it holds rows.
+    """
+    mc_key = round(float(min_containment), 6)
+    s_survivors = []
+    for gp in plan.groups:
+        key = ("tier0", bool(plan.y_discrete), gp.est_id, mc_key, sharded)
+        rung = bucket_survivors(hints.get(key))
+        if multiple > 1:
+            rows_local = max(bucket_rows(gp.bucket, multiple) // multiple, 1)
+            s = min(rung, rows_local) * multiple
+        else:
+            s = min(rung, bucket_rows(gp.bucket))
+        s_survivors.append(s)
+    sig = tuple(
+        ("tier0", gp.est_id, s)
+        for gp, s in zip(plan.groups, s_survivors)
+    )
+    return TierSpec(tuple(s_survivors), sig)
 
 
 def shortlist_signature(shortlists: list) -> tuple:

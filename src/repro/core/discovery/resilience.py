@@ -85,6 +85,7 @@ FAULT_SITES = (
     "prefilter_dispatch",  # two-phase phase 1 enqueue
     "shortlist_dispatch",  # two-phase phase 2 enqueue
     "fused_dispatch",      # fused two-phase enqueue (single pipeline)
+    "tiered_dispatch",     # phase-0-gated tiered enqueue
     "collect",             # any pending handle's first host sync
     "flush",               # index._DeviceStore.append_block (ingest)
     "scores",              # NaN corruption of collected MI lanes

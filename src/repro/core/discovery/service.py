@@ -94,11 +94,13 @@ from repro.core.discovery.planner import (
     MAX_Q_BUCKET,
     PlanCache,
     ShortlistOverflow,
+    SurvivorOverflow,
     bucket_queries,
     build_shortlists,
     fused_shortlist_spec,
     plan_signature,
     shortlist_signature,
+    tier_spec,
 )
 from repro.core.discovery.resilience import QueryOutcome, RetryPolicy
 from repro.core.sketch import Sketch
@@ -126,9 +128,17 @@ class AdmissionStats:
     cands_considered: int = 0   # (query, candidate) pairs seen by phase 1
     cands_shortlisted: int = 0  # pairs that reached phase-2 scoring
     fused_windows: int = 0   # buckets delivered by the fused device path
+    gated_windows: int = 0   # buckets delivered by the phase-0-gated path
+    cands_considered_t0: int = 0  # (query, candidate) pairs swept by the
+    #                               phase-0 signature gate
+    cands_gated_t0: int = 0  # pairs the gate passed into the exact phases
+    signature_bytes: int = 0  # device-resident signature-tier bytes the
+    #                           most recent gated window swept
     host_syncs: int = 0      # device->host sync points paid by delivered
-    #                          buckets (fused/dense: 1; host-boundary
-    #                          two-phase: 2; fused overflow fallback: 3)
+    #                          buckets (fused/dense/tiered: 1;
+    #                          host-boundary two-phase: 2; fused overflow
+    #                          fallback: 3; tiered overflow adds 1 on top
+    #                          of whatever the ungated re-run pays)
     failed_buckets: int = 0  # buckets whose primary executor pass raised
     retries: int = 0         # same-rung re-attempts across all buckets
     fallbacks: int = 0       # executor-ladder descents across all buckets
@@ -150,6 +160,17 @@ class AdmissionStats:
             "cands_considered": self.cands_considered,
             "cands_shortlisted": self.cands_shortlisted,
             "fused_windows": self.fused_windows,
+            "gated_windows": self.gated_windows,
+            "cands_considered_t0": self.cands_considered_t0,
+            "cands_gated_t0": self.cands_gated_t0,
+            # Phase-0 selectivity: the fraction of swept (query,
+            # candidate) pairs the containment gate let through to the
+            # exact prefilter/compact/gather/score phases.
+            "t0_selectivity": (
+                self.cands_gated_t0 / self.cands_considered_t0
+                if self.cands_considered_t0 else None
+            ),
+            "signature_bytes": self.signature_bytes,
             "host_syncs": self.host_syncs,
             # What the joinability gate saved: estimator work the dense
             # path would have paid for candidates min_join discards.
@@ -219,9 +240,10 @@ class DiscoveryService:
         max_q_bucket: int = MAX_Q_BUCKET,
         plan_cache_size: int = 32,
         retry_policy: RetryPolicy | None = None,
+        sig_width: int = 16,
     ):
         self.index = index if index is not None else SketchIndex(
-            n=n, method=method, agg=agg
+            n=n, method=method, agg=agg, sig_width=sig_width
         )
         self.k = k
         self.mesh = mesh
@@ -281,6 +303,8 @@ class DiscoveryService:
         min_join: int = 8,
         prefilter: bool | None = None,
         fused: bool | None = None,
+        min_containment: float = 0.0,
+        rank: str = "mi",
     ) -> list[list]:
         """Answer a mixed, arbitrarily-sized queue of discovery queries.
 
@@ -306,6 +330,18 @@ class DiscoveryService:
         ``stats()`` reports how many candidate pairs the gate filtered
         out of estimator scoring, plus ``fused_windows``/``host_syncs``.
 
+        ``min_containment`` > 0 engages the phase-0 containment tier in
+        front of the fused pipeline: one signature sweep over the whole
+        corpus estimates each candidate's containment of the query keys
+        (est_join_size / train_size) and only candidates at or above
+        the threshold reach the exact phases — the window still pays
+        exactly one host sync.  At 0 (the default) every bucket routes
+        through the untouched fused path, bit-identically to the
+        ungated contract.  ``rank="hybrid"`` re-weights the final
+        ranking by *exact* containment (mi x join_size / train_size —
+        the join sizes the pipeline already returns), favoring
+        candidates that both inform the target and actually join it.
+
         This is the legacy all-or-nothing surface: the first bucket
         failure is counted (``failed_buckets``) and re-raised, with the
         failed submit's delivery counters left uncommitted.  Use
@@ -315,6 +351,7 @@ class DiscoveryService:
         results, _ = self._submit(
             list(queries), top_k=top_k, min_join=min_join,
             prefilter=prefilter, fused=fused, isolate=False,
+            min_containment=min_containment, rank=rank,
         )
         return results
 
@@ -326,6 +363,8 @@ class DiscoveryService:
         min_join: int = 8,
         prefilter: bool | None = None,
         fused: bool | None = None,
+        min_containment: float = 0.0,
+        rank: str = "mi",
     ) -> tuple[list, list]:
         """Fault-isolated :meth:`submit`: ``(results, outcomes)``.
 
@@ -341,17 +380,30 @@ class DiscoveryService:
         lanes are fenced to the materialized reference estimator and
         counted per query (``nonfinite_lanes``) instead of being
         ranked.
+
+        The phase-0 containment gate (``min_containment`` > 0) runs on
+        the primary rung only: a bucket that descends the recovery
+        ladder re-executes *ungated* (the gate is a perf tier, and a
+        failing one must not stand between a query and its result), so
+        fallback rungs deliver the ungated ranking.
         """
         return self._submit(
             list(queries), top_k=top_k, min_join=min_join,
             prefilter=prefilter, fused=fused, isolate=True,
+            min_containment=min_containment, rank=rank,
         )
 
     def _submit(
         self, queries: list[Sketch], *, top_k: int, min_join: int,
         prefilter: bool | None, isolate: bool,
         fused: bool | None = None,
+        min_containment: float = 0.0,
+        rank: str = "mi",
     ) -> tuple[list, list]:
+        if rank not in ("mi", "hybrid"):
+            raise ValueError(
+                f"rank must be 'mi' or 'hybrid', got {rank!r}"
+            )
         if not queries:
             return [], []
         st = self.admission
@@ -382,6 +434,13 @@ class DiscoveryService:
         version = self.index._version
         use_pref = self.index._use_prefilter(prefilter, min_join)
         use_fused = use_pref and (True if fused is None else bool(fused))
+        use_gate = use_fused and float(min_containment) > 0.0
+        if float(min_containment) > 0.0 and not use_fused:
+            raise ValueError(
+                "min_containment > 0 requires the fused two-phase "
+                "pipeline (prefilter off or fused=False disables the "
+                "path the phase-0 gate fronts)"
+            )
         n_shards = self.mesh.shape["data"] if self.mesh is not None else 1
         primary_rung = "distributed" if self._dist is not None else "batched"
 
@@ -442,7 +501,15 @@ class DiscoveryService:
                 }
                 job.sketches = [queries[i] for i in job.chunk]
                 job.trains = _ex.stack_trains_host(job.sketches)
-                if use_fused:
+                if use_gate:
+                    # Tiered: the phase-0 containment sweep plus the
+                    # whole fused pipeline in one dispatch; the bucket's
+                    # only host sync is still its collect in step 3.
+                    job.handle = self._tiered_dispatch(
+                        job, min_join, min_containment, top_k,
+                        n_shards, C, version,
+                    )
+                elif use_fused:
                     # Fused two-phase: the whole prefilter -> compact ->
                     # gather -> score pipeline is enqueued here; the
                     # bucket's only host sync is its collect in step 3.
@@ -498,7 +565,8 @@ class DiscoveryService:
                 continue
             try:
                 triples = self._collect_triples(
-                    job, C, min_join, top_k, n_shards, version
+                    job, C, min_join, top_k, n_shards, version,
+                    min_containment=min_containment,
                 )
             except Exception as e:  # noqa: BLE001
                 job.error = e
@@ -507,17 +575,19 @@ class DiscoveryService:
                     raise
                 continue
             self._finish(job, triples, queries, results, outcomes,
-                         top_k, min_join, isolate)
+                         top_k, min_join, isolate, rank=rank)
 
         # 4. recovery (isolate mode): failed buckets retry with backoff,
-        # then descend the executor ladder; every other bucket already
-        # delivered.
+        # then descend the executor ladder — *ungated* (the phase-0
+        # containment tier is a perf optimization; a rung that exists to
+        # rescue a failing bucket must not add an approximate filter on
+        # top); every other bucket already delivered.
         for job in jobs:
             if job.error is not None:
                 st.failed_buckets += 1
                 self._recover(job, queries, results, outcomes,
                               top_k, min_join, use_pref,
-                              n_shards, C, version)
+                              n_shards, C, version, rank=rank)
         return results, outcomes
 
     def _shortlist_phase(
@@ -599,9 +669,53 @@ class DiscoveryService:
             q_bucket=job.q_bucket,
         )
 
+    def _tiered_dispatch(
+        self, job: _BucketJob, min_join: int, min_containment: float,
+        top_k: int, n_shards: int, C: int, version: int,
+    ):
+        """Enqueue a bucket's phase-0-gated pipeline: the corpus-wide
+        signature containment sweep plus the fused prefilter -> compact
+        -> gather -> score chain, one dispatch, one collect.  Survivor
+        widths come from the tier hint ladder and join the plan-cache
+        key next to the shortlist widths (``"tier0"`` entries are
+        disjoint from ``"fused"`` ones), so a gated window and its
+        ungated twin never collide and the compiled-program population
+        stays bounded under any (min_containment, min_join) traffic."""
+        on_mesh = job.rung == "distributed"
+        tspec = tier_spec(
+            job.sp.plan, self.index.tier_hints, min_containment,
+            multiple=n_shards if on_mesh else 1, sharded=on_mesh,
+        )
+        spec = fused_shortlist_spec(
+            job.sp.plan, self.index.tier_hints, min_join,
+            multiple=n_shards if on_mesh else 1, sharded=on_mesh,
+        )
+        self.plan_cache.lookup(
+            version, job.y_disc, job.q_bucket,
+            lambda p=job.sp.plan: p,
+            s_key=spec.signature + tspec.signature,
+        )
+        job.staged["prefiltered"] = len(job.chunk)
+        job.staged["cands_considered"] = len(job.chunk) * C
+        job.staged["cands_considered_t0"] = len(job.chunk) * C
+        job.staged["s_buckets"] = {s for _, _, s in spec.signature}
+        job.staged["fused_windows"] = 1
+        job.staged["gated_windows"] = 1
+        job.staged["signature_bytes"] = \
+            self.index.ingest_stats["signature_bytes"]
+        if on_mesh:
+            return self._dist.tiered_topk_dispatch(
+                job.sp.plan, job.trains, tspec, spec, min_join,
+                min_containment, top_k, q_bucket=job.q_bucket,
+            )
+        return self._batched.tiered_dispatch(
+            job.sp.plan, job.trains, tspec, spec, min_join,
+            min_containment, q_bucket=job.q_bucket,
+        )
+
     def _collect_triples(
         self, job: _BucketJob, C: int, min_join: int, top_k: int,
-        n_shards: int, version: int,
+        n_shards: int, version: int, min_containment: float = 0.0,
     ) -> list:
         """First host sync of a bucket's handle -> one (values, global
         indices, join sizes) triple per live query.
@@ -616,6 +730,57 @@ class DiscoveryService:
             mi, js = handle.collect()
             gi = np.arange(C, dtype=np.int32)
             return [(mi[q], gi, js[q]) for q in range(len(job.chunk))]
+        if isinstance(handle, (_ex._PendingTiered, _ex._PendingTieredTopk)):
+            on_mesh = isinstance(handle, _ex._PendingTieredTopk)
+            hints = self.index.tier_hints
+            mc_key = round(float(min_containment), 6)
+            try:
+                triples = handle.collect()
+            except SurvivorOverflow:
+                # Either staged width was too small: grow the rungs and
+                # re-run the window through the ungated fused path
+                # (whose own overflow protocol then applies).  The gate
+                # did not deliver this window — its staged tier
+                # counters are withdrawn; the extra host sync the
+                # tiered fence already paid is added back on top of
+                # whatever the re-run's own accounting stages.
+                for eid, seen in handle.observed_t0.items():
+                    hints.observe(
+                        ("tier0", job.y_disc, eid, mc_key, on_mesh),
+                        seen, overflowed=True,
+                    )
+                for eid, seen in handle.observed.items():
+                    # The truncated survivor buffer truncated this
+                    # count too; its sound upper bound is the survivor
+                    # count — growing to it re-converges in one round.
+                    hints.observe(
+                        (job.y_disc, eid, int(min_join), on_mesh),
+                        max(seen, handle.observed_t0.get(eid, 0)),
+                        overflowed=True,
+                    )
+                job.staged["gated_windows"] = 0
+                job.staged.pop("cands_considered_t0", None)
+                job.staged.pop("signature_bytes", None)
+                job.handle = self._fused_dispatch(
+                    job, min_join, top_k, n_shards, C, version
+                )
+                triples = self._collect_triples(
+                    job, C, min_join, top_k, n_shards, version
+                )
+                job.staged["host_syncs"] = \
+                    job.staged.get("host_syncs", 1) + 1
+                return triples
+            for eid, seen in handle.observed_t0.items():
+                hints.observe(
+                    ("tier0", job.y_disc, eid, mc_key, on_mesh), seen
+                )
+            for eid, seen in handle.observed.items():
+                hints.observe(
+                    (job.y_disc, eid, int(min_join), on_mesh), seen
+                )
+            job.staged["cands_gated_t0"] = handle.survivors
+            job.staged["cands_shortlisted"] = handle.shortlisted
+            return triples
         if isinstance(handle, (_ex._PendingFused, _ex._PendingFusedTopk)):
             on_mesh = isinstance(handle, _ex._PendingFusedTopk)
             hints = self.index.shortlist_hints
@@ -647,11 +812,18 @@ class DiscoveryService:
     def _finish(
         self, job: _BucketJob, triples: list, queries: list,
         results: list, outcomes: list, top_k: int, min_join: int,
-        isolate: bool,
+        isolate: bool, rank: str = "mi",
     ) -> None:
         """Rank a delivered bucket (fencing non-finite lanes first in
         isolate mode), scatter results, emit outcomes, and commit the
-        bucket's staged stat deltas."""
+        bucket's staged stat deltas.
+
+        ``rank="hybrid"`` re-weights each lane's score by its *exact*
+        containment before ranking: mi x (join_size / train_size), with
+        the join sizes every retrieval path already returns — no extra
+        device work.  The ``min_join`` eligibility filter is unchanged;
+        only the order among eligible candidates moves (toward ones
+        whose keys actually cover the query's)."""
         st = self.admission
         C = len(self.index)
         for row, qi in enumerate(job.chunk):
@@ -667,6 +839,11 @@ class DiscoveryService:
                     v, gi, js, self.index, queries[qi], min_join, self.k
                 )
                 st.nonfinite_lanes += nf
+            if rank == "hybrid":
+                tsize = max(int(queries[qi].size), 1)
+                v = np.asarray(v, np.float32) * (
+                    np.asarray(js, np.float32) / np.float32(tsize)
+                )
             results[qi] = self.index._rank(v, gi, js, top_k, min_join)
             if isolate:
                 outcomes[qi] = QueryOutcome(
@@ -683,6 +860,11 @@ class DiscoveryService:
         st.s_buckets.update(staged.get("s_buckets", ()))
         st.host_syncs += staged.get("host_syncs", 0)
         st.fused_windows += staged.get("fused_windows", 0)
+        st.gated_windows += staged.get("gated_windows", 0)
+        st.cands_considered_t0 += staged.get("cands_considered_t0", 0)
+        st.cands_gated_t0 += staged.get("cands_gated_t0", 0)
+        if "signature_bytes" in staged:
+            st.signature_bytes = staged["signature_bytes"]
 
     # ------------------------------------------------------------------
     # Recovery ladder
@@ -691,7 +873,7 @@ class DiscoveryService:
     def _recover(
         self, job: _BucketJob, queries: list, results: list,
         outcomes: list, top_k: int, min_join: int, use_pref: bool,
-        n_shards: int, C: int, version: int,
+        n_shards: int, C: int, version: int, rank: str = "mi",
     ) -> None:
         """Retry a failed bucket with bounded backoff, descending the
         executor ladder between rungs; other buckets are untouched.
@@ -728,7 +910,8 @@ class DiscoveryService:
                     job.rung = rung
                     job.error = None
                     self._finish(job, triples, queries, results,
-                                 outcomes, top_k, min_join, True)
+                                 outcomes, top_k, min_join, True,
+                                 rank=rank)
                     return
                 except Exception as e:  # noqa: BLE001 — keep descending
                     last_err = e
@@ -796,10 +979,19 @@ class DiscoveryService:
     def stats(self) -> dict:
         """Serving counters: admission decisions, resilience traffic
         (quarantine/retry/fallback/fence), plan-cache traffic, compiled-
-        program population, and ingest transfer accounting."""
+        program population, ingest transfer accounting, and per-tier
+        device-memory accounting (full-sketch bucket bytes vs the
+        corpus-resident phase-0 signature bytes, both at allocated
+        capacity — the memory side of the signature-width tradeoff)."""
+        ingest = self.index.ingest_stats
         return {
             "admission": self.admission.as_dict(),
             "plan_cache": self.plan_cache.stats,
             "compiled_programs": _ex.compile_count(),
-            "ingest": self.index.ingest_stats,
+            "ingest": ingest,
+            "tiers": {
+                "sketch_bytes": ingest["sketch_bytes"],
+                "signature_bytes": ingest["signature_bytes"],
+                "signature_width": self.index._sig_cols(),
+            },
         }

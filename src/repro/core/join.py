@@ -44,6 +44,7 @@ __all__ = [
     "sketch_join_jax",
     "sketch_join_presorted",
     "presorted_join_size",
+    "signature_join_size",
     "full_left_join",
 ]
 
@@ -198,6 +199,70 @@ def presorted_join_size(
         keys_effective=keys_effective,
     )
     return jnp.sum(matched)
+
+
+def signature_join_size(
+    train_keys: jax.Array,
+    train_mask: jax.Array,
+    sig: jax.Array,
+) -> jax.Array:
+    """Estimated join size from a bottom-``w`` key signature.
+
+    ``sig`` is one candidate's phase-0 signature row: ``w`` int32
+    columns holding the smallest ``w`` of its sorted effective keys
+    (bitcast from uint32; dead columns carry -1 == the 0xFFFFFFFF
+    fence), then one int32 column with the candidate's live key count.
+    Sketch keys are uniform hashes, so the bottom-``w`` order
+    statistics are an exchangeable ``w``-subset of the candidate's key
+    set (a KMV sketch of the sketch): each train row's key lands in the
+    signature with probability ``sig_valid / cand_valid`` given it is
+    in the candidate at all, making
+
+        ``est_js = matched_in_signature * cand_valid / sig_valid``
+
+    an unbiased estimate of :func:`presorted_join_size` with relative
+    error O(1 / sqrt(w)) — and *exact* whenever the candidate holds at
+    most ``w`` keys (then the signature is the complete key set).
+
+    The match probes the OPPOSITE direction from the full prefilter.
+    The prefilter probes every train key into the candidate row —
+    O(train_n) probes per candidate regardless of the candidate's
+    width, which would make a phase-0 sweep nearly as expensive as the
+    phase it gates.  Here the ``w`` signature keys probe into a sorted
+    effective train row, with left/right ``searchsorted`` pairs
+    counting each key's train-side *multiplicity* (train sketches keep
+    repeats) — 2·``w`` probes per candidate, and the per-query sort is
+    batch-invariant so the surrounding vmap over the corpus hoists it.
+    The raw count — train rows whose key is in the signature set — is
+    the same integer the train→signature probe direction yields, so
+    the estimate (and the ``w == capacity`` exactness guarantee) is
+    unchanged.
+
+    A valid key that happens to equal 0xFFFFFFFF is indistinguishable
+    from the fence — in a signature column it is dropped from
+    ``sig_valid``, in the sorted train row it sorts among the fence
+    padding and is clipped out by the valid-row bound.  Either way a
+    ≤1-key perturbation of an estimate, not a correctness issue (the
+    exact phases downstream handle that collision precisely).
+    """
+    w = sig.shape[-1] - 1
+    sk = jax.lax.bitcast_convert_type(sig[:w], jnp.uint32)
+    sig_mask = sk != _KEY_MAX
+    sig_valid = jnp.sum(sig_mask).astype(jnp.int32)
+    cand_valid = jnp.maximum(sig[w], 0)
+    tk_sorted = jnp.sort(
+        jnp.where(train_mask, train_keys.astype(jnp.uint32), _KEY_MAX)
+    )
+    n_valid = jnp.sum(train_mask).astype(jnp.int32)
+    lo = jnp.searchsorted(tk_sorted, sk, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(tk_sorted, sk, side="right").astype(jnp.int32)
+    hi = jnp.minimum(hi, n_valid)  # fence-sorted tail = masked rows
+    raw = jnp.sum(
+        jnp.where(sig_mask, jnp.maximum(hi - lo, 0), 0)
+    ).astype(jnp.int32)
+    scale = cand_valid.astype(jnp.float32) / jnp.maximum(
+        sig_valid, 1).astype(jnp.float32)
+    return raw.astype(jnp.float32) * scale
 
 
 def full_left_join(

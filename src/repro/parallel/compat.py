@@ -16,7 +16,10 @@ version dance lives in exactly one place.
 
 from __future__ import annotations
 
+import contextlib
+import functools
 import inspect
+import threading
 
 import jax
 
@@ -32,7 +35,49 @@ _CHECK_KW = (
     else ("check_rep" if "check_rep" in _PARAMS else None)
 )
 
-__all__ = ["shard_map", "abstract_mesh", "axis_size"]
+__all__ = [
+    "shard_map",
+    "abstract_mesh",
+    "axis_size",
+    "manual_axes",
+    "manual_axes_scope",
+]
+
+# Manual-axis bookkeeping.  jax binds *every* mesh axis in the trace-time
+# axis env when staging a shard_map body — partial-manual regions are
+# indistinguishable from full-manual ones from inside the trace on the
+# 0.4.x line.  Sharding constraints, however, may only name the *auto*
+# axes of a partial-manual region, so code that emits constraints from
+# inside a body (``shard_activation``) needs to know which axes are
+# manual right now.  Since every shard_map in the repo goes through the
+# shim below, the shim records the manual set on a thread-local stack
+# for the duration of the (trace-time) body call.
+_MANUAL = threading.local()
+
+
+def manual_axes() -> frozenset:
+    """Mesh axes manual in the innermost shard_map body currently being
+    traced on this thread (union across nested regions); empty outside."""
+    stack = getattr(_MANUAL, "stack", None)
+    if not stack:
+        return frozenset()
+    return frozenset().union(*stack)
+
+
+@contextlib.contextmanager
+def manual_axes_scope(names):
+    """Declare ``names`` manual for the scope without a shard_map — for
+    code that pins an axis by other means (the int8_ef train step vmaps
+    over an explicitly pod-sharded leading dim) and must keep activation
+    constraints traced inside from re-claiming it."""
+    stack = getattr(_MANUAL, "stack", None)
+    if stack is None:
+        stack = _MANUAL.stack = []
+    stack.append(frozenset(names))
+    try:
+        yield
+    finally:
+        stack.pop()
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False,
@@ -51,8 +96,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False,
             kwargs["axis_names"] = set(axis_names)
         else:
             kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    manual = (
+        frozenset(axis_names)
+        if axis_names is not None
+        else frozenset(mesh.axis_names)
+    )
+
+    @functools.wraps(f)
+    def body(*args, **kw):
+        with manual_axes_scope(manual):
+            return f(*args, **kw)
+
     return _shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
     )
 
 

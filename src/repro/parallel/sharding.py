@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.compat import manual_axes
+
 __all__ = [
     "mesh_context",
     "current_mesh",
@@ -182,15 +184,29 @@ def logical(*names: str | None) -> P:
 
 
 def shard_activation(x: jax.Array, *names: str | None) -> jax.Array:
-    """with_sharding_constraint by logical axis names; no-op without mesh."""
+    """with_sharding_constraint by logical axis names; no-op without mesh.
+
+    Axes that are *manual* in the current scope — bound by an enclosing
+    ``shard_map`` body, or declared via
+    :func:`repro.parallel.compat.manual_axes_scope` — are already fixed
+    and may not appear in a sharding constraint, so they are filtered
+    out of the resolved spec (e.g. 'batch' resolves to just ('data',)
+    while the int8_ef train step holds 'pod' manual).  If nothing
+    survives the filter the constraint is skipped entirely rather than
+    demanding replication the caller never asked for (the full-manual
+    decode/expert-parallel bodies hit this).
+    """
     mesh = current_mesh()
     if mesh is None:
         return x
+    manual = manual_axes()
     entries = []
     for n in names:
-        axes = _mesh_axes_for(n, mesh)
+        axes = tuple(a for a in _mesh_axes_for(n, mesh) if a not in manual)
         entries.append(axes if len(axes) > 1 else (axes[0] if axes else None))
     spec = validate_spec(P(*entries), x.shape, mesh)
+    if manual and not any(e is not None for e in spec):
+        return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 

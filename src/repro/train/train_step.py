@@ -2,14 +2,24 @@
 compression, clipping, optimizer update.
 
 Cross-pod gradient compression ('int8_ef'): on a multi-pod mesh the
-inter-pod links (DCI) are the scarcest bandwidth.  We make the pod axis
-*manual* via ``jax.shard_map(..., axis_names={'pod'})`` — data/model
-axes stay automatic (GSPMD keeps handling FSDP/TP collectives inside
-each pod) — compute pod-local gradients, quantize them to block-wise
-int8 with an error-feedback buffer (the quantization residual is added
-back the next step, which keeps SGD unbiased to first order), and
-``psum`` the int8-scaled values across pods: a 4× reduction of DCI
-traffic per step.
+inter-pod links (DCI) are the scarcest bandwidth.  Pod-local gradients
+are computed under plain GSPMD by vmapping the grad function over an
+explicit pod-major leading batch dim — ``(B, ...)`` reshaped to
+``(npods, B/npods, ...)`` and constrained to ``P('pod')`` — so each pod
+produces mean gradients for its own block and data/model axes keep
+their automatic FSDP/TP collectives.  Only the *compression cell* runs
+with the pod axis manual (``shard_map(..., axis_names={'pod'})``): it
+quantizes the pod-local gradients to block-wise int8 with an
+error-feedback buffer (the quantization residual is added back the
+next step, which keeps SGD unbiased to first order) and ``psum``s the
+int8 codes across pods — a 4× reduction of DCI traffic per step.  The
+fwd/bwd pass must NOT sit inside the manual region itself: the 0.4.x
+SPMD partitioner aborts on any loop (the transformer's layer scan)
+whose body references auto-context operands inside a manual subgroup,
+which is why the compression cell is a flat tree-map with no control
+flow.  ``manual_axes_scope('pod')`` wraps the vmapped grad so
+activation constraints traced inside resolve 'batch' to ('data',)
+instead of re-claiming the pod axis.
 """
 
 from __future__ import annotations
@@ -29,7 +39,7 @@ from repro.train.optimizer import (
     Schedule,
     clip_by_global_norm,
 )
-from repro.parallel.compat import axis_size, shard_map
+from repro.parallel.compat import axis_size, manual_axes_scope, shard_map
 from repro.parallel.sharding import current_mesh
 
 __all__ = ["TrainState", "init_train_state", "build_train_step"]
@@ -174,24 +184,39 @@ def build_train_step(
             # Single-pod: compression is a no-op (grads already global).
             (_, metrics), grads = grad_fn(state.params, batch)
             return _finish(state, grads, metrics, state.err_fb)
+        npods = mesh.shape["pod"]
+        pod_sh = jax.sharding.NamedSharding(mesh, P("pod"))
 
-        def pod_local(params, err_fb, batch):
-            (_, metrics), grads = grad_fn(params, batch)
-            grads, new_err = _compress_psum_pod(grads, err_fb)
-            metrics = jax.tree_util.tree_map(
-                lambda m: jax.lax.pmean(m, "pod"), metrics
+        # Pod-major microbatch: leading dim = pod, sharded over 'pod', so
+        # the vmapped grad stays pod-local under GSPMD (same row blocks a
+        # P('pod') in_spec would hand each pod).
+        micro = jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x.reshape((npods, x.shape[0] // npods) + x.shape[1:]), pod_sh
+            ),
+            batch,
+        )
+        with manual_axes_scope({"pod"}):
+            (_, metrics), grads = jax.vmap(grad_fn, in_axes=(None, 0))(
+                state.params, micro
             )
-            return grads, new_err, metrics
 
-        batch_spec = jax.tree_util.tree_map(lambda _: P("pod"), batch)
-        grads, new_err, metrics = shard_map(
-            pod_local,
+        def compress(grads_pod, err_fb):
+            # (1, ...) leading pod block per shard -> per-pod gradients.
+            local = jax.tree_util.tree_map(lambda g: g[0], grads_pod)
+            return _compress_psum_pod(local, err_fb)
+
+        grads, new_err = shard_map(
+            compress,
             mesh=mesh,
-            in_specs=(P(), P(), batch_spec),
-            out_specs=(P(), P(), P()),
+            in_specs=(P("pod"), P()),
+            out_specs=(P(), P()),
             axis_names={"pod"},  # data/model stay automatic (GSPMD)
             check=False,
-        )(state.params, state.err_fb, batch)
+        )(grads, state.err_fb)
+        metrics = jax.tree_util.tree_map(
+            lambda m: jnp.mean(m, axis=0), metrics
+        )
         return _finish(state, grads, metrics, new_err)
 
     return train_step

@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.parallel import sharding as SH
-from repro.parallel.compat import abstract_mesh
+from repro.parallel.compat import abstract_mesh, manual_axes, manual_axes_scope
 from repro.parallel.decode_attention import decode_attention, _local_decode
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -157,3 +157,142 @@ class TestMultiDeviceParity:
         )
         assert out.returncode == 0, out.stderr[-2000:]
         assert "PARITY-OK" in out.stdout
+
+
+class TestManualAxes:
+    """shard_activation constraint filtering inside manual regions."""
+
+    def test_scope_nesting_and_union(self):
+        assert manual_axes() == frozenset()
+        with manual_axes_scope({"pod"}):
+            assert manual_axes() == frozenset({"pod"})
+            with manual_axes_scope({"model"}):
+                assert manual_axes() == frozenset({"pod", "model"})
+            assert manual_axes() == frozenset({"pod"})
+        assert manual_axes() == frozenset()
+
+    def test_shard_map_shim_declares_manual(self):
+        """The compat shim records axis_names (or all mesh axes when
+        full-manual) for the body trace."""
+        from jax.sharding import PartitionSpec as SP
+        from repro.parallel.compat import shard_map
+
+        mesh = jax.make_mesh((1,), ("model",))
+        seen = []
+
+        def body(x):
+            seen.append(manual_axes())
+            return x
+
+        with mesh:
+            jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(SP(),), out_specs=SP(),
+                axis_names=set(), check=False,
+            ))(jnp.ones(4))
+            jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(SP("model"),),
+                out_specs=SP("model"), check=False,
+            ))(jnp.ones(4))
+        assert seen[0] == frozenset()
+        assert seen[1] == frozenset({"model"})
+        assert manual_axes() == frozenset()
+
+    @staticmethod
+    def _constraint_axes(jaxpr) -> set:
+        axes: set = set()
+        for eqn in jaxpr.jaxpr.eqns:
+            if eqn.primitive.name == "sharding_constraint":
+                for entry in eqn.params["sharding"].spec:
+                    if entry is None:
+                        continue
+                    axes.update(
+                        entry if isinstance(entry, tuple) else (entry,)
+                    )
+        return axes
+
+    def test_constraint_drops_manual_axes(self):
+        """'batch' resolves to ('data',) under a manual 'pod' scope; the
+        emitted constraint must not name the manual axis."""
+        mesh = jax.make_mesh((1, 1), ("pod", "data"))
+
+        # distinct fn objects per trace: the scope is a trace-time
+        # thread-local (like mesh_context) and invisible to jax's
+        # tracing cache, so re-tracing the same callable would alias.
+        def fresh():
+            return lambda x: SH.shard_activation(x, "batch", None)
+
+        with SH.mesh_context(mesh):
+            open_axes = self._constraint_axes(
+                jax.make_jaxpr(fresh())(jnp.ones((4, 4)))
+            )
+            with manual_axes_scope({"pod"}):
+                scoped_axes = self._constraint_axes(
+                    jax.make_jaxpr(fresh())(jnp.ones((4, 4)))
+                )
+        assert "pod" in open_axes
+        assert scoped_axes and "pod" not in scoped_axes
+
+    def test_constraint_skipped_when_all_manual(self):
+        """Full-manual scope: the hint disappears instead of demanding
+        replication."""
+        mesh = jax.make_mesh((1, 1), ("pod", "data"))
+        with SH.mesh_context(mesh):
+            with manual_axes_scope({"pod", "data"}):
+                jaxpr = jax.make_jaxpr(
+                    lambda x: SH.shard_activation(x, "batch", None)
+                )(jnp.ones((4, 4)))
+        assert "sharding_constraint" not in str(jaxpr)
+
+
+class TestInt8EfMultiPod:
+    """int8_ef compression lowers on a multi-pod mesh (4 fake devices)
+    and tracks the uncompressed step: bitwise on step 1 (loss computed
+    before compression), within quantization tolerance after."""
+
+    SCRIPT = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import model as M
+        from repro.train import optimizer as O, train_step as TS
+        from repro.data.pipeline import TokenPipeline
+        from repro.parallel.sharding import mesh_context, apply_named_sharding
+
+        cfg = M.get_config("internlm2-1.8b", smoke=True)
+        opt = O.adamw(weight_decay=0.01)
+        sched = O.warmup_cosine(1e-3, 2, 20)
+        pipe = TokenPipeline(cfg, batch=4, seq=32, seed=0)
+        batches = [jax.tree_util.tree_map(jnp.asarray, pipe.next_batch())
+                   for _ in range(4)]
+
+        def run(compression):
+            mesh = jax.make_mesh((2, 2), ("pod", "data"))
+            with mesh_context(mesh):
+                step = jax.jit(TS.build_train_step(
+                    cfg, opt, sched, compression=compression))
+                state = TS.init_train_state(
+                    cfg, opt, jax.random.key(0), compression=compression)
+                state = state._replace(params=jax.device_put(
+                    state.params, apply_named_sharding(state.params, mesh)))
+                losses = []
+                for b in batches:
+                    state, m = step(state, b)
+                    losses.append(float(m["loss"]))
+            return losses
+
+        l_comp = run("int8_ef")
+        l_ref = run(None)
+        assert np.isclose(l_comp[0], l_ref[0], rtol=1e-5), (l_comp, l_ref)
+        np.testing.assert_allclose(l_comp, l_ref, rtol=0.05)
+        assert all(np.isfinite(l_comp))
+        print("INT8EF-OK", l_comp[-1])
+    """)
+
+    def test_multipod_compression_lowers_and_tracks(self):
+        out = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, timeout=420,
+            env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")),
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "INT8EF-OK" in out.stdout
