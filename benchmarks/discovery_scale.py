@@ -859,6 +859,151 @@ def bench_tiered_containment_gate(quick: bool = False) -> list[tuple]:
     )]
 
 
+def bench_service_microbatch(quick: bool = False) -> list[tuple]:
+    """Gated async-tier row: 8 concurrent callers through the
+    micro-batch scheduler vs the sequential solo-``submit`` loop each
+    of them would otherwise run.
+
+    The sync surface is single-caller (not thread-safe by design — the
+    async tier is the concurrency layer), so without the scheduler 8
+    independent interactive callers each serialize their own
+    ``submit([q])`` round trips and can never batch with each other.
+    That loop is the baseline; the scheduler's coalescing window packs
+    all 64 concurrent queries into one shared pow-2 Q-bucket per
+    estimator signature and double-buffers dispatch.  Three gates, all
+    explicit raises (``python -O`` must not disable them):
+
+      * throughput >= 2x over the sequential solo-submit loop,
+        re-measured once before failing;
+      * bit-identity: every caller's async results equal its own solo
+        ``submit`` at the same ``min_join`` — checked on the measured
+        path, not a side run;
+      * zero new compiled programs across the measured coalesced reps
+        (the warmed sync surface already minted every (signature,
+        Q-bucket) program the coalesced buckets key to).
+    """
+    import threading
+
+    from repro.core.discovery import DiscoveryService, compile_count
+
+    rng = np.random.default_rng(23)
+    n_rows = 2000 if quick else 4000
+    sk_n = 32
+    n_cands = 8
+    reps = 2 if quick else 3
+    N_CALLERS, PER_CALLER = 8, 8
+
+    keys = np.asarray(hashing.murmur3_32_np(
+        np.arange(n_rows, dtype=np.uint32), seed=np.uint32(3)))
+    y_base = rng.normal(size=n_rows).astype(np.float32)
+    svc = DiscoveryService(n=sk_n)
+    for c in range(n_cands):
+        alpha = c / max(n_cands - 1, 1)
+        if c % 4 == 3:  # mixed corpus: 2 estimator groups per query
+            vals, disc = rng.integers(0, 8, size=n_rows), True
+        else:
+            vals = (alpha * y_base + (1 - alpha)
+                    * rng.normal(size=n_rows)).astype(np.float32)
+            disc = False
+        perm = rng.permutation(n_rows)
+        svc.add(f"m{c}", "k", "v", keys[perm], np.asarray(vals)[perm],
+                disc)
+
+    caller_queues = [
+        [build_sketch(
+            keys,
+            (y_base + 0.25 * (c * PER_CALLER + q + 1)
+             * rng.normal(size=n_rows)).astype(np.float32),
+            n=sk_n, method="tupsk", side="train",
+            value_is_discrete=False)
+         for q in range(PER_CALLER)]
+        for c in range(N_CALLERS)
+    ]
+    all_queries = [sk for queue in caller_queues for sk in queue]
+    n_total = len(all_queries)
+
+    # Solo truth per query (the bit-identity referent AND the
+    # baseline's compiled shapes), plus the combined queue — exactly
+    # the coalesced window's bucketing — so the coalesced path below
+    # must mint nothing.
+    solo = [[svc.submit([sk], top_k=8, min_join=4)[0] for sk in queue]
+            for queue in caller_queues]
+    svc.submit(all_queries, top_k=8, min_join=4)
+
+    def _sequential():
+        # The no-tier serving loop: every caller's queries go through
+        # the sync surface one at a time, one dispatch round-trip each.
+        return [[svc.submit([sk], top_k=8, min_join=4)[0]
+                 for sk in queue] for queue in caller_queues]
+
+    sched = svc.scheduler(window_ms=1.0)
+
+    def _coalesced():
+        got = [None] * N_CALLERS
+        barrier = threading.Barrier(N_CALLERS)
+
+        def caller(c):
+            barrier.wait()
+            handles = svc.submit_async(caller_queues[c], top_k=8,
+                                       min_join=4)
+            got[c] = [h.result(timeout=120) for h in handles]
+
+        threads = [threading.Thread(target=caller, args=(c,))
+                   for c in range(N_CALLERS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return got
+
+    def _measure(fn):
+        fn()  # warm (scheduler path: first coalesced window shapes)
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(reps):
+            out = fn()
+        return (time.perf_counter() - t0) / reps / n_total * 1e6, out
+
+    us_seq, _ = _measure(_sequential)
+    programs_before = compile_count()
+    us_coal, got = _measure(_coalesced)
+    if compile_count() != programs_before:
+        raise RuntimeError(
+            f"coalesced serving minted "
+            f"{compile_count() - programs_before} new compiled "
+            f"programs over the warmed sync surface — the (signature, "
+            f"Q-bucket) identity is broken"
+        )
+    # Bit-identity on the measured path: each caller vs its solo submit.
+    for c in range(N_CALLERS):
+        if got[c] != solo[c]:
+            raise RuntimeError(
+                f"caller {c} async results diverged from its solo "
+                f"submit — coalescing is not bit-identical"
+            )
+    if us_seq / us_coal < 2.0:
+        us_seq, _ = _measure(_sequential)
+        us_coal, got = _measure(_coalesced)
+        if us_seq / us_coal < 2.0:
+            raise RuntimeError(
+                f"micro-batch coalescing regressed: "
+                f"{us_seq / us_coal:.2f}x < 2x over per-caller "
+                f"sequential submit (twice)"
+            )
+    tele = sched.stats()
+    p95 = (tele["per_class"]["interactive"]["e2e_ms"] or {}).get("p95")
+    svc.close()
+    return [(
+        "discovery/service_microbatch", us_coal,
+        f"q_per_s={1e6 / us_coal:.0f};"
+        f"speedup_vs_sequential_callers={us_seq / us_coal:.1f}x;"
+        f"coalesce_ratio={tele['coalesce_ratio']:.1f};"
+        f"overlapped_windows={tele['overlapped_windows']};"
+        f"interactive_p95_ms={p95};"
+        f"callers={N_CALLERS};per_caller={PER_CALLER}",
+    )]
+
+
 def bench_kernel_hot_spots(quick: bool = False) -> list[tuple]:
     """Microbenchmarks of the two sketch-side compute hot-spots, jnp path
     (the Pallas kernels target TPU; interpret mode is validation-only)."""

@@ -14,7 +14,11 @@ import json
 import sys
 import time
 
-from benchmarks import discovery_scale, paper_tables
+from repro.launch.env import apply_env
+
+apply_env()  # gap-fill allocator/XLA/x64 tuning before jax loads
+
+from benchmarks import discovery_scale, paper_tables  # noqa: E402
 
 BENCHES = [
     ("v_b1", paper_tables.bench_v_b1_full_join_estimators),
@@ -28,13 +32,15 @@ BENCHES = [
     ("discovery_prefilter", discovery_scale.bench_prefilter_large_corpus),
     ("discovery_fused", discovery_scale.bench_fused_two_phase),
     ("discovery_tiered", discovery_scale.bench_tiered_containment_gate),
+    ("discovery_microbatch", discovery_scale.bench_service_microbatch),
     ("kernels", discovery_scale.bench_kernel_hot_spots),
 ]
 
 # Rows retired from the tracked snapshot: pruned on every merge so a
 # stale entry can't linger in BENCH_discovery.json once its bench is
-# gone (service_microbatch was folded into the service_mixed_burst row).
-RETIRED_ROWS = ("discovery/service_microbatch",)
+# gone.  (``discovery/service_microbatch`` left this list when the
+# async serving tier landed with its own gated bench.)
+RETIRED_ROWS: tuple = ()
 
 
 def _parse_derived(derived: str) -> dict:

@@ -71,6 +71,18 @@ estimator-signature batch splitting, pow-two Q-axis bucketing with a
 transfer scheduling across the admitted buckets — while ``add`` ingests
 live through the index underneath.
 
+Above the synchronous surface sits the **always-on async serving
+tier** (:mod:`~repro.core.discovery.scheduler`):
+``DiscoveryService.submit_async`` returns per-query
+:class:`QueryHandle` futures, and the :class:`MicroBatchScheduler`
+behind it coalesces queries arriving within a few-ms window *across
+callers* into shared pow-2 Q-buckets (zero new compiled programs,
+bit-identical results vs. solo submits), with interactive > batch
+priority classes, bounded per-class queues
+(:class:`SchedulerBackpressure`), and double-buffered dispatch —
+window N+1's trains stage host-side and upload while window N scores
+on device.
+
 Serving faults are first-class (:mod:`~repro.core.discovery.resilience`):
 ``DiscoveryService.submit_safe`` returns per-query
 :class:`QueryOutcome` records, quarantining invalid sketches at
@@ -110,6 +122,8 @@ from repro.core.discovery.executors import (
     score_batch_reference,
     stack_trains,
     stack_trains_host,
+    stage_trains_host,
+    upload_trains,
 )
 from repro.core.discovery.index import CandidateMeta, SketchIndex
 from repro.core.discovery.planner import (
@@ -124,6 +138,7 @@ from repro.core.discovery.planner import (
     ServicePlan,
     Shortlist,
     ShortlistHints,
+    CoalescedBucket,
     ShortlistOverflow,
     SurvivorOverflow,
     TierSpec,
@@ -132,6 +147,7 @@ from repro.core.discovery.planner import (
     bucket_shortlist,
     bucket_survivors,
     build_shortlists,
+    coalesce_queries,
     estimator_id,
     fused_shortlist_spec,
     make_plan,
@@ -155,6 +171,13 @@ from repro.core.discovery.resilience import (
     reference_score_pairs,
     validate_query,
 )
+from repro.core.discovery.scheduler import (
+    PRIORITIES,
+    MicroBatchScheduler,
+    QueryHandle,
+    SchedulerBackpressure,
+    SchedulerStats,
+)
 from repro.core.discovery.service import AdmissionStats, DiscoveryService
 
 __all__ = [
@@ -162,6 +185,13 @@ __all__ = [
     "SketchIndex",
     "DiscoveryService",
     "AdmissionStats",
+    "MicroBatchScheduler",
+    "QueryHandle",
+    "SchedulerBackpressure",
+    "SchedulerStats",
+    "PRIORITIES",
+    "CoalescedBucket",
+    "coalesce_queries",
     "QueryPlan",
     "GroupPlan",
     "ServicePlan",
@@ -198,6 +228,8 @@ __all__ = [
     "get_executor",
     "stack_trains",
     "stack_trains_host",
+    "stage_trains_host",
+    "upload_trains",
     "pad_trains_q",
     "compile_count",
     "score_batch",

@@ -123,6 +123,8 @@ __all__ = [
     "distributed_topk",
     "stack_trains",
     "stack_trains_host",
+    "stage_trains_host",
+    "upload_trains",
     "pad_trains_q",
     "Executor",
     "PartitionedLocalExecutor",
@@ -750,6 +752,52 @@ def stack_trains(trains: list[dict]) -> dict:
     return out
 
 
+def stage_trains_host(sketches: list) -> dict:
+    """Stage Q train ``Sketch`` objects into one leading-Q-axis *host*
+    dict (contiguous numpy per field) — the CPU half of the bucket
+    upload, split out so a scheduler can stack window N+1 while window
+    N's programs are still scoring on device.  No device traffic
+    happens here; pair with :func:`upload_trains` (or call
+    :func:`stack_trains_host`, which composes both).
+    """
+    if not sketches:
+        raise ValueError("no train sketches")
+    maybe_fault("staging")
+    y_disc = {bool(sk.value_is_discrete) for sk in sketches}
+    if len(y_disc) != 1:
+        raise ValueError(
+            "a train batch must share one target dtype "
+            "(got both discrete and continuous); split the batch"
+        )
+    views = [sk.value_views() for sk in sketches]
+    return {
+        "keys": np.stack([sk.key_hashes for sk in sketches]),
+        "vals_f": np.stack([vf for vf, _ in views]),
+        "vals_u": np.stack([vu for _, vu in views]),
+        "mask": np.stack([sk.mask for sk in sketches]),
+        "y_discrete": y_disc.pop(),
+    }
+
+
+def upload_trains(staged: dict) -> dict:
+    """Upload a staged train dict to device — 4 *explicit*
+    ``jax.device_put`` calls, one per field.
+
+    Explicit matters: the double-buffered dispatch path runs under
+    ``jax.transfer_guard("disallow")`` in tests to prove the overlap
+    span performs no hidden host syncs, and ``device_put`` is the only
+    H2D legitimately inside that span (it is asynchronous — the copy
+    overlaps whatever the device is already running).
+    """
+    maybe_fault("stack_h2d")
+    out = {
+        key: jax.device_put(staged[key])
+        for key in ("keys", "vals_f", "vals_u", "mask")
+    }
+    out["y_discrete"] = bool(staged.get("y_discrete", False))
+    return out
+
+
 def stack_trains_host(sketches: list) -> dict:
     """Stack Q train ``Sketch`` objects into one leading-Q-axis device
     dict with a *single* host->device upload per field.
@@ -759,25 +807,11 @@ def stack_trains_host(sketches: list) -> dict:
     admitting a 32-query bucket turns that into 128 dispatches of bus
     traffic before any scoring starts.  Stacking on the host first makes
     it 4 uploads per *bucket*.  Values are bit-identical — the same
-    bytes, batched.
+    bytes, batched.  Composed of :func:`stage_trains_host` (host stack)
+    + :func:`upload_trains` (async H2D) so the micro-batch scheduler
+    can pipeline the two halves across windows.
     """
-    if not sketches:
-        raise ValueError("no train sketches")
-    maybe_fault("stack_h2d")
-    y_disc = {bool(sk.value_is_discrete) for sk in sketches}
-    if len(y_disc) != 1:
-        raise ValueError(
-            "a train batch must share one target dtype "
-            "(got both discrete and continuous); split the batch"
-        )
-    views = [sk.value_views() for sk in sketches]
-    return {
-        "keys": jnp.asarray(np.stack([sk.key_hashes for sk in sketches])),
-        "vals_f": jnp.asarray(np.stack([vf for vf, _ in views])),
-        "vals_u": jnp.asarray(np.stack([vu for _, vu in views])),
-        "mask": jnp.asarray(np.stack([sk.mask for sk in sketches])),
-        "y_discrete": y_disc.pop(),
-    }
+    return upload_trains(stage_trains_host(sketches))
 
 
 def pad_trains_q(trains: dict, q_bucket: int) -> dict:

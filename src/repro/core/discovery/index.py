@@ -642,8 +642,14 @@ class SketchIndex:
                 _ex.GroupMajorDistributedExecutor(mesh, k=k)
         return ex
 
-    def _rank(self, v, gi, js, top_k: int, min_join: int) -> list:
-        C = len(self.meta)
+    def _rank(self, v, gi, js, top_k: int, min_join: int,
+              C: int | None = None) -> list:
+        # ``C`` is the corpus size the scores were computed against —
+        # passed explicitly by callers that may rank *after* a
+        # mid-flight ingest grew the index (the scheduler's in-flight
+        # windows), so sentinel lanes (gi == that C) never alias a row
+        # ingested since dispatch.  Default: the current size.
+        C = len(self.meta) if C is None else int(C)
         # Deterministic order: score descending, global candidate index
         # ascending on ties (lexsort's last key is primary).  The tie
         # rule is what makes shortlist-path rankings — whose inputs are

@@ -110,6 +110,8 @@ __all__ = [
     "build_shortlists",
     "plan_signature",
     "shortlist_signature",
+    "CoalescedBucket",
+    "coalesce_queries",
     "ServicePlan",
     "PlanCache",
     "pack_group",
@@ -661,6 +663,61 @@ def shortlist_signature(shortlists: list) -> tuple:
 
 
 @dataclass(frozen=True)
+class CoalescedBucket:
+    """One dispatchable micro-batch bucket produced by
+    :func:`coalesce_queries`: queries from (possibly) many callers that
+    share an estimator signature, packed into one pow-2 Q-bucket.
+
+    ``chunk`` holds caller-supplied query ids in priority-then-arrival
+    order; ``priority`` is the best (lowest) priority rank present, so a
+    scheduler can dispatch interactive-bearing buckets first.  Because
+    the bucket's compiled-program identity is exactly ``(signature,
+    q_bucket)`` — the same key a solo submit of the member queries
+    produces — coalescing mints **zero** new programs over the solo
+    baseline.
+    """
+
+    signature: tuple
+    chunk: tuple
+    priority: int
+    q_bucket: int
+
+
+def coalesce_queries(
+    entries, cap: int = MAX_Q_BUCKET
+) -> list[CoalescedBucket]:
+    """Pack ``(query_id, signature, priority)`` entries into shared
+    pow-2 Q-buckets — the cross-caller coalescing core used by both
+    ``DiscoveryService`` admission (one caller, priority 0 throughout)
+    and the micro-batch scheduler (many callers, interactive > batch).
+
+    Grouping is by estimator signature in first-seen order; within a
+    group, members sort by (priority, arrival) so interactive queries
+    fill the earlier chunks when a group overflows ``cap``.  The
+    returned buckets are stably ordered by priority, so equal-priority
+    traffic dispatches in arrival order — for single-priority input this
+    reproduces the pre-coalescing admission order exactly (a bit-identity
+    requirement, since bucket order fixes dispatch order).
+    """
+    groups: dict[tuple, list] = {}
+    for seq, (qid, sig, pr) in enumerate(entries):
+        groups.setdefault(sig, []).append((int(pr), seq, qid))
+    buckets: list[CoalescedBucket] = []
+    for sig, members in groups.items():
+        members.sort(key=lambda t: (t[0], t[1]))
+        for lo in range(0, len(members), cap):
+            part = members[lo:lo + cap]
+            buckets.append(CoalescedBucket(
+                signature=sig,
+                chunk=tuple(qid for _, _, qid in part),
+                priority=min(pr for pr, _, _ in part),
+                q_bucket=bucket_queries(len(part), cap),
+            ))
+    buckets.sort(key=lambda b: b.priority)  # stable: arrival order kept
+    return buckets
+
+
+@dataclass(frozen=True)
 class ServicePlan:
     """One admitted batch layout: a corpus plan plus its Q-bucket.
 
@@ -698,13 +755,19 @@ class PlanCache:
         self.misses = 0
         self.evictions = 0
         self.build_failures = 0
+        # Lookups arriving from coalesced (cross-caller) buckets.  The
+        # cache key is identical to a solo submit's — coalescing adds no
+        # key axis — so this ledger shows micro-batched traffic re-using
+        # the very entries (and compiled programs) solo traffic minted.
+        self.coalesced_hits = 0
+        self.coalesced_misses = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def lookup(
         self, version: int, y_discrete: bool, q_bucket: int,
-        build, s_key: tuple | None = None,
+        build, s_key: tuple | None = None, coalesced: bool = False,
     ) -> ServicePlan:
         """Cached ServicePlan for the key, building via ``build()`` — a
         zero-arg callable returning the current QueryPlan — on miss.
@@ -712,12 +775,17 @@ class PlanCache:
         ``s_key`` extends the key with a phase-2 shortlist signature:
         the shortlist ladder makes its value set pow-2-bounded, so the
         cache (and the compile count it fronts) stays bounded under
-        arbitrarily varied ``min_join`` selectivity.
+        arbitrarily varied ``min_join`` selectivity.  ``coalesced``
+        marks a lookup on behalf of a cross-caller micro-batch bucket —
+        it does not change the key, only the hit/miss ledger, because
+        coalesced and solo traffic must share entries.
         """
         key = (int(version), bool(y_discrete), int(q_bucket), s_key)
         hit = self._entries.pop(key, None)
         if hit is not None:
             self.hits += 1
+            if coalesced:
+                self.coalesced_hits += 1
             self._entries[key] = hit  # re-insert: LRU touch
             return hit
         # A failed build caches nothing and is counted apart from
@@ -730,6 +798,8 @@ class PlanCache:
             self.build_failures += 1
             raise
         self.misses += 1
+        if coalesced:
+            self.coalesced_misses += 1
         sp = ServicePlan(plan, int(q_bucket), plan_signature(plan), s_key)
         while len(self._entries) >= self.max_entries:
             self._entries.pop(next(iter(self._entries)))
@@ -745,6 +815,8 @@ class PlanCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "build_failures": self.build_failures,
+            "coalesced_hits": self.coalesced_hits,
+            "coalesced_misses": self.coalesced_misses,
         }
 
 

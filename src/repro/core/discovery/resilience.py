@@ -28,9 +28,10 @@ not abort the submit.  This module provides the four pieces
     so a demoted lane reproduces the clean score exactly.
   * **Deterministic fault injection** — :func:`inject_faults` arms named
     sites threaded through ``executors.py`` (``stack_h2d``,
-    ``dispatch``, ``prefilter_dispatch``, ``shortlist_dispatch``,
-    ``collect``) and ``index.py`` (``flush``) with seeded failure
-    schedules, so every retry/fallback/quarantine path is exercised in
+    ``staging``, ``dispatch``, ``prefilter_dispatch``,
+    ``shortlist_dispatch``, ``collect``), ``index.py`` (``flush``), and
+    ``scheduler.py`` (``window_timer``, ``ingest_midflight``) with
+    seeded failure schedules, so every retry/fallback/quarantine path is exercised in
     tests without real hardware faults — the same discipline
     ``train/fault_tolerance.py`` uses to test preemption without real
     preemption.  The pseudo-site ``scores`` does not raise: it corrupts
@@ -80,7 +81,8 @@ __all__ = [
 # abort the enclosing bucket stage; "scores" is a corruption site (NaN
 # lanes, consumed by corrupt_scores) and never raises.
 FAULT_SITES = (
-    "stack_h2d",           # executors.stack_trains_host (train upload)
+    "stack_h2d",           # executors.upload_trains (train H2D upload)
+    "staging",             # executors.stage_trains_host (host-side stack)
     "dispatch",            # dense dispatch (batched / distributed)
     "prefilter_dispatch",  # two-phase phase 1 enqueue
     "shortlist_dispatch",  # two-phase phase 2 enqueue
@@ -88,6 +90,8 @@ FAULT_SITES = (
     "tiered_dispatch",     # phase-0-gated tiered enqueue
     "collect",             # any pending handle's first host sync
     "flush",               # index._DeviceStore.append_block (ingest)
+    "window_timer",        # scheduler loop's coalesce-window tick
+    "ingest_midflight",    # scheduler.add while windows are in flight
     "scores",              # NaN corruption of collected MI lanes
 )
 

@@ -81,6 +81,7 @@ never delivered.  Failures are counted explicitly
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -97,6 +98,7 @@ from repro.core.discovery.planner import (
     SurvivorOverflow,
     bucket_queries,
     build_shortlists,
+    coalesce_queries,
     fused_shortlist_spec,
     plan_signature,
     shortlist_signature,
@@ -215,6 +217,47 @@ class _BucketJob:
         self.staged: dict = {}
 
 
+class _Window:
+    """One dispatched-but-uncollected admission window.
+
+    Everything ranking needs is captured at dispatch time — the corpus
+    size/version the programs were planned against, the serving options
+    — so :meth:`DiscoveryService._window_collect` can run arbitrarily
+    later (after other windows dispatched, after an ingest landed) and
+    still produce results bit-identical to a synchronous submit.
+    ``leases`` pin the window's query plans against donated ingest
+    flushes for exactly that span.
+    """
+
+    __slots__ = (
+        "queries", "jobs", "results", "outcomes", "C", "version",
+        "top_k", "min_join", "min_containment", "rank", "isolate",
+        "use_pref", "n_shards", "leases",
+    )
+
+    def __init__(self, queries: list, isolate: bool):
+        self.queries = queries
+        self.jobs: list[_BucketJob] = []
+        self.results: list = [None] * len(queries)
+        self.outcomes: list = [None] * len(queries)
+        self.C = 0
+        self.version = 0
+        self.top_k = 0
+        self.min_join = 0
+        self.min_containment = 0.0
+        self.rank = "mi"
+        self.isolate = isolate
+        self.use_pref = False
+        self.n_shards = 1
+        self.leases: list = []
+
+    def release(self) -> None:
+        """Release the window's plan leases (idempotent)."""
+        leases, self.leases = self.leases, []
+        for lease in leases:
+            lease.release()
+
+
 class DiscoveryService:
     """Serving surface: live ingest + concurrent mixed queries.
 
@@ -269,6 +312,13 @@ class DiscoveryService:
             self.index._distributed_executor(mesh, k)
             if mesh is not None else None
         )
+        # Always-on micro-batch scheduler, attached lazily on the first
+        # submit_async (see scheduler.py) so synchronous-only users pay
+        # no background thread.  The lock makes concurrent first-time
+        # attachment mint exactly one scheduler (one loop thread, one
+        # telemetry stream) instead of one per racing caller.
+        self._scheduler = None
+        self._scheduler_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # Ingest (delegates to the index; flushes ride the next submit)
@@ -289,11 +339,6 @@ class DiscoveryService:
     # ------------------------------------------------------------------
     # Serving
     # ------------------------------------------------------------------
-
-    def _chunks(self, idxs: list[int]):
-        cap = self.max_q_bucket
-        for lo in range(0, len(idxs), cap):
-            yield idxs[lo: lo + cap]
 
     def submit(
         self,
@@ -393,6 +438,72 @@ class DiscoveryService:
             min_containment=min_containment, rank=rank,
         )
 
+    # ------------------------------------------------------------------
+    # Async serving tier (micro-batch scheduler)
+    # ------------------------------------------------------------------
+
+    def scheduler(self, **kwargs):
+        """The service's micro-batch scheduler, creating (and starting)
+        it on first use.  ``kwargs`` configure the first creation
+        (``window_ms``, ``max_depth``, ``pipeline_depth``, ``start``);
+        passing them after the scheduler exists is an error — the tier
+        is always-on, not per-call."""
+        if self._scheduler is None:
+            from repro.core.discovery.scheduler import MicroBatchScheduler
+            with self._scheduler_lock:
+                if self._scheduler is None:
+                    self._scheduler = MicroBatchScheduler(self, **kwargs)
+                    return self._scheduler
+        if kwargs:
+            raise ValueError(
+                "scheduler already attached; its configuration is fixed "
+                f"at creation (got {sorted(kwargs)})"
+            )
+        return self._scheduler
+
+    def submit_async(
+        self,
+        queries,
+        *,
+        priority: str = "interactive",
+        top_k: int = 10,
+        min_join: int = 8,
+        prefilter: bool | None = None,
+        fused: bool | None = None,
+        min_containment: float = 0.0,
+        rank: str = "mi",
+    ):
+        """Future-style :meth:`submit_safe` through the always-on
+        micro-batch tier: returns one
+        :class:`~repro.core.discovery.scheduler.QueryHandle` per query
+        (a single handle for a single ``Sketch``), resolving to the
+        ranked results and a
+        :class:`~repro.core.discovery.resilience.QueryOutcome`.
+
+        Queries from *different callers* arriving within the
+        scheduler's coalescing window are packed into shared pow-2
+        Q-buckets — same compiled programs, bit-identical results, a
+        fraction of the dispatch round-trips — and the PR-5 resilience
+        ladder applies per coalesced bucket, so no caller ever sees
+        another caller's failure.  ``priority`` is ``"interactive"``
+        (dispatched first) or ``"batch"``; each class has its own
+        bounded queue, and a full queue raises
+        :class:`~repro.core.discovery.scheduler.SchedulerBackpressure`
+        instead of stalling the caller.
+        """
+        return self.scheduler().submit_async(
+            queries, priority=priority, top_k=top_k, min_join=min_join,
+            prefilter=prefilter, fused=fused,
+            min_containment=min_containment, rank=rank,
+        )
+
+    def close(self) -> None:
+        """Drain and stop the attached scheduler, if any (idempotent;
+        synchronous surfaces keep working after close)."""
+        if self._scheduler is not None:
+            self._scheduler.close()
+            self._scheduler = None
+
     def _submit(
         self, queries: list[Sketch], *, top_k: int, min_join: int,
         prefilter: bool | None, isolate: bool,
@@ -400,16 +511,51 @@ class DiscoveryService:
         min_containment: float = 0.0,
         rank: str = "mi",
     ) -> tuple[list, list]:
+        window = self._window_dispatch(
+            queries, top_k=top_k, min_join=min_join,
+            prefilter=prefilter, isolate=isolate, fused=fused,
+            min_containment=min_containment, rank=rank,
+        )
+        if window is None:
+            return [], []
+        return self._window_collect(window)
+
+    def _window_dispatch(
+        self, queries: list[Sketch], *, top_k: int, min_join: int,
+        prefilter: bool | None, isolate: bool,
+        fused: bool | None = None,
+        min_containment: float = 0.0,
+        rank: str = "mi",
+        priorities: list[int] | None = None,
+        coalesced: bool = False,
+    ) -> "_Window | None":
+        """Admission + dispatch half of a submit: validate, split by
+        estimator signature (:func:`coalesce_queries`), Q-bucket, and
+        enqueue every bucket's device work — *no host sync happens
+        here*.  Returns an in-flight :class:`_Window` (None for an
+        empty queue) whose results materialize at
+        :meth:`_window_collect`.
+
+        The window captures the corpus size/version its programs were
+        planned against and holds a
+        :class:`~repro.core.discovery.planner.PlanLease` per plan, so
+        the micro-batch scheduler can overlap the next window's staging
+        — and even an ingest — with this window's device scoring and
+        still collect bit-identical results.  ``priorities`` (one rank
+        per query, lower = sooner) orders coalesced buckets for the
+        scheduler; ``coalesced`` marks the window's plan-cache traffic
+        as cross-caller in the ledger.
+        """
         if rank not in ("mi", "hybrid"):
             raise ValueError(
                 f"rank must be 'mi' or 'hybrid', got {rank!r}"
             )
         if not queries:
-            return [], []
+            return None
         st = self.admission
         st.submits += 1
-        results: list = [None] * len(queries)
-        outcomes: list = [None] * len(queries)
+        win = _Window(list(queries), isolate)
+        results, outcomes = win.results, win.outcomes
 
         # 0. admission validation: quarantine sketches the pipeline
         # cannot serve (isolate mode only — the legacy surface keeps
@@ -428,10 +574,10 @@ class DiscoveryService:
             admitted.append(qi)
         st.submitted += len(admitted)
         if not admitted:
-            return results, outcomes
+            return win
 
-        C = len(self.index)
-        version = self.index._version
+        C = win.C = len(self.index)
+        version = win.version = self.index._version
         use_pref = self.index._use_prefilter(prefilter, min_join)
         use_fused = use_pref and (True if fused is None else bool(fused))
         use_gate = use_fused and float(min_containment) > 0.0
@@ -443,11 +589,15 @@ class DiscoveryService:
             )
         n_shards = self.mesh.shape["data"] if self.mesh is not None else 1
         primary_rung = "distributed" if self._dist is not None else "batched"
+        win.top_k, win.min_join = top_k, min_join
+        win.min_containment, win.rank = min_containment, rank
+        win.use_pref, win.n_shards = use_pref, n_shards
 
-        # 1. split the queue per target dtype -> estimator signature
-        # (constant per dtype within one submit: nothing can flush
-        # mid-call, so compute it once per dtype, not per query).
-        by_sig: dict[tuple, list[int]] = {}
+        # 1. split the queue per target dtype -> estimator signature and
+        # coalesce into shared pow-2 Q-buckets (signature is constant
+        # per dtype within one window: nothing can flush mid-dispatch,
+        # so compute it once per dtype, not per query).
+        entries: list[tuple] = []
         try:
             plans: dict[bool, object] = {}
             sigs: dict[bool, tuple] = {}
@@ -456,7 +606,10 @@ class DiscoveryService:
                 if y_disc not in plans:
                     plans[y_disc] = self.index.plan(y_disc, k=self.k)
                     sigs[y_disc] = plan_signature(plans[y_disc])
-                by_sig.setdefault(sigs[y_disc], []).append(qi)
+                entries.append((
+                    qi, sigs[y_disc],
+                    0 if priorities is None else int(priorities[qi]),
+                ))
         except Exception as e:  # noqa: BLE001 — isolate into outcomes
             if not isolate:
                 raise
@@ -467,127 +620,164 @@ class DiscoveryService:
                     qi, "failed", error="plan_failed", detail=repr(e)
                 )
             st.lost_queries += len(admitted)
-            return results, outcomes
+            return win
 
-        jobs: list[_BucketJob] = []
-        for sig, idxs in by_sig.items():
-            st.signatures.add(sig)
-            n_chunks = -(-len(idxs) // self.max_q_bucket)
-            st.split_batches += n_chunks - 1
-            for chunk in self._chunks(idxs):
-                jobs.append(_BucketJob(chunk, sig[0]))
-
-        # 2. chunk to the Q cap, bucket, and dispatch every batch before
-        # any collect (dispatch-before-transfer across buckets).  With
-        # the prefilter on, "dispatch" here is phase 1 — the join-size
-        # pass; scoring work is not enqueued until its shortlist exists.
-        # Stat deltas are *staged* on the job and committed only after
-        # its collect succeeds.
-        for job in jobs:
-            job.rung = primary_rung
+        # Pin every plan the window dispatched against: a donated
+        # ingest flush between this dispatch and the window's collect
+        # would otherwise repack the very device buffers the in-flight
+        # programs read.  Released at collect (see _Window.release).
+        for plan in plans.values():
             try:
-                job.q_bucket = bucket_queries(
-                    len(job.chunk), self.max_q_bucket
-                )
-                job.sp = self.plan_cache.lookup(
-                    version, job.y_disc, job.q_bucket,
-                    lambda y=job.y_disc: self.index.plan(y, k=self.k),
-                )
-                job.staged = {
-                    "batches": 1,
-                    "padded_lanes": job.q_bucket - len(job.chunk),
-                    "q_buckets": {job.q_bucket},
-                    "host_syncs": 1,
-                }
-                job.sketches = [queries[i] for i in job.chunk]
-                job.trains = _ex.stack_trains_host(job.sketches)
-                if use_gate:
-                    # Tiered: the phase-0 containment sweep plus the
-                    # whole fused pipeline in one dispatch; the bucket's
-                    # only host sync is still its collect in step 3.
-                    job.handle = self._tiered_dispatch(
-                        job, min_join, min_containment, top_k,
-                        n_shards, C, version,
-                    )
-                elif use_fused:
-                    # Fused two-phase: the whole prefilter -> compact ->
-                    # gather -> score pipeline is enqueued here; the
-                    # bucket's only host sync is its collect in step 3.
-                    job.handle = self._fused_dispatch(
-                        job, min_join, top_k, n_shards, C, version
-                    )
-                elif use_pref:
-                    ex = self._dist if self._dist is not None \
-                        else self._batched
-                    job.pend1 = ex.prefilter_dispatch(
-                        job.sp.plan, job.trains, q_bucket=job.q_bucket
-                    )
-                elif self._dist is not None:
-                    want = topk_oversample(top_k, C)
-                    job.handle = self._dist.topk_dispatch(
-                        job.sp.plan, job.trains, want,
-                        q_bucket=job.q_bucket,
-                    )
-                else:
-                    job.handle = self._batched.dispatch(
-                        job.sp.plan, job.trains, q_bucket=job.q_bucket
-                    )
-            except Exception as e:  # noqa: BLE001 — bucket-isolated
-                job.error = e
-                if not isolate:
-                    st.failed_buckets += 1
-                    raise
+                win.leases.append(plan.retain())
+            except ValueError:
+                pass  # ad-hoc plan without pins: nothing to lease
 
-        # 2b. host-boundary two-phase buckets only: collect join sizes,
-        # build shortlists, and dispatch phase 2 for every bucket before
-        # collecting any phase-2 result (bucket i+1's prefilter overlaps
-        # bucket i's shortlist build on device).  Fused buckets were
-        # fully enqueued in step 2 and skip this phase entirely.
-        if use_pref and not use_fused:
+        buckets = coalesce_queries(entries, self.max_q_bucket)
+        per_sig: dict[tuple, int] = {}
+        for b in buckets:
+            per_sig[b.signature] = per_sig.get(b.signature, 0) + 1
+        for sig, n_chunks in per_sig.items():
+            st.signatures.add(sig)
+            st.split_batches += n_chunks - 1
+        jobs = win.jobs = [
+            _BucketJob(list(b.chunk), b.signature[0]) for b in buckets
+        ]
+
+        # 2. dispatch every bucket before any collect (dispatch-before-
+        # transfer across buckets).  With the prefilter on, "dispatch"
+        # here is phase 1 — the join-size pass; scoring work is not
+        # enqueued until its shortlist exists.  Stat deltas are *staged*
+        # on the job and committed only after its collect succeeds.
+        try:
             for job in jobs:
+                job.rung = primary_rung
+                try:
+                    job.q_bucket = bucket_queries(
+                        len(job.chunk), self.max_q_bucket
+                    )
+                    job.sp = self.plan_cache.lookup(
+                        version, job.y_disc, job.q_bucket,
+                        lambda y=job.y_disc: self.index.plan(y, k=self.k),
+                        coalesced=coalesced,
+                    )
+                    job.staged = {
+                        "batches": 1,
+                        "padded_lanes": job.q_bucket - len(job.chunk),
+                        "q_buckets": {job.q_bucket},
+                        "host_syncs": 1,
+                    }
+                    job.sketches = [queries[i] for i in job.chunk]
+                    job.trains = _ex.stack_trains_host(job.sketches)
+                    if use_gate:
+                        # Tiered: the phase-0 containment sweep plus the
+                        # whole fused pipeline in one dispatch; the
+                        # bucket's only host sync is still its collect.
+                        job.handle = self._tiered_dispatch(
+                            job, min_join, min_containment, top_k,
+                            n_shards, C, version,
+                        )
+                    elif use_fused:
+                        # Fused two-phase: the whole prefilter ->
+                        # compact -> gather -> score pipeline is
+                        # enqueued here; the bucket's only host sync is
+                        # its collect.
+                        job.handle = self._fused_dispatch(
+                            job, min_join, top_k, n_shards, C, version
+                        )
+                    elif use_pref:
+                        ex = self._dist if self._dist is not None \
+                            else self._batched
+                        job.pend1 = ex.prefilter_dispatch(
+                            job.sp.plan, job.trains, q_bucket=job.q_bucket
+                        )
+                    elif self._dist is not None:
+                        want = topk_oversample(top_k, C)
+                        job.handle = self._dist.topk_dispatch(
+                            job.sp.plan, job.trains, want,
+                            q_bucket=job.q_bucket,
+                        )
+                    else:
+                        job.handle = self._batched.dispatch(
+                            job.sp.plan, job.trains, q_bucket=job.q_bucket
+                        )
+                except Exception as e:  # noqa: BLE001 — bucket-isolated
+                    job.error = e
+                    if not isolate:
+                        st.failed_buckets += 1
+                        raise
+
+            # 2b. host-boundary two-phase buckets only: collect join
+            # sizes, build shortlists, and dispatch phase 2 for every
+            # bucket before collecting any phase-2 result (bucket i+1's
+            # prefilter overlaps bucket i's shortlist build on device).
+            # Fused buckets were fully enqueued in step 2 and skip this
+            # phase entirely.
+            if use_pref and not use_fused:
+                for job in jobs:
+                    if job.error is not None:
+                        continue
+                    try:
+                        job.handle = self._shortlist_phase(
+                            job, min_join, top_k, n_shards, C, version
+                        )
+                    except Exception as e:  # noqa: BLE001
+                        job.error = e
+                        if not isolate:
+                            st.failed_buckets += 1
+                            raise
+        except Exception:
+            win.release()
+            raise
+        return win
+
+    def _window_collect(self, win: "_Window") -> tuple[list, list]:
+        """Collect half of a submit: sync each in-flight bucket's
+        results, fence, rank, scatter to arrival order, and run the
+        recovery ladder for failed buckets.  Ranks against the corpus
+        size the window *dispatched* with, so results are bit-identical
+        whether or not an ingest landed while the window was in flight.
+        """
+        st = self.admission
+        queries = win.queries
+        results, outcomes = win.results, win.outcomes
+        C, version = win.C, win.version
+        top_k, min_join, rank = win.top_k, win.min_join, win.rank
+        n_shards, isolate = win.n_shards, win.isolate
+        try:
+            # 3. collect (first host sync of each handle's result set),
+            # fence, rank, scatter to arrival order, and only then
+            # commit the bucket's staged counters.
+            for job in win.jobs:
                 if job.error is not None:
                     continue
                 try:
-                    job.handle = self._shortlist_phase(
-                        job, min_join, top_k, n_shards, C, version
+                    triples = self._collect_triples(
+                        job, C, min_join, top_k, n_shards, version,
+                        min_containment=win.min_containment,
                     )
                 except Exception as e:  # noqa: BLE001
                     job.error = e
                     if not isolate:
                         st.failed_buckets += 1
                         raise
+                    continue
+                self._finish(job, triples, queries, results, outcomes,
+                             top_k, min_join, isolate, rank=rank, C=C)
 
-        # 3. collect (first host sync of each handle's result set),
-        # fence, rank, scatter to arrival order, and only then commit
-        # the bucket's staged counters.
-        for job in jobs:
-            if job.error is not None:
-                continue
-            try:
-                triples = self._collect_triples(
-                    job, C, min_join, top_k, n_shards, version,
-                    min_containment=min_containment,
-                )
-            except Exception as e:  # noqa: BLE001
-                job.error = e
-                if not isolate:
+            # 4. recovery (isolate mode): failed buckets retry with
+            # backoff, then descend the executor ladder — *ungated*
+            # (the phase-0 containment tier is a perf optimization; a
+            # rung that exists to rescue a failing bucket must not add
+            # an approximate filter on top); every other bucket already
+            # delivered.
+            for job in win.jobs:
+                if job.error is not None:
                     st.failed_buckets += 1
-                    raise
-                continue
-            self._finish(job, triples, queries, results, outcomes,
-                         top_k, min_join, isolate, rank=rank)
-
-        # 4. recovery (isolate mode): failed buckets retry with backoff,
-        # then descend the executor ladder — *ungated* (the phase-0
-        # containment tier is a perf optimization; a rung that exists to
-        # rescue a failing bucket must not add an approximate filter on
-        # top); every other bucket already delivered.
-        for job in jobs:
-            if job.error is not None:
-                st.failed_buckets += 1
-                self._recover(job, queries, results, outcomes,
-                              top_k, min_join, use_pref,
-                              n_shards, C, version, rank=rank)
+                    self._recover(job, queries, results, outcomes,
+                                  top_k, min_join, win.use_pref,
+                                  n_shards, C, version, rank=rank)
+        finally:
+            win.release()
         return results, outcomes
 
     def _shortlist_phase(
@@ -812,11 +1002,17 @@ class DiscoveryService:
     def _finish(
         self, job: _BucketJob, triples: list, queries: list,
         results: list, outcomes: list, top_k: int, min_join: int,
-        isolate: bool, rank: str = "mi",
+        isolate: bool, rank: str = "mi", C: int | None = None,
     ) -> None:
         """Rank a delivered bucket (fencing non-finite lanes first in
         isolate mode), scatter results, emit outcomes, and commit the
         bucket's staged stat deltas.
+
+        ``C`` is the corpus size the bucket's scores were computed
+        against — the window captures it at dispatch, so a collect that
+        lands after a mid-flight ingest still ranks (and drops sentinel
+        lanes) against the right corpus.  None falls back to the
+        current size, which is correct for synchronous callers.
 
         ``rank="hybrid"`` re-weights each lane's score by its *exact*
         containment before ranking: mi x (join_size / train_size), with
@@ -825,7 +1021,7 @@ class DiscoveryService:
         only the order among eligible candidates moves (toward ones
         whose keys actually cover the query's)."""
         st = self.admission
-        C = len(self.index)
+        C = len(self.index) if C is None else int(C)
         for row, qi in enumerate(job.chunk):
             v, gi, js = triples[row]
             nf = 0
@@ -844,7 +1040,8 @@ class DiscoveryService:
                 v = np.asarray(v, np.float32) * (
                     np.asarray(js, np.float32) / np.float32(tsize)
                 )
-            results[qi] = self.index._rank(v, gi, js, top_k, min_join)
+            results[qi] = self.index._rank(v, gi, js, top_k, min_join,
+                                           C=C)
             if isolate:
                 outcomes[qi] = QueryOutcome(
                     qi, "ok", rung=job.rung, retries=job.retries,
@@ -911,7 +1108,7 @@ class DiscoveryService:
                     job.error = None
                     self._finish(job, triples, queries, results,
                                  outcomes, top_k, min_join, True,
-                                 rank=rank)
+                                 rank=rank, C=C)
                     return
                 except Exception as e:  # noqa: BLE001 — keep descending
                     last_err = e
@@ -994,4 +1191,12 @@ class DiscoveryService:
                 "signature_bytes": ingest["signature_bytes"],
                 "signature_width": self.index._sig_cols(),
             },
+            # Micro-batch tier telemetry (None until the first
+            # submit_async attaches the scheduler): per-priority-class
+            # queue-wait / end-to-end latency percentiles, coalesce
+            # ratio, loop occupancy, backpressure + overlap counters.
+            "scheduler": (
+                self._scheduler.stats() if self._scheduler is not None
+                else None
+            ),
         }

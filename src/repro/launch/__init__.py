@@ -1,2 +1,8 @@
 """Launchers: production mesh, multi-pod dry-run, training, serving,
-and the discovery service."""
+and the discovery service.
+
+:mod:`repro.launch.env` holds the process-environment tuning every
+entry point applies first (``apply_env()`` — allocator, XLA flags, x64
+toggles; never overriding user-set variables).  It is deliberately not
+imported here: it must be importable before jax and the heavy
+launchers."""

@@ -1,0 +1,123 @@
+"""Process-environment tuning for launchers, examples, and benches.
+
+JAX/XLA serving processes are sensitive to a handful of environment
+knobs that must be set *before* the first ``import jax`` — allocator
+choice (glibc malloc fragments badly under the pinned host staging
+buffers the async tier churns through; tcmalloc does not), XLA flag
+defaults, x64 semantics (x64 *off* is part of this repo's bit-identity
+contract — every golden value is float32), and TF log noise.  Scripts
+kept re-deriving these ad hoc; :func:`apply_env` centralizes them with
+one hard rule:
+
+    **a user-set variable is never overridden** — defaults fill gaps,
+    they do not fight the operator.  For ``XLA_FLAGS`` this extends to
+    flag granularity: default flags are appended only when the user's
+    value does not already set that flag.
+
+Call :func:`apply_env` at the very top of an entry point (before heavy
+imports)::
+
+    from repro.launch.env import apply_env
+    apply_env()
+    import jax  # sees the tuned environment
+
+``LD_PRELOAD`` (tcmalloc) cannot take effect in an already-running
+process — the dynamic loader read it at exec time — so it is exported
+for *child* processes (benchmark subshells, multi-host launchers) and
+only when the library actually exists on this machine.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = [
+    "ENV_DEFAULTS",
+    "TCMALLOC_PATHS",
+    "XLA_DEFAULT_FLAGS",
+    "apply_env",
+    "merge_xla_flags",
+]
+
+# Gap-filling defaults (never overriding), per the tuning idioms of
+# public JAX training stacks:
+#   * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD — silence tcmalloc's large-
+#     allocation warnings for the multi-GB host staging buffers.
+#   * TF_CPP_MIN_LOG_LEVEL — quiet the TF/XLA C++ banner + dataset
+#     warnings that otherwise interleave with benchmark CSV output.
+#   * JAX_ENABLE_X64=0 / JAX_DEFAULT_DTYPE_BITS=32 — pin the float32
+#     default-dtype semantics the repo's bit-identity contract assumes
+#     (an operator who *wants* x64 sets the variable, and wins).
+ENV_DEFAULTS: dict[str, str] = {
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+    "TF_CPP_MIN_LOG_LEVEL": "2",
+    "JAX_ENABLE_X64": "0",
+    "JAX_DEFAULT_DTYPE_BITS": "32",
+}
+
+# Default XLA flags, appended only when absent from the user's value.
+# Multi-threaded Eigen keeps the CPU backend's estimator batches from
+# serializing on one core in CI.
+XLA_DEFAULT_FLAGS: tuple[str, ...] = (
+    "--xla_cpu_multi_thread_eigen=true",
+)
+
+# Known tcmalloc install paths, preferred order (Debian/Ubuntu names).
+TCMALLOC_PATHS: tuple[str, ...] = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def _flag_name(flag: str) -> str:
+    """``--xla_foo=bar`` -> ``--xla_foo`` (flags compare by name)."""
+    return flag.split("=", 1)[0]
+
+
+def merge_xla_flags(existing: str | None,
+                    defaults: tuple[str, ...] = XLA_DEFAULT_FLAGS) -> str:
+    """Append default XLA flags the user's ``XLA_FLAGS`` does not set.
+
+    The user's flags come first and win: XLA parses flags left to
+    right, and a default whose *name* already appears in the user value
+    is dropped entirely, so an explicit ``--xla_cpu_multi_thread_eigen=
+    false`` is never contradicted.
+    """
+    user = (existing or "").split()
+    have = {_flag_name(f) for f in user}
+    merged = user + [f for f in defaults if _flag_name(f) not in have]
+    return " ".join(merged)
+
+
+def apply_env(
+    env: dict | None = None,
+    *,
+    xla_flags: tuple[str, ...] = XLA_DEFAULT_FLAGS,
+    tcmalloc: bool = True,
+) -> dict[str, str]:
+    """Fill environment gaps with the serving defaults; never override.
+
+    Mutates ``env`` (default ``os.environ``) and returns only the
+    variables this call actually set — an empty dict means the
+    environment was already fully operator-configured.  Safe to call
+    more than once (the second call sees its own defaults as "user
+    set" and changes nothing).
+    """
+    env = os.environ if env is None else env
+    applied: dict[str, str] = {}
+    for key, val in ENV_DEFAULTS.items():
+        if key not in env:
+            env[key] = val
+            applied[key] = val
+    merged = merge_xla_flags(env.get("XLA_FLAGS"), xla_flags)
+    if merged != (env.get("XLA_FLAGS") or ""):
+        env["XLA_FLAGS"] = merged
+        applied["XLA_FLAGS"] = merged
+    if tcmalloc and "LD_PRELOAD" not in env:
+        for path in TCMALLOC_PATHS:
+            if os.path.exists(path):
+                env["LD_PRELOAD"] = path
+                applied["LD_PRELOAD"] = path
+                break
+    return applied

@@ -1,0 +1,109 @@
+"""repro.launch.env: gap-filling process-environment tuning.
+
+The one hard rule under test: ``apply_env`` never overrides a variable
+the operator set — defaults fill gaps only, down to XLA flag
+granularity — and is idempotent (a second call changes nothing).
+"""
+
+import os
+
+import pytest
+
+from repro.launch.env import (
+    ENV_DEFAULTS,
+    TCMALLOC_PATHS,
+    XLA_DEFAULT_FLAGS,
+    apply_env,
+    merge_xla_flags,
+)
+
+
+class TestMergeXlaFlags:
+    def test_empty_existing_gets_defaults(self):
+        assert merge_xla_flags(None) == " ".join(XLA_DEFAULT_FLAGS)
+        assert merge_xla_flags("") == " ".join(XLA_DEFAULT_FLAGS)
+
+    def test_user_flags_come_first_and_survive(self):
+        merged = merge_xla_flags("--xla_force_host_platform_device_count=8")
+        parts = merged.split()
+        assert parts[0] == "--xla_force_host_platform_device_count=8"
+        assert set(parts[1:]) == set(XLA_DEFAULT_FLAGS)
+
+    def test_user_value_wins_by_flag_name(self):
+        # The user explicitly disabled a flag we default to true: the
+        # default must be dropped entirely, not appended after it.
+        user = "--xla_cpu_multi_thread_eigen=false"
+        assert merge_xla_flags(user) == user
+
+    def test_merge_is_idempotent(self):
+        once = merge_xla_flags("--xla_foo=1")
+        assert merge_xla_flags(once) == once
+
+
+class TestApplyEnv:
+    def test_fills_gaps_in_empty_env(self):
+        env = {}
+        applied = apply_env(env, tcmalloc=False)
+        for key, val in ENV_DEFAULTS.items():
+            assert env[key] == val
+            assert applied[key] == val
+        assert env["XLA_FLAGS"] == " ".join(XLA_DEFAULT_FLAGS)
+
+    def test_never_overrides_user_set_vars(self):
+        user = {key: f"user-{key}" for key in ENV_DEFAULTS}
+        user["XLA_FLAGS"] = "--xla_cpu_multi_thread_eigen=false"
+        user["LD_PRELOAD"] = "/opt/mine/libmalloc.so"
+        env = dict(user)
+        applied = apply_env(env)
+        assert env == user
+        assert applied == {}
+
+    def test_partial_env_only_gaps_filled(self):
+        env = {"JAX_ENABLE_X64": "1"}  # operator wants x64: wins
+        applied = apply_env(env, tcmalloc=False)
+        assert env["JAX_ENABLE_X64"] == "1"
+        assert "JAX_ENABLE_X64" not in applied
+        assert env["TF_CPP_MIN_LOG_LEVEL"] == \
+            ENV_DEFAULTS["TF_CPP_MIN_LOG_LEVEL"]
+
+    def test_idempotent(self):
+        env = {}
+        apply_env(env, tcmalloc=False)
+        snapshot = dict(env)
+        assert apply_env(env, tcmalloc=False) == {}
+        assert env == snapshot
+
+    def test_tcmalloc_only_when_library_exists(self, monkeypatch):
+        env = {}
+        monkeypatch.setattr(os.path, "exists", lambda p: False)
+        apply_env(env)
+        assert "LD_PRELOAD" not in env
+        env = {}
+        monkeypatch.setattr(
+            os.path, "exists", lambda p: p == TCMALLOC_PATHS[1]
+        )
+        applied = apply_env(env)
+        assert env["LD_PRELOAD"] == TCMALLOC_PATHS[1]
+        assert applied["LD_PRELOAD"] == TCMALLOC_PATHS[1]
+
+    def test_returns_only_what_it_set(self):
+        env = {"TF_CPP_MIN_LOG_LEVEL": "0"}
+        applied = apply_env(env, tcmalloc=False)
+        assert "TF_CPP_MIN_LOG_LEVEL" not in applied
+        assert set(applied) <= set(ENV_DEFAULTS) | {"XLA_FLAGS"}
+
+    def test_importable_without_jax_side_effects(self):
+        # env.py must be safe to import before jax: importing it (done
+        # at module top) must not have pulled jax in transitively.
+        import importlib
+
+        import repro.launch.env as mod
+
+        importlib.reload(mod)
+        assert not hasattr(mod, "jax")
+
+    def test_real_environ_untouched_by_default_env_dict(self):
+        # Passing an explicit dict must leave os.environ alone.
+        before = dict(os.environ)
+        apply_env({}, tcmalloc=False)
+        assert dict(os.environ) == before

@@ -605,3 +605,115 @@ class TestEndToEndIsolation:
         assert st["submitted"] == 31
         assert st["batches"] == 2  # both buckets delivered
         assert st["nonfinite_lanes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler chaos (ISSUE 9): the micro-batch tier's fault sites under
+# the same REPRO_FAULT_SEED matrix — a faulted coalesced bucket walks
+# the retry/fallback ladder while every other caller's outcome stays
+# bit-identical to a fault-free run.
+# ---------------------------------------------------------------------------
+
+
+class TestSchedulerChaos:
+    @pytest.fixture(scope="class")
+    def index(self):
+        return _mixed_index()
+
+    def _sched_service(self, index):
+        svc = _service(index)
+        return svc, svc.scheduler(start=False)
+
+    def test_window_timer_stall_loses_no_queries(self, index):
+        """A stalled coalesce tick: queries stay queued, the stall is
+        counted, and the next healthy tick serves them bit-identically."""
+        svc, sched = self._sched_service(index)
+        queue = _mixed_queue(6)
+        solo = svc.submit(queue, top_k=5, min_join=4)
+        handles = [sched.submit_async(q, top_k=5, min_join=4)
+                   for q in queue]
+        stalls = 1 + SEED % 2
+        with inject_faults({"window_timer": stalls}) as plan:
+            for _ in range(stalls):
+                assert sched.run_pending() == 0
+                assert not any(h.done() for h in handles)
+            assert sched.run_pending() == len(queue)
+        assert plan.fired == {"window_timer": stalls}
+        assert sched.stats_.timer_stalls == stalls
+        assert all(h.outcome().ok for h in handles)
+        assert [_flat(h.result()) for h in handles] == \
+            [_flat(r) for r in solo]
+        svc.close()
+
+    def test_staging_fault_walks_ladder_neighbors_untouched(self, index):
+        """``staging`` dead for the whole window: the faulted coalesced
+        buckets descend the executor ladder to the reference rung, yet
+        every caller's results stay bit-identical and no caller sees a
+        failure."""
+        svc, sched = self._sched_service(index)
+        queue = _mixed_queue(6)
+        solo = svc.submit(queue, top_k=5, min_join=4)
+        handles = [sched.submit_async(q, top_k=5, min_join=4)
+                   for q in queue]
+        with inject_faults({"staging": "all"}, seed=SEED):
+            sched.run_pending()
+        outs = [h.outcome() for h in handles]
+        assert all(o.ok for o in outs)
+        assert {o.rung for o in outs} == {"reference"}
+        assert all(o.retries == FAST_RETRY.max_retries for o in outs)
+        assert all(o.fallbacks == 1 for o in outs)
+        assert [_flat(h.result()) for h in handles] == \
+            [_flat(r) for r in solo]
+        svc.close()
+
+    def test_staging_fault_single_bucket_isolated(self, index):
+        """One-shot ``staging`` fault: only the first coalesced bucket
+        pays a retry; the other bucket's callers serve clean at the
+        primary rung — no cross-caller blast radius."""
+        svc, sched = self._sched_service(index)
+        queue = _mixed_queue(6)  # 4 continuous + 2 discrete -> 2 buckets
+        solo = svc.submit(queue, top_k=5, min_join=4)
+        handles = [sched.submit_async(q, top_k=5, min_join=4)
+                   for q in queue]
+        with inject_faults({"staging": [0]}) as plan:
+            sched.run_pending()
+        assert plan.fired == {"staging": 1}
+        outs = [h.outcome() for h in handles]
+        assert all(o.ok and o.rung == "batched" for o in outs)
+        hit = [o for o in outs if o.retries]
+        clean = [o for o in outs if not o.retries]
+        assert hit and clean  # exactly one bucket paid the retry
+        assert all(o.fallbacks == 0 for o in outs)
+        assert [_flat(h.result()) for h in handles] == \
+            [_flat(r) for r in solo]
+        svc.close()
+
+    def test_ingest_midflight_fault_spares_inflight_window(self, index):
+        """A faulted ingest fails its *caller* (structured, at the
+        ``add`` call) while the window already in flight collects
+        bit-identically against its dispatch-time corpus — and the
+        index took nothing."""
+        svc, sched = self._sched_service(index)
+        queue = _mixed_queue(4)
+        solo = svc.submit(queue, top_k=5, min_join=4)
+        before_len = len(svc)
+        handles = [sched.submit_async(q, top_k=5, min_join=4)
+                   for q in queue]
+        sched.run_pending(collect=False)  # window in flight
+        with inject_faults({"ingest_midflight": "all"}):
+            with pytest.raises(InjectedFault):
+                sched.add("late", "k", "v", KEYS,
+                          Y.astype(np.float32), False)
+        assert len(svc) == before_len
+        sched.run_pending()  # collect the in-flight window
+        assert all(h.outcome().ok for h in handles)
+        assert [_flat(h.result()) for h in handles] == \
+            [_flat(r) for r in solo]
+        # the tier is not wedged: a clean ingest + query still works
+        sched.add("late", "k", "v", KEYS, Y.astype(np.float32), False)
+        assert len(svc) == before_len + 1
+        h = sched.submit_async(_train(Y.astype(np.float32), False),
+                               top_k=before_len + 1, min_join=4)
+        sched.run_pending()
+        assert "late" in [m.table for m, _, _ in h.result()]
+        svc.close()

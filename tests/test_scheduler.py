@@ -1,0 +1,441 @@
+"""Async serving tier tests: cross-caller micro-batch coalescing,
+priority classes, backpressure, double-buffered dispatch, telemetry.
+
+The load-bearing properties (ISSUE 9 acceptance):
+
+  (a) every query served through ``submit_async`` is bit-identical to a
+      solo ``submit`` at equal ``min_join``/``min_containment`` — under
+      concurrent callers, under coalescing, and across a mid-flight
+      ingest;
+  (b) coalesced buckets mint zero new compiled programs versus the same
+      queries through the synchronous surface (``compile_count``), and
+      hit the very plan-cache entries solo traffic minted
+      (``coalesced_hits``);
+  (c) the double-buffered overlap span — stage + upload + dispatch of
+      window N+1 while window N is in flight, then both collects — runs
+      free of implicit transfers under ``jax.transfer_guard
+      ("disallow")`` (the ``transfer_guard``-marked test).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.discovery import (
+    DiscoveryService,
+    MicroBatchScheduler,
+    SchedulerBackpressure,
+    coalesce_queries,
+)
+from repro.core.discovery.scheduler import _LatencyWindow, SchedulerStats
+from repro.core.sketch import build_sketch
+
+RNG = np.random.default_rng(17)
+N_ROWS = 400
+SK_N = 64
+KEY_SPACE = 2000
+
+
+def _keys(rng):
+    return rng.choice(KEY_SPACE, size=N_ROWS, replace=False).astype(
+        np.uint64
+    )
+
+
+def _corpus_service(seed=0, n_cont=5, n_disc=2, **kwargs):
+    rng = np.random.default_rng(seed)
+    svc = DiscoveryService(n=SK_N, **kwargs)
+    for i in range(n_cont):
+        svc.add(f"tc{i}", "k", "v", _keys(rng),
+                rng.normal(size=N_ROWS).astype(np.float32))
+    for i in range(n_disc):
+        svc.add(f"td{i}", "k", "v", _keys(rng),
+                rng.integers(0, 5, size=N_ROWS), True)
+    return svc
+
+
+def _query(rng, disc=False):
+    vals = rng.integers(0, 4, size=N_ROWS) if disc \
+        else rng.normal(size=N_ROWS).astype(np.float32)
+    return build_sketch(_keys(rng), vals, n=SK_N, side="train",
+                        value_is_discrete=disc)
+
+
+def _queries(seed, q, disc_every=3):
+    rng = np.random.default_rng(seed)
+    return [_query(rng, disc=bool(disc_every and i % disc_every == 0))
+            for i in range(q)]
+
+
+@pytest.fixture(scope="module")
+def svc():
+    service = _corpus_service(seed=3)
+    yield service
+    service.close()
+
+
+class TestHandles:
+    def test_single_sketch_single_handle(self, svc):
+        rng = np.random.default_rng(40)
+        sk = _query(rng)
+        solo = svc.submit([sk])[0]
+        handle = svc.submit_async(sk)
+        assert handle.result(timeout=30) == solo
+        out = handle.outcome()
+        assert out.ok and out.rung == "batched"
+        assert handle.done()
+        assert handle.done_at >= handle.dispatched_at >= handle.enqueued_at
+
+    def test_list_of_sketches_list_of_handles(self, svc):
+        qs = _queries(41, 5)
+        solo = [svc.submit([q])[0] for q in qs]
+        handles = svc.submit_async(qs)
+        assert len(handles) == len(qs)
+        got = [h.result(timeout=30) for h in handles]
+        assert got == solo
+
+    def test_result_timeout(self):
+        svc = _corpus_service(seed=5, n_cont=2, n_disc=0)
+        sched = svc.scheduler(start=False)  # nothing drives the loop
+        handle = sched.submit_async(_query(np.random.default_rng(1)))
+        with pytest.raises(TimeoutError):
+            handle.result(timeout=0.01)
+        sched.close()
+        assert handle.done()  # close() drains
+        svc.close()
+
+    def test_bad_args_raise_eagerly(self, svc):
+        sk = _query(np.random.default_rng(2))
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit_async(sk, priority="urgent")
+        with pytest.raises(ValueError, match="rank"):
+            svc.submit_async(sk, rank="mae")
+
+
+class TestCoalescing:
+    def test_concurrent_callers_bit_identical(self):
+        """8 threads hitting one window: every caller's results equal
+        its solo submit, and the traffic actually coalesced."""
+        svc = _corpus_service(seed=7)
+        per_caller = {c: _queries(100 + c, 3) for c in range(8)}
+        solo = {c: [svc.submit([q])[0] for q in qs]
+                for c, qs in per_caller.items()}
+        sched = svc.scheduler(window_ms=25.0)
+        barrier = threading.Barrier(8)
+        got = {}
+
+        def caller(c):
+            barrier.wait()
+            handles = svc.submit_async(per_caller[c])
+            got[c] = [h.result(timeout=60) for h in handles]
+
+        threads = [threading.Thread(target=caller, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert got == solo
+        st = sched.stats_
+        assert st.coalesced_queries == 24
+        # 24 queries over >= 2 signatures could pack into as few as 2
+        # buckets; "coalesced at all" = strictly fewer buckets than a
+        # per-caller dispatch would pay (8 callers x 2 dtypes).
+        assert st.dispatched_buckets < 16
+        assert st.coalesce_ratio > 1.0
+        pc = svc.plan_cache
+        assert pc.coalesced_hits + pc.coalesced_misses > 0
+        svc.close()
+
+    def test_mixed_priorities_share_buckets_and_programs(self):
+        """Interactive and batch queries of one signature coalesce into
+        the same bucket (batch rides the interactive program) and both
+        resolve bit-identically."""
+        svc = _corpus_service(seed=9, n_disc=0)
+        qs = _queries(55, 6, disc_every=0)
+        solo = [svc.submit([q])[0] for q in qs]
+        sched = svc.scheduler(start=False)
+        hi = [sched.submit_async(q, priority="interactive")
+              for q in qs[:3]]
+        hb = [sched.submit_async(q, priority="batch") for q in qs[3:]]
+        sched.run_pending()
+        assert [h.result() for h in hi + hb] == solo
+        # one signature, six queries -> exactly one dispatched bucket
+        assert sched.stats_.dispatched_buckets == 1
+        assert sched.stats_.coalesce_ratio == 6.0
+        assert sched.stats_.queries == {"interactive": 3, "batch": 3}
+        svc.close()
+
+    def test_zero_new_programs_vs_solo(self):
+        """The compile-count contract: coalesced windows reuse exactly
+        the programs the synchronous surface compiles for the same
+        queries — zero new programs, plan-cache entries shared."""
+        from repro.core.discovery import compile_count
+
+        svc = _corpus_service(seed=11)
+        qs = _queries(60, 8)
+        # Solo warm: the sync path admits this very queue (same
+        # signatures, same pow-2 Q-buckets).
+        solo = svc.submit(qs)
+        svc.submit(qs)  # steady state: replans nothing
+        before = compile_count()
+        cache_misses = svc.plan_cache.misses
+        sched = svc.scheduler(start=False)
+        handles = [sched.submit_async(q) for q in qs]
+        sched.run_pending()
+        assert [h.result() for h in handles] == solo
+        assert compile_count() == before
+        assert svc.plan_cache.misses == cache_misses
+        assert svc.plan_cache.coalesced_hits > 0
+        svc.close()
+
+    def test_coalesce_priority_ordering_unit(self):
+        """coalesce_queries: interactive fills earlier chunks on
+        overflow; buckets order by best priority, stable by arrival."""
+        entries = [(i, ("sig_a",), 1 if i < 3 else 0)
+                   for i in range(6)]
+        buckets = coalesce_queries(entries, cap=4)
+        # 6 queries, cap 4 -> chunks of 4 + 2; interactive (3..5) first
+        assert buckets[0].chunk == (3, 4, 5, 0)
+        assert buckets[0].priority == 0
+        assert buckets[1].chunk == (1, 2)
+        assert buckets[1].priority == 1
+        assert [b.q_bucket for b in buckets] == [4, 2]
+
+    def test_coalesce_single_priority_is_arrival_order(self):
+        entries = [(i, ("s", i % 2), 0) for i in range(5)]
+        buckets = coalesce_queries(entries, cap=64)
+        assert [b.chunk for b in buckets] == [(0, 2, 4), (1, 3)]
+
+
+class TestBackpressure:
+    def test_full_queue_refuses(self):
+        svc = _corpus_service(seed=13, n_cont=2, n_disc=0)
+        sched = svc.scheduler(start=False, max_depth=4)
+        qs = _queries(70, 6, disc_every=0)
+        for q in qs[:4]:
+            sched.submit_async(q)
+        with pytest.raises(SchedulerBackpressure):
+            sched.submit_async(qs[4])
+        assert sched.stats_.rejected["interactive"] == 1
+        # the other class's queue is independent
+        hb = sched.submit_async(qs[4], priority="batch")
+        # all-or-nothing: a 2-query submit into 0 free slots enqueues
+        # nothing (the earlier refusal left depth at 4)
+        with pytest.raises(SchedulerBackpressure):
+            sched.submit_async(qs[4:6])
+        assert sum(len(q) for q in sched._queues.values()) == 5
+        sched.run_pending()
+        assert hb.done()
+        sched.close()
+        svc.close()
+
+
+class TestDoubleBuffer:
+    def test_pipeline_holds_and_overlaps(self):
+        """Window N+1 dispatches while window N is in flight; both
+        collect bit-identically (the host-visible half of the
+        double-buffer contract; the no-implicit-transfer half is the
+        transfer_guard test below)."""
+        svc = _corpus_service(seed=15)
+        qsA, qsB = _queries(80, 4), _queries(81, 4)
+        solo = [svc.submit([q])[0] for q in qsA + qsB]
+        sched = svc.scheduler(start=False, pipeline_depth=2)
+        hA = [sched.submit_async(q) for q in qsA]
+        sched.run_pending(collect=False)
+        assert len(sched._inflight) == 1
+        assert not any(h.done() for h in hA)
+        hB = [sched.submit_async(q) for q in qsB]
+        sched.run_pending()  # dispatch B (overlap), then drain both
+        assert sched.stats_.overlapped_windows == 1
+        assert [h.result() for h in hA + hB] == solo
+        assert not sched._inflight
+        svc.close()
+
+    def test_midflight_ingest_bit_identity(self):
+        """An ingest landing between a window's dispatch and collect
+        must not change that window's results (plan leases + captured
+        corpus size); the next window sees the grown corpus."""
+        rng = np.random.default_rng(90)
+        svc = _corpus_service(seed=17)
+        qs = _queries(91, 4)
+        solo_before = [svc.submit([q])[0] for q in qs]
+        sched = svc.scheduler(start=False)
+        handles = [sched.submit_async(q) for q in qs]
+        sched.run_pending(collect=False)  # in flight
+        sched.add("late", "k", "v", _keys(rng),
+                  rng.normal(size=N_ROWS).astype(np.float32))
+        sched.run_pending()  # collect the pre-ingest window
+        assert [h.result() for h in handles] == solo_before
+        assert all(h.outcome().ok for h in handles)
+        # post-ingest traffic ranks against the grown corpus
+        wide = svc.submit([qs[1]], top_k=len(svc))[0]
+        assert {m.table for m, _, _ in wide} >= {"late"}
+        svc.close()
+
+
+@pytest.mark.transfer_guard
+class TestSchedulerTransferGuard:
+    def test_overlap_span_no_implicit_transfers(self):
+        """Pin the double-buffered overlap span: with everything warm,
+        stage + upload + dispatch of window B while window A is in
+        flight — and both collects — run under ``jax.transfer_guard
+        ("disallow")``.  The H2D legs are explicit ``device_put``
+        (executors.upload_trains) and the only D2H is each window's
+        final collect; any implicit transfer sneaking into the span
+        raises here."""
+        svc = _corpus_service(seed=19)
+        qsA, qsB = _queries(85, 4), _queries(86, 4)
+        # Warm: programs for both windows' shapes, plan staging,
+        # hint ladders, and the stage_min_join scalar cache.
+        solo = svc.submit(qsA) + svc.submit(qsB)
+        svc.submit(qsA)
+        sched = svc.scheduler(start=False, pipeline_depth=2,
+                              window_ms=0.0)
+        hA = [sched.submit_async(q) for q in qsA]
+        sched.run_pending(collect=False)
+        hB = [sched.submit_async(q) for q in qsB]
+        with jax.transfer_guard("disallow"):
+            sched.run_pending()
+        assert sched.stats_.overlapped_windows == 1
+        assert [h.result() for h in hA + hB] == solo
+        svc.close()
+
+
+class TestTelemetry:
+    def test_latency_window_quantiles(self):
+        w = _LatencyWindow(cap=16)
+        assert w.quantiles() is None
+        for ms in range(1, 101):
+            w.record(ms / 1e3)
+        # bounded: only the last 16 samples (85..100 ms) survive
+        assert len(w) == 16
+        q = w.quantiles()
+        assert q["p50"] == pytest.approx(92.5, abs=0.01)
+        assert q["p50"] <= q["p95"] <= q["p99"] <= 100.0
+
+    def test_stats_shape_and_ratio(self):
+        st = SchedulerStats()
+        assert st.coalesce_ratio is None
+        st.coalesced_queries, st.dispatched_buckets = 12, 3
+        d = st.as_dict()
+        assert d["coalesce_ratio"] == 4.0
+        assert set(d["per_class"]) == {"interactive", "batch"}
+        assert 0.0 <= d["occupancy"] <= 1.0
+
+    def test_service_stats_surface(self):
+        svc = _corpus_service(seed=21, n_cont=2, n_disc=0)
+        assert svc.stats()["scheduler"] is None
+        handle = svc.submit_async(_query(np.random.default_rng(8)))
+        handle.wait(timeout=30)
+        tele = svc.stats()["scheduler"]
+        assert tele["per_class"]["interactive"]["queries"] == 1
+        assert tele["per_class"]["interactive"]["e2e_ms"]["p50"] > 0
+        assert tele["windows"] >= 1
+        svc.close()
+
+    def test_queue_wait_recorded_per_class(self):
+        svc = _corpus_service(seed=23, n_cont=2, n_disc=0)
+        sched = svc.scheduler(start=False)
+        h1 = sched.submit_async(_query(np.random.default_rng(9)))
+        time.sleep(0.01)
+        sched.run_pending()
+        q = sched.stats_.queue_wait["interactive"].quantiles()
+        assert q["p50"] >= 10.0  # waited at least the sleep
+        assert h1.dispatched_at - h1.enqueued_at >= 0.01
+        svc.close()
+
+
+class TestLifecycle:
+    def test_close_drains_and_refuses(self):
+        svc = _corpus_service(seed=25, n_cont=2, n_disc=0)
+        qs = _queries(95, 3, disc_every=0)
+        handles = svc.submit_async(qs)
+        svc.close()
+        assert all(h.done() for h in handles)
+        assert all(h.outcome().ok for h in handles)
+        # a fresh scheduler can be attached after close
+        h = svc.submit_async(qs[0])
+        assert h.outcome(timeout=30).ok
+        svc.close()
+
+    def test_submit_after_close_raises(self):
+        svc = _corpus_service(seed=27, n_cont=2, n_disc=0)
+        sched = svc.scheduler()
+        sched.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit_async(_query(np.random.default_rng(3)))
+        svc.close()
+
+    def test_flush_serves_everything(self):
+        svc = _corpus_service(seed=29, n_cont=2, n_disc=0)
+        sched = svc.scheduler(start=False)
+        handles = [sched.submit_async(q)
+                   for q in _queries(96, 4, disc_every=0)]
+        sched.flush()
+        assert all(h.done() for h in handles)
+        svc.close()
+
+    def test_scheduler_reconfigure_rejected(self):
+        svc = _corpus_service(seed=31, n_cont=2, n_disc=0)
+        svc.scheduler(start=False)
+        with pytest.raises(ValueError, match="already attached"):
+            svc.scheduler(window_ms=50.0)
+        svc.close()
+
+    def test_concurrent_first_use_attaches_one_scheduler(self):
+        """Racing first-time submit_async calls must share ONE
+        scheduler (one loop thread, one telemetry stream) — a
+        per-caller orphan would serve correctly but leak threads and
+        fragment stats."""
+        svc = _corpus_service(seed=32, n_cont=2, n_disc=0)
+        qs = _queries(99, 8, disc_every=0)
+        barrier = threading.Barrier(8)
+        handles = [None] * 8
+        seen = [None] * 8
+
+        def caller(c):
+            barrier.wait()
+            handles[c] = svc.submit_async(qs[c])
+            seen[c] = svc._scheduler
+
+        threads = [threading.Thread(target=caller, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(h.outcome(timeout=60).ok for h in handles)
+        assert len({id(s) for s in seen}) == 1
+        st = svc._scheduler.stats_
+        assert st.coalesced_queries == 8
+        assert sum(st.queries.values()) == 8
+        svc.close()
+
+
+class TestIsolation:
+    def test_quarantine_isolated_from_neighbors(self):
+        """An invalid sketch in a coalesced window is quarantined; the
+        callers sharing its window serve bit-identically."""
+        svc = _corpus_service(seed=33, n_disc=0)
+        qs = _queries(97, 4, disc_every=0)
+        solo = [svc.submit([q])[0] for q in qs]
+        bad = build_sketch(
+            _keys(np.random.default_rng(4)),
+            np.zeros(N_ROWS, np.float32), n=SK_N, side="train",
+        )
+        bad.mask[:] = False  # empty sketch: admission rejects it
+        sched = svc.scheduler(start=False)
+        handles = [sched.submit_async(q) for q in qs[:2]]
+        hbad = sched.submit_async(bad)
+        handles += [sched.submit_async(q) for q in qs[2:]]
+        sched.run_pending()
+        assert hbad.outcome().status == "quarantined"
+        assert hbad.result() is None
+        assert [h.result() for h in handles] == solo
+        assert all(h.outcome().ok for h in handles)
+        svc.close()
