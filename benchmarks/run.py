@@ -18,7 +18,7 @@ from repro.launch.env import apply_env
 
 apply_env()  # gap-fill allocator/XLA/x64 tuning before jax loads
 
-from benchmarks import discovery_scale, paper_tables  # noqa: E402
+from benchmarks import discovery_scale, paper_tables, roofline  # noqa: E402
 
 BENCHES = [
     ("v_b1", paper_tables.bench_v_b1_full_join_estimators),
@@ -34,6 +34,7 @@ BENCHES = [
     ("discovery_tiered", discovery_scale.bench_tiered_containment_gate),
     ("discovery_microbatch", discovery_scale.bench_service_microbatch),
     ("kernels", discovery_scale.bench_kernel_hot_spots),
+    ("roofline", roofline.bench_kernel_roofline),
 ]
 
 # Rows retired from the tracked snapshot: pruned on every merge so a

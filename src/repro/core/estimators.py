@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma
 
-from repro.kernels.knn_stats.ops import K_MAX, knn_with_counts
+from repro.kernels.knn_stats.ops import K_MAX, knn_radius_counts
 from repro.kernels.pairwise_cheb.ops import pairwise_cheb
 
 __all__ = [
@@ -180,9 +180,10 @@ def ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     if impl == "fused":
-        # Radius + counts in one streaming pass (single tile sweep for
-        # every sketch-sized sample — see knn_with_counts).
-        _, _, c = knn_with_counts(xf, yf, mask, k=k, mode="joint")
+        # Radius + counts in one streaming pass; on TPU this is a single
+        # pallas_call (see knn_radius_counts), off-TPU a single tile
+        # sweep for every sketch-sized sample.
+        _, _, c = knn_radius_counts(xf, yf, mask, k=k, mode="joint")
         return _ksg_tail(c.x_lt, c.y_lt, mask, M, k)
     eye = jnp.eye(x.shape[0], dtype=bool)
     # Materialized: DX/DY carry +inf at invalid pairs, DJ also fences the
@@ -216,14 +217,13 @@ def mixed_ksg_mi(x: jax.Array, y: jax.Array, mask: jax.Array, k: int = 3,
     with counts *including* the point itself, matching the reference
     implementation (query_ball_point semantics).  The fused path gets
     the ρ radii plus all five tie/ball counts from one fused
-    ``knn_with_counts`` pass.
+    ``knn_radius_counts`` pass.
     """
     xf = x.astype(jnp.float32)
     yf = y.astype(jnp.float32)
     M = jnp.sum(mask)
     if impl == "fused":
-        knn, _, c = knn_with_counts(xf, yf, mask, k=k, mode="joint")
-        rho = knn[:, k - 1]
+        rho, _, c = knn_radius_counts(xf, yf, mask, k=k, mode="joint")
         return _mixed_tail(
             rho, c.j_eq + 1, c.x_eq + 1, c.y_eq + 1,
             c.x_lt + 1, c.y_lt + 1, mask, M, k,
@@ -272,7 +272,7 @@ def dc_ksg_mi(
     The fused path streams within-class kNN in class mode, so the seed's
     full P×P sort of the same-class distance matrix disappears; the
     radius extraction and the m_i count ride the same single fused
-    sweep (``knn_with_counts``).  ``x_codes`` must be exactly
+    sweep (``knn_radius_counts``).  ``x_codes`` must be exactly
     float32-representable (dense ranks are; raw uint32 codes above 2²⁴
     may collide — rank them first).
     """
@@ -291,15 +291,13 @@ def dc_ksg_mi(
     if impl == "fused":
         cf = x_codes.astype(jnp.float32)
         m_i32 = mask.astype(jnp.int32)
-
-        def _dc_radius(knn, same_cnt):
-            n_x_r = same_cnt + m_i32  # includes self
-            idx = jnp.clip(jnp.minimum(kk, n_x_r - 1) - 1, 0, k_buf - 1)
-            return jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
-
-        _, same_cnt, counts = knn_with_counts(
+        # The clipped within-class radius extraction is built into the
+        # fused kernel (its class-mode rule is exactly the _dc_radius
+        # the two-op path passed as a callable), so the whole
+        # radius+count pass is one pallas_call on TPU.
+        _, same_cnt, counts = knn_radius_counts(
             cf, yf, mask, k=k, k_max=k_buf, mode="class", which="y",
-            radius=_dc_radius,
+            kk=kk,
         )
         n_x = same_cnt + m_i32
         k_eff = jnp.minimum(kk, n_x - 1)

@@ -1,0 +1,232 @@
+"""Block-size autotuner with a persistent cross-process cache.
+
+Every Pallas entry in this repo has a tile-width knob (``block`` /
+``block_q``/``block_k``) that was frozen at a hand-picked constant at
+seed time.  The right value depends on the backend (TPU VMEM vs. CPU
+cache hierarchy), the dtype, and the padded problem size, so this
+module sweeps the candidate ladder once per (kernel, backend, dtype,
+shape-bucket) key, persists the winner to a JSON cache, and reuses it
+across processes.
+
+Determinism contract — the part the serving tier relies on:
+
+  * Within one process, :func:`resolve` is memoized: the same key always
+    returns the same block, so a jitted scorer program traced twice sees
+    one compiled-program identity (the ``compile_count`` bounds in the
+    service/scheduler tests stay exact).
+  * ``REPRO_AUTOTUNE=off`` (CI) short-circuits to the caller's default —
+    byte-for-byte the pre-autotuner behavior, no file I/O at all.
+  * ``REPRO_AUTOTUNE=on`` sweeps on a cache miss and persists the
+    winner; every later process (any mode but ``off``) reads it back.
+  * Unset (the default) never sweeps: cache hit or caller default.  A
+    corrupt/stale/unreadable cache degrades to the default with a
+    warning, never an exception.
+
+The cache lives at ``results/autotune_cache.json`` relative to the
+working directory; ``REPRO_AUTOTUNE_CACHE`` overrides the path (CI's
+tuner job points it at a tmpdir).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+from typing import Callable, Iterable, Sequence
+
+__all__ = [
+    "LADDER",
+    "cache_path",
+    "clear_memo",
+    "mode",
+    "resolve",
+    "shape_bucket",
+    "sweep",
+]
+
+# Candidate tile widths.  8 sublanes x 128 lanes is the minimum f32 TPU
+# tile, and 1024 is the largest width whose (block, block) distance tile
+# still fits VMEM comfortably at f32.
+LADDER: tuple[int, ...] = (64, 128, 256, 512, 1024)
+
+_ENV_MODE = "REPRO_AUTOTUNE"
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_CACHE_VERSION = 1
+
+# (kernel, backend, dtype, bucket) -> chosen block.  Process-lifetime:
+# this is what pins compiled-program identity.
+_memo: dict[tuple[str, str, str, int], int] = {}
+_cache_loaded: dict[str, dict] | None = None
+_cache_loaded_from: Path | None = None
+
+
+def mode() -> str:
+    """Normalized tuning mode: "off", "on", or "auto" (cache-read only)."""
+    raw = os.environ.get(_ENV_MODE, "").strip().lower()
+    if raw in ("off", "0", "false", "disabled"):
+        return "off"
+    if raw in ("on", "1", "true", "enabled"):
+        return "on"
+    return "auto"
+
+
+def cache_path() -> Path:
+    override = os.environ.get(_ENV_CACHE, "").strip()
+    if override:
+        return Path(override)
+    return Path("results") / "autotune_cache.json"
+
+
+def shape_bucket(n: int) -> int:
+    """Pow-2 bucket (>= 64) a padded problem size falls into — the cache
+    granularity, matching the pow-2 padding ladders used everywhere in
+    the serving tier."""
+    b = 64
+    while b < n:
+        b *= 2
+    return b
+
+
+def clear_memo() -> None:
+    """Test hook: drop the per-process memo and the loaded cache."""
+    global _cache_loaded, _cache_loaded_from
+    _memo.clear()
+    _cache_loaded = None
+    _cache_loaded_from = None
+
+
+def _key_str(kernel: str, backend: str, dtype: str, bucket: int) -> str:
+    return f"{kernel}|{backend}|{dtype}|{bucket}"
+
+
+def _load_cache() -> dict[str, dict]:
+    """Entries of the on-disk cache; {} (with one warning) if corrupt."""
+    global _cache_loaded, _cache_loaded_from
+    path = cache_path()
+    if _cache_loaded is not None and _cache_loaded_from == path:
+        return _cache_loaded
+    entries: dict[str, dict] = {}
+    if path.exists():
+        try:
+            raw = json.loads(path.read_text())
+            if not isinstance(raw, dict) or raw.get("version") != _CACHE_VERSION:
+                raise ValueError(f"unsupported cache layout: {type(raw).__name__}")
+            got = raw.get("entries")
+            if not isinstance(got, dict):
+                raise ValueError("missing 'entries' table")
+            entries = got
+        except (ValueError, OSError) as e:
+            warnings.warn(
+                f"autotune cache {path} is corrupt or stale ({e}); "
+                "falling back to built-in block defaults",
+                stacklevel=3,
+            )
+            entries = {}
+    _cache_loaded = entries
+    _cache_loaded_from = path
+    return entries
+
+
+def _store(key: str, entry: dict) -> None:
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        entries = dict(_load_cache())
+        entries[key] = entry
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(
+            json.dumps({"version": _CACHE_VERSION, "entries": entries},
+                       indent=2, sort_keys=True)
+        )
+        tmp.replace(path)
+        global _cache_loaded, _cache_loaded_from
+        _cache_loaded = entries
+        _cache_loaded_from = path
+    except OSError as e:
+        warnings.warn(f"could not persist autotune cache to {path}: {e}",
+                      stacklevel=3)
+
+
+def _cached_block(key: str, candidates: Sequence[int]) -> int | None:
+    entry = _load_cache().get(key)
+    if entry is None:
+        return None
+    block = entry.get("block") if isinstance(entry, dict) else None
+    if not isinstance(block, int) or block not in candidates:
+        warnings.warn(
+            f"autotune cache entry {key!r} holds an invalid block "
+            f"{block!r} (not in the candidate ladder); using the default",
+            stacklevel=3,
+        )
+        return None
+    return block
+
+
+def sweep(
+    measure: Callable[[int], float],
+    candidates: Iterable[int],
+) -> tuple[int, dict[str, float]]:
+    """Run ``measure(block) -> seconds`` over the ladder; return the
+    winner and the per-candidate timings.  Candidates that raise are
+    skipped; ties break toward the smaller block (deterministic)."""
+    results: dict[str, float] = {}
+    best: tuple[float, int] | None = None
+    for c in candidates:
+        try:
+            t = float(measure(c))
+        except Exception as e:  # an unservable block is not an error
+            results[str(c)] = float("inf")
+            warnings.warn(f"autotune candidate block={c} failed: {e}",
+                          stacklevel=2)
+            continue
+        results[str(c)] = t
+        if best is None or (t, c) < best:
+            best = (t, c)
+    if best is None:
+        raise RuntimeError("every autotune candidate failed")
+    return best[1], results
+
+
+def resolve(
+    kernel: str,
+    *,
+    shape: int,
+    default: int,
+    backend: str | None = None,
+    dtype: str = "float32",
+    candidates: Sequence[int] = LADDER,
+    measure: Callable[[int, int], Callable[[int], float]] | None = None,
+) -> int:
+    """Resolve the tile width for one kernel-family invocation.
+
+    ``shape`` is the padded problem size (bucketed pow-2); ``measure``
+    is a factory ``(bucket, default) -> (block -> seconds)`` invoked
+    only in ``on`` mode on a cache miss.  Always deterministic per
+    process (memoized), and exactly ``default`` when tuning is off,
+    the cache misses in auto mode, or the cache is corrupt.
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    bucket = shape_bucket(shape)
+    memo_key = (kernel, backend, dtype, bucket)
+    hit = _memo.get(memo_key)
+    if hit is not None:
+        return hit
+    m = mode()
+    block = default
+    if m != "off":
+        key = _key_str(kernel, backend, dtype, bucket)
+        cached = _cached_block(key, candidates)
+        if cached is not None:
+            block = cached
+        elif m == "on" and measure is not None:
+            winner, timings = sweep(measure(bucket, default), candidates)
+            _store(key, {"block": winner, "seconds": timings,
+                         "default": default})
+            block = winner
+    _memo[memo_key] = block
+    return block

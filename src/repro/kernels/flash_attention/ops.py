@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.flash_attention.kernel import flash_attention_padded
 from repro.kernels.flash_attention.ref import chunked_attention
 
@@ -21,9 +22,34 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(
-    jax.jit, static_argnames=("scale", "causal", "use_kernel", "block_q", "block_k")
-)
+def _measure_factory(bucket: int, default: int):
+    import time as _time
+
+    B, Hq, Hkv, D = 1, 4, 2, 128
+    S = bucket
+    base = jnp.arange(B * Hq * S * D, dtype=jnp.float32)
+    q = jnp.sin(base).reshape(B, Hq, S, D) * 0.05
+    kv = jnp.cos(jnp.arange(B * Hkv * S * D, dtype=jnp.float32))
+    k = kv.reshape(B, Hkv, S, D) * 0.05
+    v = (kv * 0.5).reshape(B, Hkv, S, D)
+
+    def measure(blk: int) -> float:
+        def run():
+            jax.block_until_ready(
+                attention(q, k, v, use_kernel=True, block_q=blk, block_k=blk)
+            )
+
+        run()  # compile outside the timed reps
+        best = float("inf")
+        for _ in range(3):
+            t0 = _time.perf_counter()
+            run()
+            best = min(best, _time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
 def attention(
     q: jax.Array,
     k: jax.Array,
@@ -32,11 +58,47 @@ def attention(
     scale: float | None = None,
     causal: bool = True,
     use_kernel: bool = True,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
     """Causal GQA attention, (B, Hq, S, Dk) x (B, Hkv, S, Dk), (B, Hkv, S, Dv)
-    -> (B, Hq, S, Dv).  Distinct Dk/Dv supported (MLA)."""
+    -> (B, Hq, S, Dv).  Distinct Dk/Dv supported (MLA).
+
+    ``block_q``/``block_k`` default to one autotuned tile width per
+    (backend, sequence bucket) — the historical 512 whenever tuning is
+    off or the cache has no winner (``kernels.autotune``).
+    """
+    if block_q is None or block_k is None:
+        tuned = (
+            autotune.resolve(
+                "flash_attention", shape=q.shape[2], default=512,
+                measure=_measure_factory,
+            )
+            if use_kernel
+            else 512  # the chunked-jnp fallback never tiles on blocks
+        )
+        block_q = tuned if block_q is None else block_q
+        block_k = tuned if block_k is None else block_k
+    return _attention_impl(
+        q, k, v, scale=scale, causal=causal, use_kernel=use_kernel,
+        block_q=block_q, block_k=block_k,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "causal", "use_kernel", "block_q", "block_k")
+)
+def _attention_impl(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None,
+    causal: bool,
+    use_kernel: bool,
+    block_q: int,
+    block_k: int,
+) -> jax.Array:
     B, Hq, S, Dk = q.shape
     Dv = v.shape[-1]
     if scale is None:

@@ -195,6 +195,180 @@ def _counts_kernel_y(yc_ref, yr_ref, mc_ref, mr_ref, rc_ref,
         cnt_ref[...] = cnt_scr[...]
 
 
+def _extract_order_stat(d_sel, t, T):
+    """t-th smallest entry per row (0-based, duplicates counted).
+
+    ``t`` is a (bm, 1) int32 per-row target; ``T`` is its static upper
+    bound (t <= T-1).  Count-based run removal: each iteration consumes
+    one entire run of equal minima and advances ``done`` by the run's
+    multiplicity, so the value landed on for any t in [done, done+c) is
+    exactly the t-th lane of the sorted buffer the two-op path reads —
+    bit-identical, including tie handling and the +inf tail of rows with
+    fewer than t+1 selectable neighbors.
+    """
+    bm = d_sel.shape[0]
+    inf = jnp.float32(jnp.inf)
+    buf = d_sel
+    r = jnp.full((bm, 1), inf, jnp.float32)
+    done = jnp.zeros((bm, 1), jnp.int32)
+    for _ in range(T):
+        mn = jnp.min(buf, axis=1, keepdims=True)
+        eq = buf == mn
+        c = jnp.sum(eq.astype(jnp.int32), axis=1, keepdims=True)
+        take = (done <= t) & (t < done + c)
+        r = jnp.where(take, mn, r)
+        buf = jnp.where(eq, inf, buf)
+        done = done + c
+    return r
+
+
+# Output lane layout of the fused radius+count kernel: one (P, LANES)
+# float32 array carries every statistic the estimators consume.
+RC_LANE_R = 0        # per-row radius (k-th / class-clipped extraction)
+RC_LANE_CNT = 1      # class-mode within-class neighborhood size
+RC_LANE_COUNTS = 2   # lanes 2..6: x_lt, y_lt, x_eq, y_eq, j_eq
+
+
+def _class_target(cnt_f, mc, kk, kb):
+    """Per-row buffer lane of the DC-KSG clipped radius (int32 (bm, 1)).
+
+    Mirrors estimators' `_dc_radius`: n_x includes self, the budget is
+    min(kk, n_x - 1), and the lane is clipped into the kb-wide buffer.
+    """
+    n_x = cnt_f.astype(jnp.int32) + (mc > 0).astype(jnp.int32)
+    return jnp.clip(jnp.minimum(kk, n_x - 1) - 1, 0, kb - 1)
+
+
+def _count_lanes(dx, dy, vo, r, which, bm):
+    """Ball/tie count update, placed on the output lanes [2, 7)."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+
+    def _acc(cond):
+        return jnp.sum((vo & cond).astype(jnp.float32), axis=1, keepdims=True)
+
+    upd = jnp.where(lane == RC_LANE_COUNTS + 1, _acc(dy < r), 0.0)
+    if which == "all":
+        upd = (
+            upd
+            + jnp.where(lane == RC_LANE_COUNTS + 0, _acc(dx < r), 0.0)
+            + jnp.where(lane == RC_LANE_COUNTS + 2, _acc(dx <= 0.0), 0.0)
+            + jnp.where(lane == RC_LANE_COUNTS + 3, _acc(dy <= 0.0), 0.0)
+            + jnp.where(
+                lane == RC_LANE_COUNTS + 4,
+                _acc(jnp.maximum(dx, dy) <= 0.0),
+                0.0,
+            )
+        )
+    return upd
+
+
+def _radius_counts_kernel_1(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref,
+                            out_ref, *, bm: int, bn: int, k: int, kb: int,
+                            kk: int, mode: str, which: str):
+    """Single-tile fused radius+count (grid (1, 1), padded P == block).
+
+    The production sketch shape: the whole padded sample is one
+    VMEM-resident tile, so distances are formed exactly once and shared
+    by the radius extraction and the count sweep — no second pass, no
+    scratch, no intermediate HBM round trip.
+    """
+    dy = jnp.abs(yc_ref[...] - yr_ref[...])  # (bm, bn)
+    valid = (mc_ref[...] > 0) & (mr_ref[...] > 0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    vo = valid & (rows != cols)
+    inf = jnp.float32(jnp.inf)
+    dx = None
+    if mode == "joint":
+        dx = jnp.abs(xc_ref[...] - xr_ref[...])
+        d_sel = jnp.where(vo, jnp.maximum(dx, dy), inf)
+        cnt = jnp.zeros((bm, 1), jnp.float32)
+        t = jnp.full((bm, 1), k - 1, jnp.int32)
+        T = k
+    else:  # class: neighborhoods restricted to equal x codes
+        sel = vo & (xc_ref[...] == xr_ref[...])
+        d_sel = jnp.where(sel, dy, inf)
+        cnt = jnp.sum(sel.astype(jnp.float32), axis=1, keepdims=True)
+        t = _class_target(cnt, mc_ref[...], kk, kb)
+        T = kb
+    r = _extract_order_stat(d_sel, t, T)
+    if which == "all" and dx is None:
+        dx = jnp.abs(xc_ref[...] - xr_ref[...])
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    out = (
+        jnp.where(lane == RC_LANE_R, jnp.broadcast_to(r, (bm, LANES)), 0.0)
+        + jnp.where(lane == RC_LANE_CNT, jnp.broadcast_to(cnt, (bm, LANES)), 0.0)
+        + _count_lanes(dx, dy, vo, r, which, bm)
+    )
+    out_ref[...] = out
+
+
+def _radius_counts_kernel(xc_ref, xr_ref, yc_ref, yr_ref, mc_ref, mr_ref,
+                          out_ref, knn_scr, acc_scr,
+                          *, bm: int, bn: int, nj: int, k: int, kb: int,
+                          kk: int, mode: str, which: str):
+    """General fused radius+count: grid (P/bm, 2*nj), one pallas_call.
+
+    Phase A (j < nj) streams the k-smallest merge over the column tiles
+    exactly as ``_knn_kernel`` does; at the phase boundary the radius is
+    extracted from the VMEM-resident buffer.  Phase B (j >= nj) revisits
+    the same column tiles (the index map wraps at nj) and accumulates
+    the ball/tie counts at that radius — the separate count kernel and
+    the host round trip between the two ops are gone.
+    """
+    j = pl.program_id(1)
+    jj = jax.lax.rem(j, nj)
+    i = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        knn_scr[...] = jnp.full_like(knn_scr, jnp.inf)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+
+    @pl.when(j < nj)
+    def _phase_a():
+        d_sel, aux = _tile_distances(
+            xc_ref[...], xr_ref[...], yc_ref[...], yr_ref[...],
+            mc_ref[...], mr_ref[...], i, jj, bm, bn, mode,
+        )
+        knn_scr[...] = _merge_k_smallest(knn_scr[...], d_sel, kb)
+        if aux is not None:
+            s = jnp.sum(aux.astype(jnp.float32), axis=1, keepdims=True)
+            acc_scr[...] = acc_scr[...] + jnp.where(lane == RC_LANE_CNT, s, 0.0)
+
+    @pl.when(j == nj - 1)
+    def _radius():
+        knn = knn_scr[...]
+        if mode == "joint":
+            r = knn[:, k - 1:k]
+        else:
+            cnt = acc_scr[...][:, RC_LANE_CNT:RC_LANE_CNT + 1]
+            t = _class_target(cnt, mc_ref[...], kk, kb)
+            r = jnp.sum(
+                jnp.where(lane == t, knn, 0.0), axis=1, keepdims=True
+            )
+        acc_scr[...] = acc_scr[...] + jnp.where(lane == RC_LANE_R, r, 0.0)
+
+    @pl.when(j >= nj)
+    def _phase_b():
+        r = acc_scr[...][:, RC_LANE_R:RC_LANE_R + 1]
+        dy = jnp.abs(yc_ref[...] - yr_ref[...])
+        valid = (mc_ref[...] > 0) & (mr_ref[...] > 0)
+        rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+        cols = jj * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        vo = valid & (rows != cols)
+        dx = None
+        if which == "all":
+            dx = jnp.abs(xc_ref[...] - xr_ref[...])
+        acc_scr[...] = acc_scr[...] + _count_lanes(dx, dy, vo, r, which, bm)
+
+    @pl.when(j == 2 * nj - 1)
+    def _finalize():
+        out_ref[...] = acc_scr[...]
+
+
 def _row_col_specs(block):
     col = pl.BlockSpec((block, 1), lambda i, j: (i, 0))
     row = pl.BlockSpec((1, block), lambda i, j: (0, j))
@@ -298,3 +472,84 @@ def ball_counts_padded(
         in_specs=[col, row, col, row, col, row, col],
         **common,
     )(xc, xr, yc, yr, mc, mr, rc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "k_buf", "kk", "mode", "which", "block", "interpret"),
+)
+def radius_counts_padded(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    k: int,
+    k_buf: int | None = None,
+    kk: int | None = None,
+    mode: str = "joint",
+    which: str = "all",
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """Fused radius+count in ONE ``pallas_call``: x, y float32 (P,),
+    mask int32 (P,); P divisible by ``block``.
+
+    Returns out (P, LANES) float32 — lane :data:`RC_LANE_R` the per-row
+    radius (the k-th smallest selected distance in joint mode; the
+    DC-KSG class-clipped buffer lane in class mode, with per-point
+    budget ``kk``), lane :data:`RC_LANE_CNT` the within-class
+    neighborhood size, lanes [:data:`RC_LANE_COUNTS`, +5) the ball/tie
+    counts at that radius (x_lt, y_lt, x_eq, y_eq, j_eq; only y_lt for
+    ``which="y"``).  Bit-identical to ``knn_smallest_padded`` + radius
+    extraction + ``ball_counts_padded``, without the intermediate HBM
+    round trip: one-tile samples share a single distance formation, and
+    larger samples run a second grid pass over the same column tiles.
+    """
+    P = x.shape[0]
+    assert P % block == 0, (P, block)
+    kb = k if k_buf is None else int(k_buf)
+    kkv = k if kk is None else int(kk)
+    assert 1 <= k <= kb <= LANES, (k, kb)
+    nj = P // block
+    xc, xr = x.reshape(P, 1), x.reshape(1, P)
+    yc, yr = y.reshape(P, 1), y.reshape(1, P)
+    mc = mask.astype(jnp.int32).reshape(P, 1)
+    mr = mask.astype(jnp.int32).reshape(1, P)
+    out = pl.BlockSpec((block, LANES), lambda i, j: (i, 0))
+    shape = jax.ShapeDtypeStruct((P, LANES), jnp.float32)
+    common = dict(
+        out_specs=out,
+        out_shape=shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    if nj == 1:
+        col, row = _row_col_specs(block)
+        return pl.pallas_call(
+            functools.partial(
+                _radius_counts_kernel_1, bm=block, bn=block,
+                k=k, kb=kb, kk=kkv, mode=mode, which=which,
+            ),
+            grid=(1, 1),
+            in_specs=[col, row, col, row, col, row],
+            **common,
+        )(xc, xr, yc, yr, mc, mr)
+    # The column index map wraps at nj, so phase B re-streams the same
+    # column tiles phase A merged from.
+    col = pl.BlockSpec((block, 1), lambda i, j: (i, 0))
+    row = pl.BlockSpec((1, block), lambda i, j: (0, j % nj))
+    return pl.pallas_call(
+        functools.partial(
+            _radius_counts_kernel, bm=block, bn=block, nj=nj,
+            k=k, kb=kb, kk=kkv, mode=mode, which=which,
+        ),
+        grid=(P // block, 2 * nj),
+        in_specs=[col, row, col, row, col, row],
+        scratch_shapes=[
+            pltpu.VMEM((block, LANES), jnp.float32),
+            pltpu.VMEM((block, LANES), jnp.float32),
+        ],
+        **common,
+    )(xc, xr, yc, yr, mc, mr)

@@ -45,16 +45,22 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.knn_stats.kernel import (
     LANES,
+    RC_LANE_CNT,
+    RC_LANE_COUNTS,
+    RC_LANE_R,
     ball_counts_padded,
     knn_smallest_padded,
+    radius_counts_padded,
 )
 
 __all__ = [
     "BallCounts",
     "ball_counts",
     "knn_smallest",
+    "knn_radius_counts",
     "knn_with_counts",
     "DEFAULT_BLOCK",
     "K_MAX",
@@ -84,6 +90,55 @@ class BallCounts(NamedTuple):
 
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _measure_factory(use_kernel: bool):
+    """Autotune probe for the knn_stats family: times the fused
+    radius+count entry (the discovery hot path) at the bucket shape."""
+
+    def factory(bucket: int, default: int):
+        import time as _time
+
+        idx = jnp.arange(bucket, dtype=jnp.float32)
+        x = jnp.sin(idx)
+        y = jnp.cos(idx * 1.7)
+        m = jnp.ones(bucket, bool)
+
+        def measure(blk: int) -> float:
+            def run():
+                _, _, c = knn_radius_counts(
+                    x, y, m, k=8, mode="joint",
+                    use_kernel=use_kernel, block=blk,
+                )
+                jax.block_until_ready(c.y_lt)
+
+            run()  # compile outside the timed reps
+            best = float("inf")
+            for _ in range(3):
+                t0 = _time.perf_counter()
+                run()
+                best = min(best, _time.perf_counter() - t0)
+            return best
+
+        return measure
+
+    return factory
+
+
+def _resolved_block(use_kernel: bool, P: int) -> int:
+    """Tile width for one invocation: explicit ``block`` wins upstream;
+    otherwise the autotuner resolves per (path, backend, shape bucket),
+    falling back to the historical defaults (TPU kernel 256, scan
+    :data:`DEFAULT_BLOCK`) whenever tuning is off or the cache misses."""
+    if use_kernel:
+        return autotune.resolve(
+            "knn_stats_pallas", shape=P, default=256,
+            measure=_measure_factory(True),
+        )
+    return autotune.resolve(
+        "knn_stats_scan", shape=P, default=DEFAULT_BLOCK,
+        measure=_measure_factory(False),
+    )
 
 
 def _pad_cols(P: int, block: int) -> int:
@@ -231,9 +286,10 @@ def knn_smallest(
     P = xf.shape[0]
     if not use_kernel:
         return _knn_smallest_scan(
-            xf, yf, m, k=kb, mode=mode, block=block or DEFAULT_BLOCK
+            xf, yf, m, k=kb, mode=mode,
+            block=block or _resolved_block(False, P),
         )
-    blk = block or 256
+    blk = block or _resolved_block(True, P)
     Pk = _pad_cols(P, blk)
     knn, cnt = knn_smallest_padded(
         _pad_rows(xf, Pk, 0.0),
@@ -277,9 +333,10 @@ def ball_counts(
     P = xf.shape[0]
     if not use_kernel:
         return _ball_counts_scan(
-            xf, yf, m, rf, which=which, block=block or DEFAULT_BLOCK
+            xf, yf, m, rf, which=which,
+            block=block or _resolved_block(False, P),
         )
-    blk = block or 256
+    blk = block or _resolved_block(True, P)
     Pk = _pad_cols(P, blk)
     cnt = ball_counts_padded(
         _pad_rows(xf, Pk, 0.0),
@@ -390,8 +447,8 @@ def knn_with_counts(
     yf = y.astype(jnp.float32)
     m = mask.astype(bool)
     if not use_kernel:
-        blk = block or DEFAULT_BLOCK
         P = xf.shape[0]
+        blk = block or _resolved_block(False, P)
         if _pad_cols(P, blk) == blk and kb <= blk:
             return _knn_counts_fused_tile(
                 xf, yf, m, k=kb, mode=mode, which=which,
@@ -409,3 +466,90 @@ def knn_with_counts(
     return knn, cnt, ball_counts(
         x, y, mask, r, which=which, use_kernel=True, block=block
     )
+
+
+def knn_radius_counts(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    k: int,
+    k_max: int | None = None,
+    mode: str = "joint",
+    which: str = "all",
+    kk: int | None = None,
+    use_kernel: bool | None = None,
+    block: int | None = None,
+) -> tuple[jax.Array, jax.Array, BallCounts]:
+    """Single-kernel fused radius+count: everything the KSG estimators
+    consume, without materializing the sorted kNN buffer.
+
+    Returns ``(r, cnt, counts)`` — the per-row radius, the class-mode
+    neighborhood size, and the ball/tie counts at ``r``.  The radius
+    rule is fixed per mode (the full kNN buffer is never returned, so a
+    caller needing an arbitrary radius callable should use
+    :func:`knn_with_counts`): joint mode takes the k-th smallest joint
+    Chebyshev distance (the KSG/MixedKSG ε_i = ρ_i); class mode takes
+    the DC-KSG clipped within-class extraction with per-point budget
+    ``kk`` (default ``k``) from a ``k_max``-wide buffer.
+
+    On the kernel path this is ONE ``pallas_call``: single-tile samples
+    (padded P <= block — every production sketch capacity) share one
+    distance formation between the radius extraction and the count
+    sweep, and larger samples run a second grid pass over the same
+    VMEM-resident column tiles — no separate count kernel, no host
+    round trip between the two ops.  Off-TPU it lowers onto the same
+    fused tile sweep / scans as :func:`knn_with_counts`.  Both paths
+    are bit-identical to the two-op composition.
+    """
+    if mode not in ("joint", "class"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if which not in ("all", "y"):
+        raise ValueError(f"unknown which {which!r}")
+    kb = _buffer_width(k, k_max)
+    kkv = k if kk is None else int(kk)
+    if kkv > kb:
+        raise ValueError(
+            f"class-mode per-point budget kk={kkv} exceeds the buffer "
+            f"width k_max={kb}; widen k_max so the kk-th distance exists"
+        )
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    m = mask.astype(bool)
+    P = xf.shape[0]
+    if not use_kernel:
+        if mode == "joint":
+            radius_fn = lambda knn, cnt: knn[:, k - 1]  # noqa: E731
+        else:
+            m_i32 = m.astype(jnp.int32)
+
+            def radius_fn(knn, cnt):
+                n_x = cnt + m_i32  # includes self
+                idx = jnp.clip(jnp.minimum(kkv, n_x - 1) - 1, 0, kb - 1)
+                return jnp.take_along_axis(knn, idx[:, None], axis=1)[:, 0]
+
+        knn, cnt, counts = knn_with_counts(
+            x, y, mask, k=k, k_max=kb, mode=mode, which=which,
+            radius=radius_fn, use_kernel=False, block=block,
+        )
+        return radius_fn(knn, cnt).astype(jnp.float32), cnt, counts
+    blk = block or _resolved_block(True, P)
+    Pk = _pad_cols(P, blk)
+    out = radius_counts_padded(
+        _pad_rows(xf, Pk, 0.0),
+        _pad_rows(yf, Pk, 0.0),
+        _pad_rows(m, Pk, False).astype(jnp.int32),
+        k=k,
+        k_buf=kb,
+        kk=kkv,
+        mode=mode,
+        which=which,
+        block=blk,
+        interpret=_use_interpret(),
+    )
+    r = out[:P, RC_LANE_R]
+    cnt = out[:P, RC_LANE_CNT].astype(jnp.int32)
+    c = out[:P, RC_LANE_COUNTS:RC_LANE_COUNTS + 5].astype(jnp.int32)
+    return r, cnt, BallCounts(c[:, 0], c[:, 1], c[:, 2], c[:, 3], c[:, 4])

@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.pairwise_cheb.kernel import pairwise_cheb_padded
 from repro.kernels.pairwise_cheb.ref import pairwise_cheb_ref
 
@@ -15,23 +16,71 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "block"))
+def _measure_factory(bucket: int, default: int):
+    import time as _time
+
+    idx = jnp.arange(bucket, dtype=jnp.float32)
+    x = jnp.sin(idx)
+    y = jnp.cos(idx * 1.7)
+    m = jnp.ones(bucket, bool)
+
+    def measure(blk: int) -> float:
+        def run():
+            jax.block_until_ready(
+                pairwise_cheb(x, y, m, use_kernel=True, block=blk)[2]
+            )
+
+        run()  # compile outside the timed reps
+        best = float("inf")
+        for _ in range(3):
+            t0 = _time.perf_counter()
+            run()
+            best = min(best, _time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
 def pairwise_cheb(
     x: jax.Array,
     y: jax.Array,
     mask: jax.Array,
     *,
     use_kernel: bool | None = None,
-    block: int = 256,
+    block: int | None = None,
 ):
     """Fused (DX, DY, DJ) pairwise L∞ distances with masking + diagonal
     fencing, shapes (n, n); n arbitrary (padded internally).
 
     ``use_kernel=None`` resolves to the Pallas kernel on TPU and the jnp
     oracle elsewhere (interpret mode is for validation, not production).
+    ``block=None`` asks the autotuner (``kernels.autotune``) for the
+    tile width — the historical 256 whenever tuning is off or the cache
+    has no winner for this (backend, shape bucket).
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    if block is None:
+        block = (
+            autotune.resolve(
+                "pairwise_cheb", shape=x.shape[0], default=256,
+                measure=_measure_factory,
+            )
+            if use_kernel
+            else 256  # the jnp oracle never tiles
+        )
+    return _pairwise_cheb_impl(x, y, mask, use_kernel=use_kernel, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block"))
+def _pairwise_cheb_impl(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    *,
+    use_kernel: bool,
+    block: int,
+):
     n = x.shape[0]
     if not use_kernel:
         return pairwise_cheb_ref(

@@ -29,14 +29,18 @@ only when the library actually exists on this machine.
 
 from __future__ import annotations
 
+import glob as _glob
 import os
 
 __all__ = [
     "ENV_DEFAULTS",
+    "LIBTPU_DEFAULT_FLAGS",
     "TCMALLOC_PATHS",
+    "TPU_ENV_DEFAULTS",
     "XLA_DEFAULT_FLAGS",
     "apply_env",
     "merge_xla_flags",
+    "tpu_present",
 ]
 
 # Gap-filling defaults (never overriding), per the tuning idioms of
@@ -61,6 +65,31 @@ ENV_DEFAULTS: dict[str, str] = {
 XLA_DEFAULT_FLAGS: tuple[str, ...] = (
     "--xla_cpu_multi_thread_eigen=true",
 )
+
+# TPU-only gap-filling defaults, applied when TPU device nodes are
+# visible (and never on CPU/GPU hosts — the no-TPU path is a strict
+# no-op).  Flag choices follow the public JAX TPU training stacks:
+#   * LIBTPU_INIT_ARGS — async-collective fusion + compute/collective
+#     overlap; merged at flag-name granularity exactly like XLA_FLAGS,
+#     so an operator's explicit ``--xla_tpu_...=false`` is never
+#     contradicted.
+#   * TPU_MEGACORE — pair the two TensorCores of a v4/v5p chip into one
+#     megacore for dense workloads; an operator running per-core
+#     sharding sets their own value, and wins.
+LIBTPU_DEFAULT_FLAGS: tuple[str, ...] = (
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_enable_async_collective_fusion_multiple_steps=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_tpu_megacore_fusion_allow_ags=false",
+)
+
+TPU_ENV_DEFAULTS: dict[str, str] = {
+    "TPU_MEGACORE": "megacore_dense",
+}
+
+# Device nodes the TPU driver exposes (v4/v5e/v5p PCI accelerators).
+_TPU_DEVICE_GLOB = "/dev/accel*"
 
 # Known tcmalloc install paths, preferred order (Debian/Ubuntu names).
 TCMALLOC_PATHS: tuple[str, ...] = (
@@ -90,11 +119,22 @@ def merge_xla_flags(existing: str | None,
     return " ".join(merged)
 
 
+def tpu_present() -> bool:
+    """True when this host exposes TPU accelerator device nodes.
+
+    Deliberately a filesystem probe, not a jax query — :func:`apply_env`
+    must run before the first ``import jax``, and importing jax to ask
+    would initialize the backend with the *untuned* environment.
+    """
+    return bool(_glob.glob(_TPU_DEVICE_GLOB))
+
+
 def apply_env(
     env: dict | None = None,
     *,
     xla_flags: tuple[str, ...] = XLA_DEFAULT_FLAGS,
     tcmalloc: bool = True,
+    tpu: bool | None = None,
 ) -> dict[str, str]:
     """Fill environment gaps with the serving defaults; never override.
 
@@ -103,6 +143,11 @@ def apply_env(
     environment was already fully operator-configured.  Safe to call
     more than once (the second call sees its own defaults as "user
     set" and changes nothing).
+
+    ``tpu=None`` auto-detects via :func:`tpu_present`; the TPU-specific
+    defaults (``LIBTPU_INIT_ARGS``, megacore) are applied only when a
+    TPU is actually visible, so the same entry points run unchanged on
+    CPU hosts.
     """
     env = os.environ if env is None else env
     applied: dict[str, str] = {}
@@ -114,6 +159,19 @@ def apply_env(
     if merged != (env.get("XLA_FLAGS") or ""):
         env["XLA_FLAGS"] = merged
         applied["XLA_FLAGS"] = merged
+    if tpu is None:
+        tpu = tpu_present()
+    if tpu:
+        for key, val in TPU_ENV_DEFAULTS.items():
+            if key not in env:
+                env[key] = val
+                applied[key] = val
+        tpu_merged = merge_xla_flags(
+            env.get("LIBTPU_INIT_ARGS"), LIBTPU_DEFAULT_FLAGS
+        )
+        if tpu_merged != (env.get("LIBTPU_INIT_ARGS") or ""):
+            env["LIBTPU_INIT_ARGS"] = tpu_merged
+            applied["LIBTPU_INIT_ARGS"] = tpu_merged
     if tcmalloc and "LD_PRELOAD" not in env:
         for path in TCMALLOC_PATHS:
             if os.path.exists(path):

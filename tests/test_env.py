@@ -9,9 +9,12 @@ import os
 
 import pytest
 
+import repro.launch.env as env_mod
 from repro.launch.env import (
     ENV_DEFAULTS,
+    LIBTPU_DEFAULT_FLAGS,
     TCMALLOC_PATHS,
+    TPU_ENV_DEFAULTS,
     XLA_DEFAULT_FLAGS,
     apply_env,
     merge_xla_flags,
@@ -107,3 +110,60 @@ class TestApplyEnv:
         before = dict(os.environ)
         apply_env({}, tcmalloc=False)
         assert dict(os.environ) == before
+
+
+class TestTpuDefaults:
+    """The TPU-specific gap fill: strict no-op off-TPU, operator-always-
+    wins (down to LIBTPU flag-name granularity) on TPU."""
+
+    def test_no_tpu_is_a_strict_noop(self, monkeypatch):
+        # Detection says "no TPU": no TPU variable may appear, whatever
+        # the rest of apply_env fills.
+        monkeypatch.setattr(env_mod, "tpu_present", lambda: False)
+        env = {}
+        applied = apply_env(env, tcmalloc=False)
+        assert "LIBTPU_INIT_ARGS" not in env
+        for key in TPU_ENV_DEFAULTS:
+            assert key not in env
+        assert set(applied) <= set(ENV_DEFAULTS) | {"XLA_FLAGS"}
+
+    def test_detection_uses_device_nodes_not_jax(self, monkeypatch):
+        seen = []
+
+        def fake_glob(pattern):
+            seen.append(pattern)
+            return []
+
+        monkeypatch.setattr(env_mod._glob, "glob", fake_glob)
+        assert env_mod.tpu_present() is False
+        assert seen == [env_mod._TPU_DEVICE_GLOB]
+
+    def test_tpu_gaps_filled_when_present(self):
+        env = {}
+        applied = apply_env(env, tcmalloc=False, tpu=True)
+        assert env["LIBTPU_INIT_ARGS"] == " ".join(LIBTPU_DEFAULT_FLAGS)
+        for key, val in TPU_ENV_DEFAULTS.items():
+            assert env[key] == val
+            assert applied[key] == val
+
+    def test_operator_libtpu_flag_wins_by_name(self):
+        # The operator explicitly re-enabled megacore AG fusion: the
+        # conflicting default must be dropped, the rest still appended.
+        user = "--xla_tpu_megacore_fusion_allow_ags=true"
+        env = {"LIBTPU_INIT_ARGS": user, "TPU_MEGACORE": "per_core"}
+        apply_env(env, tcmalloc=False, tpu=True)
+        parts = env["LIBTPU_INIT_ARGS"].split()
+        assert parts[0] == user
+        assert "--xla_tpu_megacore_fusion_allow_ags=false" not in parts
+        assert set(parts[1:]) == {
+            f for f in LIBTPU_DEFAULT_FLAGS
+            if not f.startswith("--xla_tpu_megacore_fusion_allow_ags")
+        }
+        assert env["TPU_MEGACORE"] == "per_core"
+
+    def test_tpu_fill_is_idempotent(self):
+        env = {}
+        apply_env(env, tcmalloc=False, tpu=True)
+        snapshot = dict(env)
+        assert apply_env(env, tcmalloc=False, tpu=True) == {}
+        assert env == snapshot

@@ -10,7 +10,9 @@ import jax.numpy as jnp
 
 from repro.core import estimators
 from repro.kernels.knn_stats.ops import (
+    K_MAX,
     ball_counts,
+    knn_radius_counts,
     knn_smallest,
     knn_with_counts,
 )
@@ -328,3 +330,127 @@ class TestFusedRadiusCountSweep:
         )(x, y, m))
         assert jaxpr.count("top_k") == 1
         assert "scan" not in jaxpr
+
+
+class TestSingleKernelRadiusCounts:
+    """knn_radius_counts: the single-pallas_call radius+count path is
+    bit-identical to the two-op kernel composition AND to the naive
+    materialized oracle, across edge shapes (P < block, P not a multiple
+    of block, k == K_MAX) — the contract that let the estimators drop
+    the separate count kernel."""
+
+    @staticmethod
+    def _oracle(x, y, m, *, k, mode="joint", kb=None, kkv=None):
+        """Radius, class count and ball counts from the ref.py oracles."""
+        kb = kb or k
+        kkv = kkv or k
+        knn_r, cnt_r = knn_smallest_ref(x, y, m, k=kb, mode=mode)
+        knn_np = np.asarray(knn_r)
+        if mode == "joint":
+            r = knn_np[:, k - 1]
+        else:
+            n_x = np.asarray(cnt_r) + np.asarray(m).astype(np.int32)
+            idx = np.clip(np.minimum(kkv, n_x - 1) - 1, 0, kb - 1)
+            r = np.take_along_axis(knn_np, idx[:, None], axis=1)[:, 0]
+        counts = ball_counts_ref(x, y, m, jnp.asarray(r))
+        return r, np.asarray(cnt_r), counts
+
+    @pytest.mark.parametrize("P,block", [
+        (200, 256),   # P < block: one padded tile, the fast path
+        (300, 128),   # P not a multiple of block: multi-tile second pass
+        (64, 64),     # exact fit
+        (513, 256),   # odd P, multi-tile
+    ])
+    @pytest.mark.parametrize("mode", ["joint", "class"])
+    def test_edge_shapes_vs_oracle(self, P, block, mode):
+        x, y, m = _sample(P)
+        which = "all" if mode == "joint" else "y"
+        if mode == "class":
+            x = jnp.asarray(RNG.integers(0, 5, size=P).astype(np.float32))
+        r, cnt, counts = knn_radius_counts(
+            x, y, m, k=3, mode=mode, which=which, use_kernel=True,
+            block=block,
+        )
+        r_w, cnt_w, counts_w = self._oracle(x, y, m, k=3, mode=mode)
+        np.testing.assert_array_equal(np.asarray(r), r_w)
+        np.testing.assert_array_equal(np.asarray(cnt), cnt_w)
+        if which == "y":
+            np.testing.assert_array_equal(
+                np.asarray(counts.y_lt), np.asarray(counts_w[1])
+            )
+            for f in (counts.x_lt, counts.x_eq, counts.y_eq, counts.j_eq):
+                assert not np.any(np.asarray(f))
+        else:
+            for g, w in zip(counts, counts_w):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_k_equals_lane_width(self):
+        """k == K_MAX saturates the (bm, LANES) buffer: the widest radius
+        any backend can serve still matches the materialized oracle."""
+        P = 160
+        x, y, m = _sample(P)
+        r, _, counts = knn_radius_counts(
+            x, y, m, k=K_MAX, mode="joint", use_kernel=True, block=256
+        )
+        r_w, _, counts_w = self._oracle(x, y, m, k=K_MAX)
+        np.testing.assert_array_equal(np.asarray(r), r_w)
+        for g, w in zip(counts, counts_w):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("P,block", [(256, 256), (300, 128)])
+    def test_matches_two_op_kernel_path(self, P, block):
+        """Bit-identity against the kernel-path two-op composition — the
+        acceptance contract of the single-kernel port."""
+        x, y, m = _sample(P)
+        knn, cnt0, want = knn_with_counts(
+            x, y, m, k=4, use_kernel=True, block=block
+        )
+        r, cnt1, got = knn_radius_counts(
+            x, y, m, k=4, use_kernel=True, block=block
+        )
+        np.testing.assert_array_equal(np.asarray(knn)[:, 3], np.asarray(r))
+        np.testing.assert_array_equal(np.asarray(cnt0), np.asarray(cnt1))
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_class_budget_wider_than_k(self):
+        """The widened-buffer DC-KSG case (kk > k) rides the kernel."""
+        P = 128
+        x = jnp.asarray(RNG.integers(0, 3, size=P).astype(np.float32))
+        y, m = _sample(P)[1:]
+        r, cnt, counts = knn_radius_counts(
+            x, y, m, k=3, k_max=16, kk=9, mode="class", which="y",
+            use_kernel=True, block=128,
+        )
+        r_w, cnt_w, counts_w = self._oracle(
+            x, y, m, k=3, mode="class", kb=16, kkv=9
+        )
+        np.testing.assert_array_equal(np.asarray(r), r_w)
+        np.testing.assert_array_equal(np.asarray(cnt), cnt_w)
+        np.testing.assert_array_equal(
+            np.asarray(counts.y_lt), np.asarray(counts_w[1])
+        )
+
+    def test_one_pallas_call(self):
+        """The fused path lowers exactly one pallas_call where the two-op
+        composition lowers two — the kernel-count claim, on the jaxpr."""
+        P = 256
+        x, y, m = _sample(P)
+        fused = str(jax.make_jaxpr(
+            lambda a, b, c: knn_radius_counts(
+                a, b, c, k=4, use_kernel=True, block=256
+            )
+        )(x, y, m))
+        two_op = str(jax.make_jaxpr(
+            lambda a, b, c: knn_with_counts(
+                a, b, c, k=4, use_kernel=True, block=256
+            )
+        )(x, y, m))
+        assert fused.count("pallas_call") == 1
+        assert two_op.count("pallas_call") == 2
+
+    def test_kk_beyond_buffer_rejected(self):
+        x, y, m = _sample(32)
+        with pytest.raises(ValueError, match="kk=9"):
+            knn_radius_counts(x, y, m, k=3, k_max=4, kk=9, mode="class",
+                              use_kernel=False)
